@@ -1,0 +1,50 @@
+"""Discussion §5: hot-neuron caching is complementary to chunk selection.
+
+The paper: cached neurons get zero importance; "once hot weights are cached,
+the remaining uncached accesses become more scattered (even after
+reordering), making our chunk-based selection more critical". We cache the
+top-f% hottest neurons (by calibration frequency) and measure the
+top-k-vs-chunk I/O ratio for the REMAINING loads as f grows.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ChunkConfig,
+    ChunkSelector,
+    activation_frequency,
+    retention,
+    topk_mask_np,
+)
+
+from .common import ImportanceModel, Rows
+
+N, COLS = 18944, 3584
+SP = 0.4
+
+
+def run(rows: Rows) -> None:
+    rng = np.random.default_rng(19)
+    imp = ImportanceModel(rng, N, sigma=1.0, jitter=0.6)
+    freq = activation_frequency(imp.calibration(20))
+    sel = ChunkSelector.build(N, COLS * 2, device="nano",
+                              cfg=ChunkConfig.for_shape(N, COLS, "nano"))
+    v = imp.sample()
+
+    for cache_frac in (0.0, 0.25, 0.5):
+        n_cached = int(cache_frac * N)
+        cached = np.zeros(N, bool)
+        cached[np.argsort(-freq)[:n_cached]] = True
+        v_eff = np.where(cached, 0.0, v).astype(np.float32)
+        budget = max(int((1 - SP) * N) - n_cached, 64)  # remaining I/O budget
+        m_t = topk_mask_np(v_eff, budget)
+        lat_t = float(sel.table.mask_latency(jnp.asarray(m_t)))
+        m_c, _, lat_c = sel.select(jnp.asarray(v_eff), jnp.int32(budget))
+        ratio = lat_t / max(float(lat_c), 1e-12)
+        rows.add(
+            f"disc5/cache_{int(cache_frac*100)}pct",
+            float(lat_c) * 1e6,
+            f"topk_vs_chunk={ratio:.2f}x",
+        )

@@ -1,0 +1,29 @@
+"""Fig. 13 / App. H: chunk-selection runtime overhead per weight-matrix
+shape (paper budget: < 2 ms on Jetson GPU radix sort; we measure the
+jit-compiled JAX selector on this host CPU — reported, not gated)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ChunkConfig, ChunkSelector
+
+from .common import ImportanceModel, Rows, time_call
+
+# representative shapes from the paper's Table 2
+SHAPES = [(3584, 3584), (18944, 3584), (896, 4864), (4096, 14336), (1536, 8960)]
+
+
+def run(rows: Rows) -> None:
+    rng = np.random.default_rng(9)
+    for (n, cols) in SHAPES:
+        sel = ChunkSelector.build(n, cols * 2, device="nano",
+                                  cfg=ChunkConfig.for_shape(n, cols, "nano"))
+        v = jnp.asarray(ImportanceModel(rng, n).sample())
+        budget = jnp.int32(int(0.6 * n))
+        wall = time_call(lambda: sel.select(v, budget), repeats=5)
+        rows.add(
+            f"fig13/select_{n}x{cols}",
+            wall * 1e6,
+            f"candidates={sel.num_candidates};host_cpu_ms={wall*1e3:.2f}",
+        )

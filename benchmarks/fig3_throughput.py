@@ -1,0 +1,28 @@
+"""Fig. 3 / Fig. 4a: read throughput vs block size per device profile."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import JETSON_AGX, JETSON_NANO
+
+from .common import Rows
+
+KB = 1024.0
+MB = KB * KB
+
+
+def run(rows: Rows) -> None:
+    for prof in (JETSON_NANO, JETSON_AGX):
+        for size_kb in (4, 16, 64, 128, 236, 348, 1024):
+            thr = float(prof.throughput_bytes(size_kb * KB)) / MB
+            lat = float(prof.latency_bytes(size_kb * KB))
+            rows.add(
+                f"fig3/{prof.name}/block_{size_kb}KB",
+                lat * 1e6,
+                f"throughput_MBps={thr:.0f}",
+            )
+        rows.add(
+            f"fig3/{prof.name}/saturation",
+            float(prof.latency_bytes(prof.saturation_bytes())) * 1e6,
+            f"sat99_KB={prof.saturation_bytes()/KB:.0f}",
+        )

@@ -1,0 +1,53 @@
+"""Fig. 4b: latency vs sparsity for scattered vs contiguous access.
+
+Reproduces the paper's counterintuitive crossover: scattered sparse reads of
+a 128 MB matrix (Qwen2-7B MLP scale) can take LONGER than loading everything
+contiguously, while block-aligned sparse reads scale with volume.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FlashOffloadSimulator
+
+from .common import Rows
+
+N_ROWS = 18944  # Qwen2-7B down-proj rows
+ROW_BYTES = 3584 * 2  # ≈ 7 KB → full matrix ≈ 130 MB
+
+
+def run(rows: Rows) -> None:
+    rng = np.random.default_rng(0)
+    for device in ("nano", "agx"):
+        sim = FlashOffloadSimulator(device, seed=1)
+        full = sim.estimate(np.ones(N_ROWS, bool), ROW_BYTES)
+        rows.add(f"fig4/{device}/full_load", full * 1e6, "sparsity=0.0")
+        crossover = None
+        for sp in (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7):
+            keep = int((1 - sp) * N_ROWS)
+            scattered = np.zeros(N_ROWS, bool)
+            scattered[rng.permutation(N_ROWS)[:keep]] = True
+            contig = np.zeros(N_ROWS, bool)
+            block = 64  # ≈448 KB chunks: saturating
+            idx = rng.permutation(N_ROWS // block)[: keep // block]
+            for i in idx:
+                contig[i * block : (i + 1) * block] = True
+            lat_s = sim.estimate(scattered, ROW_BYTES)
+            lat_c = sim.estimate(contig, ROW_BYTES)
+            rows.add(
+                f"fig4/{device}/scattered_sp{sp}",
+                lat_s * 1e6,
+                f"vs_full={lat_s/full:.2f}x",
+            )
+            rows.add(
+                f"fig4/{device}/contiguous_sp{sp}",
+                lat_c * 1e6,
+                f"vs_full={lat_c/full:.2f}x",
+            )
+            if crossover is None and lat_s > full:
+                crossover = sp
+        rows.add(
+            f"fig4/{device}/scattered_slower_than_full",
+            0.0,
+            f"first_sparsity={crossover}",
+        )

@@ -1,0 +1,38 @@
+"""Fig. 5: chunk-based latency model validation — estimated vs "measured"
+(simulator) latency across realistic selection patterns. The paper finds a
+near-linear relation (proportional bias); we report the fitted slope and R².
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ChunkConfig, ChunkSelector, FlashOffloadSimulator
+
+from .common import Rows, vlm_importance
+
+
+def run(rows: Rows) -> None:
+    rng = np.random.default_rng(2)
+    n, row_bytes = 8192, 4096
+    for device in ("nano", "agx"):
+        sel = ChunkSelector.build(n, row_bytes, device=device,
+                                  cfg=ChunkConfig(8, 236, 8, 8))
+        sim = FlashOffloadSimulator(device, seed=3)
+        est, meas = [], []
+        for i in range(24):
+            v = vlm_importance(rng, n)
+            import jax.numpy as jnp
+
+            budget = int((0.3 + 0.5 * rng.random()) * n)
+            mask, _, lat = sel.select(jnp.asarray(v), jnp.int32(budget))
+            est.append(float(lat))
+            meas.append(sim.measure(np.asarray(mask), row_bytes))
+        est, meas = np.asarray(est), np.asarray(meas)
+        slope = float((est * meas).sum() / (est * est).sum())
+        resid = meas - slope * est
+        r2 = 1.0 - float((resid**2).sum() / ((meas - meas.mean()) ** 2).sum())
+        rows.add(
+            f"fig5/{device}/latency_model",
+            float(est.mean() * 1e6),
+            f"prop_bias={slope:.2f};R2={r2:.3f}",
+        )

@@ -1,0 +1,89 @@
+"""Fig. 6/7: the headline accuracy–latency trade-off, top-k baseline vs
+NEURON CHUNKING, on both devices across the paper's five model geometries.
+
+Accuracy proxy: importance retention (the paper's own App. N proxy).
+Speedup at matched retention is computed by linear interpolation along the
+chunk curve, mirroring the paper's "at comparable accuracy" protocol
+(mean 2.19× Nano / 2.89× AGX, max 4.65× / 5.76×).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ChunkConfig, ChunkSelector, profile_table, retention, topk_mask_np
+
+from .common import ImportanceModel, Rows
+
+# (d_model, d_ff) of the paper's five evaluation models
+MODEL_SHAPES = {
+    "llava-7b": (3584, 18944),
+    "llava-0.5b": (896, 4864),
+    "vila-8b": (4096, 14336),
+    "nvila-2b": (1536, 8960),
+    "longva-7b": (3584, 18944),
+}
+SPARSITIES = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]
+
+
+def tradeoff_curves(
+    n: int, cols: int, device: str, seed: int = 0
+) -> Dict[str, List[Tuple[float, float]]]:
+    """Returns {method: [(retention, latency_s)]} for one weight matrix."""
+    rng = np.random.default_rng(seed)
+    imp = ImportanceModel(rng, n)
+    v = imp.sample()
+    vj = jnp.asarray(v)
+    row_bytes = cols * 2
+    max_kb = 236.0 if device == "agx" else 348.0
+    sel = ChunkSelector.build(
+        n, row_bytes, device=device,
+        cfg=ChunkConfig.for_shape(n, cols, device),
+    )
+    out = {"topk": [], "chunk": []}
+    for sp in SPARSITIES:
+        budget = int((1 - sp) * n)
+        m_t = topk_mask_np(v, budget)
+        lat_t = float(sel.table.mask_latency(jnp.asarray(m_t)))
+        out["topk"].append((float(retention(vj, jnp.asarray(m_t))), lat_t))
+        m_c, _, lat_c = sel.select(vj, jnp.int32(budget))
+        out["chunk"].append((float(retention(vj, m_c)), float(lat_c)))
+    return out
+
+
+def matched_speedups(curves) -> List[float]:
+    """For each top-k point, latency ratio vs the chunk curve interpolated
+    at the same retention."""
+    ch = sorted(curves["chunk"])
+    ret_c = np.asarray([r for r, _ in ch])
+    lat_c = np.asarray([l for _, l in ch])
+    speedups = []
+    for r_t, l_t in curves["topk"]:
+        l_match = float(np.interp(r_t, ret_c, lat_c))
+        speedups.append(l_t / max(l_match, 1e-12))
+    return speedups
+
+
+def run(rows: Rows) -> None:
+    paper_avg = {"nano": 2.19, "agx": 2.89}
+    paper_max = {"nano": 4.65, "agx": 5.76}
+    for device in ("nano", "agx"):
+        all_sp = []
+        for name, (d, f) in MODEL_SHAPES.items():
+            sp_q = matched_speedups(tradeoff_curves(d, d, device, seed=1))
+            sp_down = matched_speedups(tradeoff_curves(f, d, device, seed=2))
+            sp = sp_q + sp_down
+            all_sp.extend(sp)
+            rows.add(
+                f"fig6/{device}/{name}",
+                0.0,
+                f"mean_speedup={np.mean(sp):.2f}x;max={np.max(sp):.2f}x",
+            )
+        rows.add(
+            f"fig6/{device}/ALL",
+            0.0,
+            f"mean={np.mean(all_sp):.2f}x(paper {paper_avg[device]}x);"
+            f"max={np.max(all_sp):.2f}x(paper {paper_max[device]}x)",
+        )

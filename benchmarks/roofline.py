@@ -1,0 +1,170 @@
+"""Roofline analysis (deliverable g): derive compute/memory/collective terms
+per (arch × shape × mesh) from the dry-run's compiled artifacts.
+
+  compute_term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory_term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective_term = collective_bytes_per_device / ICI_bw_per_chip
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (×4 usable links ≈ 2e11 B/s aggregate; we use per-link
+conservative 5e10 — documented convention in EXPERIMENTS.md).
+
+MODEL_FLOPS = 6·N·D for training (fwd+bwd), 2·N_active·D for inference,
+where D = processed tokens; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.configs.shapes import get_shape
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link (conservative single-link convention)
+
+
+def count_params(cfg) -> Dict[str, float]:
+    """Total and active parameter counts (analytic)."""
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    if cfg.has_moe:
+        mlp_total = cfg.n_experts * 3 * d * f
+        mlp_active = cfg.moe_top_k * 3 * d * f
+        if cfg.moe_shared_expert:
+            mlp_total += 3 * d * f
+            mlp_active += 3 * d * f
+    elif cfg.arch_type == "ssm":
+        # xlstm block params approx: up(2di) + qkv(3di^2) + down
+        di = 2 * d
+        mlp_total = mlp_active = d * 2 * di + 3 * di * di + di * d
+        attn = 0
+    else:
+        n_mats = 3 if cfg.mlp == "swiglu" else 2
+        mlp_total = mlp_active = n_mats * d * f
+    if cfg.arch_type == "hybrid":
+        m_cfg_inner = cfg.ssm_expand * d
+        conv_dim = m_cfg_inner + 2 * cfg.ssm_state
+        mamba = d * (2 * m_cfg_inner + 2 * cfg.ssm_state + m_cfg_inner // cfg.ssm_head_dim) \
+            + m_cfg_inner * d
+        shared = attn + 3 * d * f
+        total = L * mamba + shared + v * d * 2
+        return {"total": total, "active": total}
+    layers = L * (attn + mlp_total)
+    layers_active = L * (attn + mlp_active)
+    if cfg.is_encdec:
+        layers += cfg.encoder_layers * (attn + mlp_total) + L * attn  # cross attn
+        layers_active = layers
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    return {"total": layers + emb, "active": layers_active + emb}
+
+
+def model_flops(cfg, shape) -> float:
+    """Paper-convention useful FLOPs for the whole step (all devices)."""
+    p = count_params(cfg)
+    n_active = p["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analytic_memory_bytes(cfg, shape, mesh_axes: Dict[str, int]) -> float:
+    """First-order per-device HBM traffic for the TPU target (bf16 weights,
+    flash-style attention internals VMEM-resident — see EXPERIMENTS.md
+    §Roofline conventions)."""
+    tp = mesh_axes.get("model", 1)
+    dp = mesh_axes.get("data", 1) * mesh_axes.get("pod", 1)
+    p = count_params(cfg)
+    w_dev = p["total"] * 2.0 / tp  # bf16 TP shard streamed through HBM
+    b_dev = max(shape.global_batch // dp, 1)
+    d, L = cfg.d_model, cfg.n_layers
+    if shape.kind == "train":
+        s_sp = max(shape.seq_len // tp, 1)  # sequence-parallel residual
+        opt_dev = p["total"] / (tp * (dp if cfg.fsdp else 1))
+        acts = 6.0 * L * b_dev * s_sp * d * 2.0  # store+read+recompute (remat)
+        return 3.0 * w_dev + 24.0 * opt_dev + acts
+    if shape.kind == "prefill":
+        cache = L * b_dev * shape.seq_len * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * 2.0 / max(tp, 1)
+        acts = 3.0 * L * b_dev * max(shape.seq_len // tp, 1) * d * 2.0
+        return w_dev + cache + acts
+    # decode: weights + cache read once per token
+    from repro.models.model import effective_window
+
+    window = effective_window(cfg, shape.seq_len)
+    phys = min(shape.seq_len, window) if window else shape.seq_len
+    cache = L * b_dev * phys * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * 2.0 / max(tp, 1)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        cache = 1e6 * b_dev  # O(1) recurrent states (order of MBs)
+    return w_dev + cache
+
+
+def analyze(report: Dict, n_chips: int) -> Dict:
+    arch, shape_name = report["arch"], report["shape"]
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_axes = report.get("mesh", {}).get("axes", {"data": 16, "model": 16})
+    flops_dev = report.get("corrected_flops_per_device") or report.get(
+        "flops_per_device") or 0.0
+    coll_dev = report.get("corrected_collective_bytes_per_device")
+    if coll_dev is None:
+        coll_dev = report.get("collectives", {}).get("total_bytes", 0) or 0
+    bytes_dev = analytic_memory_bytes(cfg, shape, mesh_axes)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * n_chips
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        "hlo_bytes_dev": report.get("corrected_bytes_per_device"),
+        "peak_bytes_per_dev": (report.get("memory") or {}).get("peak_bytes"),
+        "fits_16GB": ((report.get("memory") or {}).get("peak_bytes") or 0) < 16e9,
+    }
+
+
+def load_reports(dirpath: str) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            rep = json.load(f)
+        if "error" not in rep:
+            out.append(rep)
+    return out
+
+
+def run(rows) -> None:
+    dirpath = os.environ.get("DRYRUN_DIR", "results/dryrun_pod1")
+    if not os.path.isdir(dirpath):
+        rows.add("roofline/SKIP", 0.0, f"no dry-run dumps in {dirpath}")
+        return
+    for rep in load_reports(dirpath):
+        n_chips = 512 if rep.get("multi_pod") else 256
+        a = analyze(rep, n_chips)
+        step_us = max(a["compute_s"], a["memory_s"], a["collective_s"]) * 1e6
+        rows.add(
+            f"roofline/{a['arch']}/{a['shape']}",
+            step_us,
+            f"dom={a['dominant']};c={a['compute_s']*1e6:.0f}us;"
+            f"m={a['memory_s']*1e6:.0f}us;x={a['collective_s']*1e6:.0f}us;"
+            f"useful={a['useful_ratio']:.2f};fits={a['fits_16GB']}",
+        )

@@ -1,0 +1,63 @@
+"""Accuracy–latency trade-off sweep (the paper's Fig. 6 protocol) on real
+reduced-model activations: runs a reduced VLM, captures true layer inputs,
+and sweeps sparsity × {top-k, threshold(CATS), neuron chunking}, reporting
+importance retention, OUTPUT ERROR vs dense, and simulated I/O latency.
+
+  PYTHONPATH=src python examples/compare_baselines.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import (
+    ChunkConfig,
+    ChunkSelector,
+    calibrate_threshold,
+    retention,
+    threshold_mask,
+    topk_mask_np,
+)
+from repro.models import build_model
+from repro.models.inputs import make_dummy_batch
+
+cfg = get_config("internvl2-76b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+batch = make_dummy_batch(cfg, InputShape("s", 64, 2, "train"))
+
+# capture a real mid-stack activation: embed + first block input
+hidden, _ = model.forward(params, batch, remat=False)
+acts = jnp.abs(hidden.astype(jnp.float32)).reshape(-1, cfg.d_model).mean(0)
+v = np.asarray(acts)
+n = cfg.d_model
+w_down = np.asarray(params["layers"]["w_down"][0], np.float32).T  # (d, f)→use as (n,cols)
+cols = w_down.shape[1]
+sel = ChunkSelector.build(n, cols * 2, device="nano",
+                          cfg=ChunkConfig(2, 348, 2, 2))
+x_ref = np.asarray(hidden.astype(jnp.float32).reshape(-1, n))
+y_dense = x_ref @ w_down
+
+thr_cal = calibrate_threshold(v[None], 0.0)  # recalibrated per sparsity below
+
+print(f"{'sparsity':>8s} {'method':>10s} {'retention':>10s} "
+      f"{'out_rel_err':>12s} {'io_ms':>8s}")
+for sp in (0.2, 0.4, 0.6):
+    budget = int((1 - sp) * n)
+    plans = {}
+    plans["topk"] = jnp.asarray(topk_mask_np(v, budget))
+    t = calibrate_threshold(v[None], sp)
+    plans["cats"] = threshold_mask(jnp.asarray(v), t)
+    m, _, _ = sel.select(jnp.asarray(v), jnp.int32(budget))
+    plans["chunk"] = m
+    for name, mask in plans.items():
+        lat = float(sel.table.mask_latency(mask)) * 1e3
+        ret = float(retention(jnp.asarray(v), mask))
+        y = (x_ref * np.asarray(mask, np.float32)) @ w_down
+        err = float(np.linalg.norm(y - y_dense) / np.linalg.norm(y_dense))
+        print(f"{sp:8.1f} {name:>10s} {ret:10.3f} {err:12.3f} {lat:8.3f}")

@@ -1,0 +1,62 @@
+"""End-to-end driver (paper's workload): streaming-video VLM serving with
+batched requests — prefill → per-frame appending → decoding — comparing
+dense loads, top-k sparsification, and NEURON CHUNKING on the simulated
+Jetson Orin Nano flash device.
+
+  PYTHONPATH=src python examples/serve_video_stream.py [--arch internvl2-76b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.models import build_model
+from repro.models.inputs import make_dummy_batch
+from repro.serving import ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="internvl2-76b")
+ap.add_argument("--frames", type=int, default=4)
+ap.add_argument("--decode-tokens", type=int, default=12)
+ap.add_argument("--sparsity", type=float, default=0.4)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+prompt = make_dummy_batch(cfg, InputShape("s", 32, 2, "train"))
+rng = np.random.default_rng(0)
+frames = [
+    jnp.asarray(rng.normal(0, 1, (2, 8, cfg.d_frontend)), jnp.bfloat16)
+    for _ in range(args.frames)
+]
+
+print(f"{'policy':8s} {'frame io (ms)':>14s} {'decode io (ms/tok)':>20s} "
+      f"{'total io (ms)':>14s}")
+results = {}
+for method in ("dense", "topk", "chunk"):
+    eng = ServeEngine(model, params, max_seq=512, batch_size=2, device="nano",
+                      sparsity=args.sparsity, method=method, seed=1)
+    last = eng.prefill(prompt)
+    for f in frames:
+        eng.append_frame(f)
+    tok0 = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    eng.decode(tok0, args.decode_tokens)
+    fr = [s.io_sim_s for s in eng.stats if s.kind == "frame"]
+    de = [s.io_sim_s for s in eng.stats if s.kind == "decode"]
+    tot = sum(s.io_sim_s for s in eng.stats if s.kind != "prefill")
+    results[method] = tot
+    print(f"{method:8s} {np.mean(fr)*1e3:14.2f} {np.mean(de)*1e3:20.2f} "
+          f"{tot*1e3:14.2f}")
+
+print(f"\nneuron chunking vs top-k I/O speedup at EQUAL sparsity: "
+      f"{results['topk']/results['chunk']:.2f}x")
+print("(reduced-model rows are tiny → fragmentation is extreme; the paper's "
+      "matched-accuracy full-scale protocol gives 2.19x avg on Nano — see "
+      "benchmarks/fig6_tradeoff.py)")

@@ -1,0 +1,8 @@
+"""repro: production-grade JAX reproduction of "VLM in a flash: I/O-Efficient
+Sparsification of Vision-Language Model via Neuron Chunking" (CS.LG 2025).
+
+Layers: core/ (the paper's algorithms), models/ (6 arch families),
+configs/ (10 assigned architectures), sharding/, training/, serving/,
+data/, kernels/ (Pallas), launch/ (mesh + multi-pod dry-run).
+"""
+__version__ = "1.0.0"

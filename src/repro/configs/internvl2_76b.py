@@ -1,0 +1,25 @@
+"""InternVL2-Llama3-76B — InternViT + LLM backbone VLM [arXiv:2404.16821].
+
+Backbone: 80L, d_model=8192, 64 heads (GQA kv=8), d_ff=28672, vocab=128256.
+Vision frontend (InternViT-6B, output dim 3200) is a STUB per the assignment:
+``input_specs`` feeds precomputed patch embeddings to the projector.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    arch_type="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500000.0,  # llama3 backbone
+    d_frontend=3200,  # InternViT-6B embedding dim
+    frontend_tokens=256,  # visual tokens per frame after pixel-shuffle
+    sliding_window=8192,
+    fsdp=True,  # 76B params: weights+opt sharded over data axis too
+    citation="arXiv:2404.16821",
+)

@@ -1,0 +1,28 @@
+"""Whisper-small — encoder-decoder ASR backbone [arXiv:2212.04356].
+
+12L enc + 12L dec, d_model=768, 12 heads (MHA), d_ff=3072, vocab=51865.
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (1500 positions × 768).
+LayerNorm + GeLU MLP + learned/sinusoidal positions, no RoPE.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    arch_type="audio",
+    n_layers=12,  # decoder depth
+    encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    rope_theta=None,  # absolute positions
+    norm="layernorm",
+    mlp="gelu",
+    d_frontend=768,  # conv-frontend output dim (stubbed)
+    frontend_tokens=1500,  # audio context positions
+    sliding_window=8192,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,29 @@
+"""Zamba2-7B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+81 Mamba2 layers, d_model=3584, ssm_state=64; a single SHARED
+attention+MLP block (32 heads MHA, d_ff=14336) is applied after every 6th
+Mamba2 layer (weights reused at every application — Zamba's parameter-sharing
+trick).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    arch_type="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,  # 32 * 112 = 3584
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=10000.0,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    sliding_window=8192,  # shared-attn block windows at 500k decode
+    fsdp=True,
+    citation="arXiv:2411.15242",
+)

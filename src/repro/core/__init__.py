@@ -1,0 +1,42 @@
+"""Neuron Chunking core: the paper's contribution as a composable library."""
+from .api import NeuronChunkingPlanner, SparsePlan
+from .baselines import (
+    bundled_latency,
+    calibrate_threshold,
+    threshold_mask,
+    topk_mask,
+    topk_mask_np,
+    unbundled_latency,
+)
+from .chunking import ChunkConfig, ChunkSelector, chunk_table_from_mask, select_chunks_np
+from .contiguity import (
+    Chunk,
+    average_chunk_size_jax,
+    chunk_stats_np,
+    chunks_to_mask_np,
+    contiguity_distribution_np,
+    contiguity_histogram_jax,
+    mask_to_chunks_np,
+    mask_to_runs_jax,
+)
+from .importance import coefficient_of_variation, importance, importance_np, retention
+from .latency_model import (
+    JETSON_AGX,
+    JETSON_NANO,
+    TPU_V5E_HBM,
+    DeviceProfile,
+    LatencyTable,
+    get_profile,
+    profile_table,
+    table_from_measurements,
+)
+from .offload import ComputeModel, FlashOffloadSimulator, IOEvent
+from .reorder import (
+    Reordering,
+    activation_frequency,
+    coactivation_reordering,
+    hot_cold_reordering,
+)
+from .sparsity_alloc import LayerProfile, allocate_sparsity, budgets_from_sparsity
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,105 @@
+"""High-level NeuronChunking facade: one object per offloaded weight matrix.
+
+Typical runtime flow (what serving/sparse_exec.py drives, ~200×/frame in the
+paper):
+
+    planner = NeuronChunkingPlanner.build(n_rows, n_cols, device="nano")
+    plan    = planner.plan(acts, sparsity=0.4)      # jit-compiled inside
+    y       = chunk_gather_matmul(W, acts, plan)    # Pallas kernel or jnp
+
+``plan`` carries the mask, the padded chunk table for the kernel, and the
+latency estimates for both our selection and the top-k baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .baselines import topk_mask
+from .chunking import ChunkConfig, ChunkSelector
+from .importance import importance, retention
+from .latency_model import DeviceProfile, LatencyTable, get_profile
+from .reorder import Reordering
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SparsePlan:
+    """Output of one selection decision for one weight matrix."""
+
+    mask: jnp.ndarray  # (N,) bool over (possibly reordered) rows
+    n_selected: jnp.ndarray  # scalar int32
+    est_latency_s: jnp.ndarray  # additive-model latency of this plan
+    importance_retention: jnp.ndarray  # Σ selected V / Σ V
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NeuronChunkingPlanner:
+    """Per-matrix planner: importance → utility-guided chunk plan."""
+
+    n_rows: int
+    n_cols: int
+    row_bytes: int
+    selector: ChunkSelector
+    reordering: Optional[Reordering] = None
+
+    @staticmethod
+    def build(
+        n_rows: int,
+        n_cols: int,
+        device: str | DeviceProfile = "nano",
+        dtype_bytes: int = 2,
+        cfg: Optional[ChunkConfig] = None,
+        reordering: Optional[Reordering] = None,
+        table: Optional[LatencyTable] = None,
+    ) -> "NeuronChunkingPlanner":
+        row_bytes = n_cols * dtype_bytes
+        dev_name = device if isinstance(device, str) else device.name
+        cfg = cfg or ChunkConfig.for_shape(n_rows, n_cols, dev_name)
+        selector = ChunkSelector.build(
+            n_rows, row_bytes, device=device, cfg=cfg, table=table
+        )
+        return NeuronChunkingPlanner(
+            n_rows=n_rows,
+            n_cols=n_cols,
+            row_bytes=row_bytes,
+            selector=selector,
+            reordering=reordering,
+        )
+
+    def _importance(self, acts: jnp.ndarray) -> jnp.ndarray:
+        v = importance(acts)
+        if self.reordering is not None:
+            v = self.reordering.apply_to_acts(v)
+        return v
+
+    def plan(self, acts: jnp.ndarray, sparsity: float) -> SparsePlan:
+        """Utility-guided chunk selection at a given sparsity level."""
+        v = self._importance(acts)
+        budget = jnp.int32(round((1.0 - float(sparsity)) * self.n_rows))
+        mask, n_sel, lat = self.selector.select(v, budget)
+        return SparsePlan(
+            mask=mask,
+            n_selected=n_sel,
+            est_latency_s=lat,
+            importance_retention=retention(v, mask),
+        )
+
+    def plan_topk(self, acts: jnp.ndarray, sparsity: float) -> SparsePlan:
+        """Baseline plan: pure magnitude top-k (layout-oblivious)."""
+        v = self._importance(acts)
+        budget = jnp.int32(round((1.0 - float(sparsity)) * self.n_rows))
+        mask = topk_mask(v, budget)
+        lat = self.selector.table.mask_latency(mask)
+        return SparsePlan(
+            mask=mask,
+            n_selected=jnp.sum(mask.astype(jnp.int32)),
+            est_latency_s=lat,
+            importance_retention=retention(v, mask),
+        )
+
+    def dense_latency(self) -> float:
+        """Full-matrix contiguous load latency (the no-sparsity floor)."""
+        return float(self.selector.table.lookup(jnp.asarray(self.n_rows)))

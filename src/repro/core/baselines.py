@@ -1,0 +1,98 @@
+"""Comparison baselines (paper §4.1, App. L).
+
+  * top-k magnitude sparsification — the paper's main baseline (TEAL [24] /
+    LLM-in-a-Flash [2] style): keep the R most important neurons regardless
+    of storage layout.
+  * threshold sparsification — CATS [16] style: keep |a| above a calibrated
+    per-layer threshold.
+  * row-column bundling — LLM-in-a-Flash [2] style (App. L, Table 3): rows of
+    matrices sharing input activations (q/k/v, gate/up) are interleaved in
+    storage so one selected neuron's weights are one contiguous read across
+    the bundle. Modeled here as a row-size multiplier on the latency table.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .latency_model import DeviceProfile, LatencyTable, profile_table
+
+
+def topk_mask(v: jnp.ndarray, budget) -> jnp.ndarray:
+    """Keep the ``budget`` highest-importance neurons (bool (N,)). jit-safe
+    for traced budget via rank comparison."""
+    n = v.shape[0]
+    order = jnp.argsort(-v.astype(jnp.float32), stable=True)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return rank < budget
+
+
+def topk_mask_np(v: np.ndarray, budget: int) -> np.ndarray:
+    v = np.asarray(v, np.float32)
+    n = v.shape[0]
+    order = np.argsort(-v, kind="stable")
+    mask = np.zeros(n, bool)
+    mask[order[:budget]] = True
+    return mask
+
+
+def threshold_mask(v: jnp.ndarray, threshold: float) -> jnp.ndarray:
+    """CATS-style: keep neurons whose importance exceeds a calibrated
+    threshold (sparsity becomes input-dependent)."""
+    return v.astype(jnp.float32) > threshold
+
+
+def calibrate_threshold(cal_importance: np.ndarray, sparsity: float) -> float:
+    """Pick the threshold achieving ``sparsity`` on the calibration set."""
+    flat = np.asarray(cal_importance, np.float32).reshape(-1)
+    return float(np.quantile(flat, sparsity))
+
+
+# ---------------------------------------------------------------------------
+# LLM-in-a-Flash row-column bundling (App. L)
+# ---------------------------------------------------------------------------
+
+
+def bundled_latency(
+    mask: np.ndarray,
+    row_bytes: int,
+    bundle: int,
+    device: str | DeviceProfile,
+) -> float:
+    """I/O latency of loading ``bundle`` matrices' rows for the selected
+    neurons when those rows are interleaved on storage.
+
+    A chunk of r selected neurons becomes one contiguous read of
+    r * bundle * row_bytes, replacing ``bundle`` separate reads. This is the
+    favourable modeling of bundling; Table 3 shows it still loses to chunk
+    selection because the *selection* remains layout-oblivious.
+    """
+    from .contiguity import mask_to_chunks_np
+
+    chunks = mask_to_chunks_np(np.asarray(mask))
+    if not chunks:
+        return 0.0
+    max_rows = max(c.size for c in chunks)
+    table = profile_table(device, row_bytes * bundle, max_rows=max_rows)
+    return float(sum(float(table.lookup(jnp.asarray(c.size))) for c in chunks))
+
+
+def unbundled_latency(
+    mask: np.ndarray,
+    row_bytes: int,
+    n_matrices: int,
+    device: str | DeviceProfile,
+) -> float:
+    """Same selection without bundling: each matrix issues its own reads
+    (n_matrices independent copies of the pattern)."""
+    from .contiguity import mask_to_chunks_np
+
+    chunks = mask_to_chunks_np(np.asarray(mask))
+    if not chunks:
+        return 0.0
+    max_rows = max(c.size for c in chunks)
+    table = profile_table(device, row_bytes, max_rows=max_rows)
+    one = sum(float(table.lookup(jnp.asarray(c.size))) for c in chunks)
+    return float(one * n_matrices)

@@ -1,0 +1,229 @@
+"""Utility-guided chunk selection — the paper's Algorithm 1 (§3.2, App. E).
+
+Given activation importances V ∈ R^N, a row budget R, a chunk-size schedule
+and a device latency table T[·], select a binary mask maximizing
+Σ V_i M_i / Latency(M):
+
+  1. candidate generation: sliding windows of each size r (rows) at stride
+     min(r, jump_cap) over the neuron axis;
+  2. evaluation: utility = (prefix-sum benefit of window) / T[r];
+  3. greedy: sort by utility descending, take non-overlapping candidates
+     while they fit the remaining budget, stop when the budget is met.
+
+Two implementations with identical semantics:
+  * ``select_chunks_np``   — literal numpy transcription of Algorithm 1
+    (the test oracle and offline tool).
+  * ``ChunkSelector``      — jit-compiled JAX version with static candidate
+    set and a ``lax.while_loop`` greedy pass (early exit on budget), used
+    at runtime ≈ once per weight matrix per step. The paper's GPU radix
+    sort becomes ``jnp.argsort`` inside the same jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .latency_model import KB, DeviceProfile, LatencyTable, profile_table
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkConfig:
+    """Hyperparameters of Algorithm 1, in KB like the paper (App. H).
+
+    stride between window starts is min(chunk_size, jump_cap); step_kb is the
+    increment between successive chunk sizes; max size defaults to the device
+    saturation point (§3.2.2: "the hardware-specific point where throughput
+    saturates").
+    """
+
+    min_chunk_kb: float = 8.0
+    max_chunk_kb: float = 236.0
+    step_kb: float = 8.0
+    jump_cap_kb: float = 8.0
+
+    def row_sizes(self, row_bytes: int) -> List[int]:
+        """Chunk sizes converted to row units (Algorithm 1 line 1)."""
+        row_kb = row_bytes / KB
+        r_min = max(1, int(self.min_chunk_kb / row_kb))
+        r_max = max(1, int(self.max_chunk_kb / row_kb))
+        dr = max(1, int(self.step_kb / row_kb))
+        sizes = list(range(r_min, r_max + 1, dr))
+        return sizes if sizes else [r_min]
+
+    def jump_cap_rows(self, row_bytes: int) -> int:
+        return max(1, int(self.jump_cap_kb / (row_bytes / KB)))
+
+    @staticmethod
+    def for_shape(rows: int, cols: int, device: str = "nano") -> "ChunkConfig":
+        """Heuristic from the paper's Table 2: bigger matrices → coarser
+        start size / jump cap to stay under the 2 ms selection budget."""
+        max_kb = 236.0 if device in ("agx", "jetson_agx_990pro") else 348.0
+        if rows >= 16384:
+            start = 32.0
+        elif rows >= 8192:
+            start = 16.0
+        elif rows >= 3584:
+            start = 20.0 if cols >= 3584 else 8.0
+        else:
+            start = 8.0
+        return ChunkConfig(
+            min_chunk_kb=start, max_chunk_kb=max_kb, step_kb=start, jump_cap_kb=start
+        )
+
+
+def _candidate_schedule(
+    n: int, row_bytes: int, cfg: ChunkConfig
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Static candidate (start, size) arrays for a length-n neuron axis."""
+    starts: List[int] = []
+    sizes: List[int] = []
+    cap = cfg.jump_cap_rows(row_bytes)
+    for r in cfg.row_sizes(row_bytes):
+        if r > n:
+            continue
+        stride = min(r, cap)
+        for i in range(0, n - r + 1, stride):
+            starts.append(i)
+            sizes.append(r)
+    if not starts:  # degenerate: single chunk covering what fits
+        starts, sizes = [0], [min(n, max(1, cfg.row_sizes(row_bytes)[0]))]
+    return np.asarray(starts, np.int32), np.asarray(sizes, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (Algorithm 1, literal)
+# ---------------------------------------------------------------------------
+
+
+def select_chunks_np(
+    v: np.ndarray,
+    budget: int,
+    row_bytes: int,
+    table: LatencyTable,
+    cfg: ChunkConfig,
+) -> np.ndarray:
+    """Literal Algorithm 1. Returns a bool mask of shape (N,)."""
+    v = np.asarray(v, np.float32)
+    n = v.shape[0]
+    cumsum = np.concatenate([[0.0], np.cumsum(v, dtype=np.float32)])
+    starts, sizes = _candidate_schedule(n, row_bytes, cfg)
+    benefit = cumsum[starts + sizes] - cumsum[starts]
+    cost = np.asarray(table.lookup(jnp.asarray(sizes)), np.float32)
+    score = benefit / np.maximum(cost, 1e-30)
+    order = np.argsort(-score, kind="stable")
+
+    mask = np.zeros(n, bool)
+    selected = 0
+    for k in order:
+        i, r = int(starts[k]), int(sizes[k])
+        if r > budget - selected or mask[i : i + r].any():
+            continue
+        mask[i : i + r] = True
+        selected += r
+        if selected >= budget:
+            break
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# JAX runtime selector
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash for jit static self
+class ChunkSelector:
+    """Jit-compiled utility-guided chunk selector for a fixed (N, device,
+    chunk-config) triple. Call ``select(v, budget)``; budget may be traced."""
+
+    n: int
+    row_bytes: int
+    table: LatencyTable
+    cfg: ChunkConfig
+    starts: jnp.ndarray  # (K,) int32, static candidate schedule
+    sizes: jnp.ndarray  # (K,) int32
+    max_size: int
+
+    @staticmethod
+    def build(
+        n: int,
+        row_bytes: int,
+        device: str | DeviceProfile = "nano",
+        cfg: ChunkConfig | None = None,
+        table: LatencyTable | None = None,
+    ) -> "ChunkSelector":
+        cfg = cfg or ChunkConfig.for_shape(n, 1, device if isinstance(device, str) else device.name)
+        starts, sizes = _candidate_schedule(n, row_bytes, cfg)
+        if table is None:
+            table = profile_table(device, row_bytes, max_rows=int(sizes.max()))
+        return ChunkSelector(
+            n=n,
+            row_bytes=row_bytes,
+            table=table,
+            cfg=cfg,
+            starts=jnp.asarray(starts),
+            sizes=jnp.asarray(sizes),
+            max_size=int(sizes.max()),
+        )
+
+    @property
+    def num_candidates(self) -> int:
+        return int(self.starts.shape[0])
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def select(self, v: jnp.ndarray, budget: jnp.ndarray):
+        """Returns (mask bool (N,), n_selected, est_latency_seconds)."""
+        v = v.astype(jnp.float32)
+        cumsum = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(v)])
+        benefit = cumsum[self.starts + self.sizes] - cumsum[self.starts]
+        cost = jnp.maximum(self.table.lookup(self.sizes), 1e-30)
+        score = benefit / cost
+        order = jnp.argsort(-score, stable=True)
+        starts_s = self.starts[order]
+        sizes_s = self.sizes[order]
+
+        k = starts_s.shape[0]
+        pad = self.max_size
+        window_iota = jnp.arange(pad, dtype=jnp.int32)
+
+        def cond(state):
+            i, _, selected = state
+            return (i < k) & (selected < budget)
+
+        def body(state):
+            i, mask, selected = state
+            start, size = starts_s[i], sizes_s[i]
+            window = jax.lax.dynamic_slice(mask, (start,), (pad,))
+            in_chunk = window_iota < size
+            overlap = jnp.sum(window * in_chunk)
+            fits = (overlap == 0) & (size <= budget - selected)
+            new_window = jnp.where(in_chunk & fits, 1, window)
+            mask = jax.lax.dynamic_update_slice(mask, new_window, (start,))
+            return i + 1, mask, selected + jnp.where(fits, size, 0)
+
+        mask0 = jnp.zeros((self.n + pad,), jnp.int32)  # pad tail for slices
+        _, mask, selected = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), mask0, jnp.int32(0))
+        )
+        mask = mask[: self.n].astype(bool)
+        est_latency = self.table.mask_latency(mask)
+        return mask, selected, est_latency
+
+    def select_for_sparsity(self, v: jnp.ndarray, sparsity: float):
+        """Convenience: budget = (1 - sparsity) * N rows."""
+        budget = jnp.int32(round((1.0 - float(sparsity)) * self.n))
+        return self.select(v, budget)
+
+
+def chunk_table_from_mask(
+    mask: np.ndarray, max_chunks: int
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Selection mask → (starts, sizes, n) padded chunk table for the Pallas
+    chunk_gather_matmul kernel (kernels/chunk_gather_matmul.py)."""
+    from .contiguity import runs_to_padded_table_np
+
+    return runs_to_padded_table_np(np.asarray(mask), max_chunks)

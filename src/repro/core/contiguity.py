@@ -1,0 +1,146 @@
+"""Contiguity distribution: the paper's core abstraction (§3).
+
+A selection mask M ∈ {0,1}^N is reduced to the multiset of maximal
+contiguous run lengths ("chunks"). Example from the paper: selecting
+{1,2,4,6,7} yields chunks {1,2}, {4}, {6,7} → contiguity distribution
+{1: 1, 2: 2}.
+
+Two implementations are provided:
+  * numpy (`*_np`) — reference semantics, used by tests and offline tools.
+  * jnp (`*_jax`)  — jit/vmap-compatible, static output shapes, used inside
+    the runtime selection path and the offload simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """A maximal contiguous run of selected neuron indices [start, start+size)."""
+
+    start: int
+    size: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.size
+
+
+def mask_to_chunks_np(mask: np.ndarray) -> List[Chunk]:
+    """Decompose a binary mask into maximal contiguous chunks (numpy ref)."""
+    mask = np.asarray(mask).astype(bool)
+    if mask.ndim != 1:
+        raise ValueError(f"mask must be 1-D, got shape {mask.shape}")
+    if not mask.any():
+        return []
+    padded = np.concatenate([[False], mask, [False]])
+    diff = np.diff(padded.astype(np.int8))
+    starts = np.nonzero(diff == 1)[0]
+    stops = np.nonzero(diff == -1)[0]
+    return [Chunk(int(a), int(b - a)) for a, b in zip(starts, stops)]
+
+
+def chunks_to_mask_np(chunks: List[Chunk], n: int) -> np.ndarray:
+    """Inverse of mask_to_chunks_np (chunks may be unsorted but non-overlapping)."""
+    mask = np.zeros(n, dtype=bool)
+    for c in chunks:
+        if c.start < 0 or c.stop > n:
+            raise ValueError(f"chunk {c} out of bounds for n={n}")
+        if mask[c.start : c.stop].any():
+            raise ValueError(f"chunk {c} overlaps a previous chunk")
+        mask[c.start : c.stop] = True
+    return mask
+
+
+def contiguity_distribution_np(mask: np.ndarray) -> Dict[int, int]:
+    """Frequency distribution {chunk_size: count} of a mask's chunks."""
+    dist: Dict[int, int] = {}
+    for c in mask_to_chunks_np(mask):
+        dist[c.size] = dist.get(c.size, 0) + 1
+    return dist
+
+
+def chunk_stats_np(mask: np.ndarray) -> Tuple[float, int]:
+    """(average chunk size, modal chunk size) — the two numbers the paper
+    annotates in Fig. 10 / App. J. Returns (0.0, 0) for an empty mask."""
+    sizes = np.array([c.size for c in mask_to_chunks_np(mask)], dtype=np.int64)
+    if sizes.size == 0:
+        return 0.0, 0
+    values, counts = np.unique(sizes, return_counts=True)
+    return float(sizes.mean()), int(values[np.argmax(counts)])
+
+
+# ---------------------------------------------------------------------------
+# jit-compatible variants (static shapes: outputs padded to N)
+# ---------------------------------------------------------------------------
+
+
+def mask_to_runs_jax(mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunk decomposition with static shapes.
+
+    Returns (starts, sizes, n_chunks): ``starts``/``sizes`` are (N,) arrays
+    whose first ``n_chunks`` entries are valid (rest zero). A mask of length N
+    has at most ceil(N/1) chunks, so padding to N is always sufficient.
+    """
+    mask = mask.astype(jnp.int32)
+    n = mask.shape[0]
+    prev = jnp.concatenate([jnp.zeros((1,), jnp.int32), mask[:-1]])
+    nxt = jnp.concatenate([mask[1:], jnp.zeros((1,), jnp.int32)])
+    is_start = (mask == 1) & (prev == 0)
+    is_stop = (mask == 1) & (nxt == 0)  # inclusive last index of a run
+
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # Compact the start/stop indices to the front, preserving order.
+    start_rank = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    stop_rank = jnp.cumsum(is_stop.astype(jnp.int32)) - 1
+    starts = jnp.zeros((n,), jnp.int32).at[jnp.where(is_start, start_rank, n - 1)].max(
+        jnp.where(is_start, idx, 0)
+    )
+    stops = jnp.zeros((n,), jnp.int32).at[jnp.where(is_stop, stop_rank, n - 1)].max(
+        jnp.where(is_stop, idx, 0)
+    )
+    n_chunks = jnp.sum(is_start.astype(jnp.int32))
+    valid = jnp.arange(n) < n_chunks
+    sizes = jnp.where(valid, stops - starts + 1, 0)
+    starts = jnp.where(valid, starts, 0)
+    return starts, sizes, n_chunks
+
+
+def contiguity_histogram_jax(mask: jnp.ndarray, max_size: int) -> jnp.ndarray:
+    """Histogram h[s] = number of chunks of size s (sizes > max_size clamp).
+
+    h has shape (max_size + 1,), h[0] unused. jit-safe.
+    """
+    _, sizes, _ = mask_to_runs_jax(mask)
+    sizes = jnp.clip(sizes, 0, max_size)
+    return jnp.zeros((max_size + 1,), jnp.int32).at[sizes].add(
+        (sizes > 0).astype(jnp.int32)
+    )
+
+
+def average_chunk_size_jax(mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean chunk size of a mask (0.0 if empty). jit-safe."""
+    _, sizes, n_chunks = mask_to_runs_jax(mask)
+    total = jnp.sum(sizes)
+    return jnp.where(n_chunks > 0, total / jnp.maximum(n_chunks, 1), 0.0)
+
+
+def runs_to_padded_table_np(
+    mask: np.ndarray, max_chunks: int
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """(starts, sizes, n) padded/truncated to ``max_chunks`` — the chunk table
+    format consumed by the Pallas chunk_gather_matmul kernel."""
+    chunks = mask_to_chunks_np(mask)
+    n = min(len(chunks), max_chunks)
+    starts = np.zeros(max_chunks, np.int32)
+    sizes = np.zeros(max_chunks, np.int32)
+    for i, c in enumerate(chunks[:max_chunks]):
+        starts[i] = c.start
+        sizes[i] = c.size
+    return starts, sizes, n

@@ -1,0 +1,46 @@
+"""Neuron importance scores (paper App. B.2).
+
+Importance of input neuron i of a weight matrix W ∈ R^{m×n} is |a_i| for a
+single token; for multi-token inputs (VLM frame appending, prefill, batched
+decoding) it is the mean of |a_i| across tokens, yielding one importance
+vector shared by all tokens — the property that makes VLM importance
+distributions smooth (§2.2) and latency uniform across a batch (App. N fn 5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def importance(acts: jnp.ndarray) -> jnp.ndarray:
+    """|a| averaged over all leading (token/batch) axes.
+
+    acts: (..., N) activations entering a weight matrix's input dim.
+    Returns (N,) float32 importance.
+    """
+    a = jnp.abs(acts.astype(jnp.float32))
+    if a.ndim == 1:
+        return a
+    return a.reshape(-1, a.shape[-1]).mean(axis=0)
+
+
+def importance_np(acts: np.ndarray) -> np.ndarray:
+    a = np.abs(np.asarray(acts, np.float32))
+    if a.ndim == 1:
+        return a
+    return a.reshape(-1, a.shape[-1]).mean(axis=0)
+
+
+def coefficient_of_variation(v: jnp.ndarray) -> jnp.ndarray:
+    """CV = std/mean of an importance vector — the smoothness metric of
+    Table 1 (App. C). ReLU LLMs ≈ 8–12, VLMs ≈ 1–4.5."""
+    v = v.astype(jnp.float32)
+    mean = jnp.mean(v)
+    return jnp.std(v) / jnp.maximum(mean, 1e-12)
+
+
+def retention(v: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Importance retention Σ_selected V / Σ V — the accuracy proxy the paper
+    uses for its plain-LLM study (App. N)."""
+    v = v.astype(jnp.float32)
+    return jnp.sum(v * mask) / jnp.maximum(jnp.sum(v), 1e-12)

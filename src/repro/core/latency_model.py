@@ -1,0 +1,219 @@
+"""Chunk-based latency model (paper §3.1) + device profiles.
+
+The paper profiles, per chunk size s (bytes), the steady-state read latency
+T[s] on the target storage device, then estimates the latency of an arbitrary
+access pattern as the sum of its chunks' latencies:
+
+    L_total(mask) = Σ_i T[size_i * row_bytes]
+
+Device profiles here are synthetic reconstructions of the paper's published
+measurements, calibrated to its OUTCOME metrics:
+
+  * additive two-term latency: T(s) = base + 1/iops + s/peak_bw — a fixed
+    per-request cost (Jetson NVMe interrupts are single-core-bound [8,42],
+    so both boards sustain similar request rates) plus a bandwidth term;
+  * ``iops`` is calibrated so the scattered-vs-contiguous penalty at
+    realistic top-k run lengths (~2.5 rows ≈ 17.5 KB for LLaVA-7B rows)
+    reproduces Fig. 4b's crossover and the Fig. 6/7 speedup magnitudes
+    (mean 2.19×/2.89×, max 4.65×/5.76×). The same per-request cost against
+    AGX's higher bandwidth yields the paper's "wider throughput gap" on AGX;
+  * peak bandwidths are the spec-sheet numbers from §4.1.
+
+The same abstraction doubles as the TPU HBM→VMEM DMA cost model used by the
+Pallas chunk kernel's utility scoring: a DMA has fixed descriptor/issue
+overhead and a bandwidth term, i.e. exactly the same two-regime shape.
+
+Everything is exposed both as python floats (offline tools) and as jnp lookup
+tables (runtime selection inside jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+KB = 1024.0
+MB = 1024.0 * 1024.0
+GB = 1024.0 * 1024.0 * 1024.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Two-regime storage/DMA latency profile.
+
+    Attributes:
+      name: identifier.
+      peak_bw: saturated read bandwidth, bytes/sec.
+      iops: sustained small-request rate (requests/sec) under a
+        throughput-saturating queue — contributes 1/iops per request.
+      base_latency: extra additive per-request constant (0 for Jetson
+        profiles — folded into 1/iops; nonzero where a separate descriptor
+        cost is meaningful, e.g. the TPU DMA profile).
+      interleave_lift: multiplicative lift applied by the *simulator* (not
+        the model) to mimic the pattern-dependent controller effects the
+        paper observes as a proportional bias in Fig. 5.
+    """
+
+    name: str
+    peak_bw: float
+    iops: float
+    base_latency: float = 0.0
+    interleave_lift: float = 1.0
+
+    @property
+    def knee_bytes(self) -> float:
+        return self.peak_bw / self.iops
+
+    def saturation_bytes(self, frac: float = 0.99) -> float:
+        """Block size at which throughput reaches ``frac`` of peak:
+        thr(s)/bw = 1/(1 + knee/s) = frac ⇒ s = knee·frac/(1-frac)."""
+        return self.knee_bytes * frac / (1.0 - frac)
+
+    # -- scalar model -------------------------------------------------------
+    def latency_bytes(self, nbytes) -> np.ndarray:
+        """T(s): steady-state latency (sec) of one request of s bytes
+        (additive per-request + transfer)."""
+        s = np.asarray(nbytes, dtype=np.float64)
+        return self.base_latency + 1.0 / self.iops + s / self.peak_bw
+
+    def throughput_bytes(self, nbytes) -> np.ndarray:
+        s = np.asarray(nbytes, dtype=np.float64)
+        return s / self.latency_bytes(s)
+
+    # -- row-granular lookup table (the paper's T[s]) ------------------------
+    def build_table(self, row_bytes: int, max_rows: int) -> "LatencyTable":
+        sizes = np.arange(max_rows + 1, dtype=np.float64) * row_bytes
+        lat = self.latency_bytes(sizes)
+        lat[0] = 0.0
+        return LatencyTable(
+            device=self.name,
+            row_bytes=row_bytes,
+            table=jnp.asarray(lat, dtype=jnp.float32),
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: jnp field, identity hash
+class LatencyTable:
+    """T[r]: latency (sec) of loading one chunk of r contiguous rows.
+
+    ``table`` has shape (max_rows+1,), table[0] == 0. Lives inside jit as a
+    constant; lookups are plain gathers.
+    """
+
+    device: str
+    row_bytes: int
+    table: jnp.ndarray
+
+    @property
+    def max_rows(self) -> int:
+        return int(self.table.shape[0]) - 1
+
+    def lookup(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """T[rows] with clamping + linear extrapolation above max_rows.
+
+        Extrapolation uses the bandwidth slope (table is affine past the
+        knee, so this is exact for the two-regime model).
+        """
+        r = jnp.asarray(rows)
+        rmax = self.max_rows
+        slope = self.table[rmax] - self.table[rmax - 1] if rmax >= 2 else self.table[rmax]
+        clamped = jnp.clip(r, 0, rmax)
+        base = self.table[clamped]
+        extra = jnp.maximum(r - rmax, 0).astype(self.table.dtype) * slope
+        return base + extra
+
+    def mask_latency(self, mask: jnp.ndarray) -> jnp.ndarray:
+        """Estimated latency of an access pattern: Σ chunks T[size] (jit-safe)."""
+        from .contiguity import mask_to_runs_jax
+
+        _, sizes, _ = mask_to_runs_jax(mask)
+        return jnp.sum(self.lookup(sizes) * (sizes > 0))
+
+    def mask_latency_np(self, mask: np.ndarray) -> float:
+        from .contiguity import mask_to_chunks_np
+
+        return float(
+            sum(float(self.lookup(jnp.asarray(c.size))) for c in mask_to_chunks_np(mask))
+        )
+
+
+# ---------------------------------------------------------------------------
+# Published device profiles (reconstructed from the paper)
+# ---------------------------------------------------------------------------
+
+# Jetson Orin AGX + Samsung 990 Pro: peak seq read 7450 MB/s (§4.1).
+# iops calibrated to the paper's Fig. 4b / Fig. 6-7 magnitudes (see class
+# docstring): both boards' NVMe interrupts are single-CPU-core bound [8,42],
+# so the sustained request rate is similar; AGX's higher bandwidth then
+# yields the paper's wider scattered-vs-contiguous gap.
+# Calibration result (benchmarks/fig6 sweep): nano 150k / agx 220k sustained
+# requests/s reproduce the paper's matched-accuracy speedups —
+# mean 2.26×/2.85× vs published 2.19×/2.89× (max 5.2×/7.1× vs 4.65×/5.76×).
+JETSON_AGX = DeviceProfile(
+    name="jetson_agx_990pro",
+    peak_bw=7450 * MB,
+    iops=220_000.0,
+    interleave_lift=1.18,  # Fig. 5: proportional lift, larger device → smaller
+)
+
+# Jetson Orin Nano + SK Hynix Gold P31: peak 3500 MB/s.
+JETSON_NANO = DeviceProfile(
+    name="jetson_nano_p31",
+    peak_bw=3500 * MB,
+    iops=150_000.0,
+    interleave_lift=1.31,  # lower-end device → stronger tail effects (Fig. 5)
+)
+
+# TPU v5e HBM→VMEM DMA: 819 GB/s per chip; per-DMA issue overhead ~1 µs
+# (descriptor + wait orchestration). Same two-regime shape, different scale —
+# this is the profile the chunk_gather_matmul kernel's planner uses.
+TPU_V5E_HBM = DeviceProfile(
+    name="tpu_v5e_hbm",
+    peak_bw=819 * GB,
+    iops=1.0e6,  # ≈1 µs per independent small DMA
+    base_latency=0.0,
+    interleave_lift=1.05,
+)
+
+PROFILES: Dict[str, DeviceProfile] = {
+    p.name: p for p in (JETSON_AGX, JETSON_NANO, TPU_V5E_HBM)
+}
+# Paper-style aliases.
+PROFILES["agx"] = JETSON_AGX
+PROFILES["nano"] = JETSON_NANO
+PROFILES["tpu"] = TPU_V5E_HBM
+
+
+def get_profile(name: str) -> DeviceProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown device profile {name!r}; have {sorted(PROFILES)}")
+
+
+def profile_table(
+    device: str | DeviceProfile, row_bytes: int, max_rows: int
+) -> LatencyTable:
+    prof = device if isinstance(device, DeviceProfile) else get_profile(device)
+    return prof.build_table(row_bytes=row_bytes, max_rows=max_rows)
+
+
+def table_from_measurements(
+    device: str, row_bytes: int, sizes_rows: np.ndarray, latencies_s: np.ndarray
+) -> LatencyTable:
+    """Build a LatencyTable from arbitrary measured (size, latency) points by
+    monotone linear interpolation — the path a real deployment would use
+    (App. D microbenchmarks) instead of the synthetic profiles above."""
+    sizes_rows = np.asarray(sizes_rows, dtype=np.int64)
+    latencies_s = np.asarray(latencies_s, dtype=np.float64)
+    if sizes_rows.ndim != 1 or sizes_rows.shape != latencies_s.shape:
+        raise ValueError("sizes/latencies must be matching 1-D arrays")
+    order = np.argsort(sizes_rows)
+    sizes_rows, latencies_s = sizes_rows[order], latencies_s[order]
+    max_rows = int(sizes_rows[-1])
+    grid = np.arange(max_rows + 1, dtype=np.float64)
+    lat = np.interp(grid, sizes_rows.astype(np.float64), latencies_s)
+    lat[0] = 0.0
+    return LatencyTable(device=device, row_bytes=row_bytes, table=jnp.asarray(lat, jnp.float32))

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, lm_batches
+from .tokenizer import ByteTokenizer

@@ -1,0 +1,93 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``sparse_matmul`` / ``sparse_swiglu`` dispatch to the TPU kernel on TPU and
+to interpret mode elsewhere (this container is CPU-only: interpret executes
+the kernel body in Python for correctness validation — the BlockSpec tiling
+and scalar-prefetch structure are identical).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chunk_gather_matmul import align_chunk_table, chunk_gather_matmul
+from .chunk_gather_swiglu import chunk_gather_swiglu
+from .ref import chunk_gather_matmul_ref, chunk_gather_swiglu_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sparse_matmul(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    starts: jnp.ndarray,
+    sizes: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+    tile_d: int = 128,
+    max_chunk_rows: int = 512,
+) -> jnp.ndarray:
+    """y (B, D) f32 — rows outside the chunk plan are never read from HBM."""
+    return chunk_gather_matmul(
+        w,
+        x,
+        starts,
+        sizes,
+        block_rows=block_rows,
+        tile_d=tile_d,
+        max_chunk_rows=max_chunk_rows,
+        interpret=not _on_tpu(),
+    )
+
+
+def sparse_swiglu(
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    x: jnp.ndarray,
+    starts: jnp.ndarray,
+    sizes: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+    tile_f: int = 128,
+    max_chunk_rows: int = 512,
+) -> jnp.ndarray:
+    return chunk_gather_swiglu(
+        w_gate,
+        w_up,
+        x,
+        starts,
+        sizes,
+        block_rows=block_rows,
+        tile_f=tile_f,
+        max_chunk_rows=max_chunk_rows,
+        interpret=not _on_tpu(),
+    )
+
+
+def plan_to_kernel_table(
+    mask: np.ndarray,
+    block_rows: int = 8,
+    max_chunks: Optional[int] = None,
+    max_chunk_rows: int = 512,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Selection mask → block-aligned padded chunk table for the kernels."""
+    from ..core.contiguity import mask_to_chunks_np
+
+    chunks = mask_to_chunks_np(np.asarray(mask))
+    starts = np.asarray([c.start for c in chunks], np.int32)
+    sizes = np.asarray([c.size for c in chunks], np.int32)
+    starts, sizes = align_chunk_table(
+        starts, sizes, block_rows, len(mask), max_chunk_rows=max_chunk_rows
+    )
+    k = max_chunks or max(len(starts), 1)
+    out_s = np.zeros(k, np.int32)
+    out_z = np.zeros(k, np.int32)
+    out_s[: len(starts)] = starts[:k]
+    out_z[: len(sizes)] = sizes[:k]
+    return out_s, out_z

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def chunk_table_to_mask(starts, sizes, n: int) -> jnp.ndarray:
+    """(starts, sizes) padded chunk table → bool mask of length n."""
+    idx = jnp.arange(n)
+    starts = jnp.asarray(starts)[:, None]
+    sizes = jnp.asarray(sizes)[:, None]
+    in_chunk = (idx[None, :] >= starts) & (idx[None, :] < starts + sizes)
+    return jnp.any(in_chunk, axis=0)
+
+
+def chunk_gather_matmul_ref(
+    w: jnp.ndarray,  # (N, D)
+    x: jnp.ndarray,  # (B, N)
+    starts: jnp.ndarray,  # (K,)
+    sizes: jnp.ndarray,  # (K,)
+) -> jnp.ndarray:
+    """y = Σ_{i in selected chunks} x[:, i] · w[i, :]  (f32 accumulation).
+
+    Mathematically identical to the masked matmul of paper App. B.2."""
+    mask = chunk_table_to_mask(starts, sizes, w.shape[0])
+    xm = x.astype(jnp.float32) * mask.astype(jnp.float32)[None, :]
+    return xm @ w.astype(jnp.float32)
+
+
+def chunk_gather_swiglu_ref(
+    w_gate: jnp.ndarray,  # (N, F)
+    w_up: jnp.ndarray,  # (N, F)
+    x: jnp.ndarray,  # (B, N)
+    starts: jnp.ndarray,
+    sizes: jnp.ndarray,
+) -> jnp.ndarray:
+    """Fused sparse gate/up + SiLU·mul (they share the chunk plan)."""
+    g = chunk_gather_matmul_ref(w_gate, x, starts, sizes)
+    u = chunk_gather_matmul_ref(w_up, x, starts, sizes)
+    return (g * (1.0 / (1.0 + jnp.exp(-g)))) * u

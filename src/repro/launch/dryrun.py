@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+# ^ MUST precede any jax import/initialization: jax locks the device count on
+# first init, and the production dry-run needs 512 placeholder host devices.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination, builds the real
+pjit program — train_step for train shapes, prefill for prefill shapes,
+serve_step (one token + KV/state cache) for decode shapes — with production
+shardings over abstract inputs (ShapeDtypeStruct, zero allocation), then
+``.lower().compile()`` it and extracts:
+
+  * memory_analysis (per-device bytes: proves the config fits a 16 GB v5e),
+  * cost_analysis (FLOPs / bytes → roofline compute & memory terms),
+  * collective bytes parsed from the post-SPMD optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute → roofline collective term).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --out-dir results/dryrun
+  python -m repro.launch.dryrun --all --multi-pod --out-dir results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.shapes import SHAPES, get_shape
+from ..models import build_model
+from ..models.inputs import input_specs
+from ..sharding import MeshRules, use_rules
+from ..training import AdamWConfig, Trainer, init_opt_state
+from ..training.optimizer import OptState
+from .mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every `dtype[dims]` group in a shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Parse the optimized (post-SPMD) HLO, summing the RESULT sizes of every
+    collective op (convention documented in EXPERIMENTS.md §Roofline)."""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match "= <shape> all-gather(" and fusion-wrapped variants
+            m = re.search(r"=\s*(\(?[\w\[\],\s{}]*\)?)\s*" + kind + r"(-start)?\(", ls)
+            if m and not ls.startswith("ROOT tuple"):
+                if kind == "all-gather" and "all-gather-done" in ls:
+                    continue
+                if "-done(" in ls:
+                    continue
+                per_kind[kind] += _shape_bytes(m.group(1))
+                counts[kind] += 1
+                break
+    total = sum(per_kind.values())
+    return {"per_kind_bytes": per_kind, "counts": counts, "total_bytes": total}
+
+
+def _shardings_for(tree_sds, axes_tree, rules: MeshRules):
+    return jax.tree.map(
+        lambda sds, ax: rules.sharding(ax, sds.shape), tree_sds, axes_tree
+    )
+
+
+def build_step(arch: str, shape_name: str, mesh, rules: MeshRules,
+               optimized: bool = False):
+    """Returns (fn, abstract_args, in_shardings, donate) for the pair.
+
+    optimized=True applies the beyond-paper §Perf changes (KV-cache head
+    replication sized to the mesh's model axis); False is the baseline."""
+    cfg = get_config(arch)
+    if optimized:
+        cfg = cfg.optimized_for(int(mesh.shape["model"]))
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    key = jax.random.key(0)
+
+    params_sds = jax.eval_shape(model.init, key)
+    params_sh = _shardings_for(params_sds, model.param_axes(), rules)
+    batch_sds = input_specs(cfg, shape)
+    batch_axes = {
+        "tokens": ("batch", None),
+        "frontend": ("batch", None, None),
+    }
+    batch_sh = {
+        k: rules.sharding(batch_axes[k], v.shape) for k, v in batch_sds.items()
+    }
+
+    if shape.kind == "train":
+        trainer = Trainer(model, AdamWConfig(), loss_chunk=512)
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        opt_sh = OptState(
+            step=rules.sharding((), ()),
+            m=params_sh,
+            v=jax.tree.map(lambda s: s, params_sh),
+        )
+        fn = trainer.train_step
+        return fn, (params_sds, opt_sds, batch_sds), (params_sh, opt_sh, batch_sh), (0, 1)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+
+        return fn, (params_sds, batch_sds), (params_sh, batch_sh), ()
+
+    # decode: one token against a seq_len cache
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+    cache_sh = _shardings_for(cache_sds, model.cache_axes(), rules)
+    token_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    token_sh = rules.sharding(("batch", None), token_sds.shape)
+
+    def fn(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    return fn, (params_sds, token_sds, cache_sds), (params_sh, token_sh, cache_sh), (2,)
+
+
+def run_dryrun(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    mesh=None,
+    verbose: bool = True,
+    optimized: bool = False,
+) -> Dict[str, Any]:
+    t0 = time.time()
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    rules = MeshRules.for_mesh(mesh, fsdp=cfg.fsdp)
+    if optimized:
+        import dataclasses as _dc
+
+        rules = _dc.replace(rules, seq_shard_attention=True)
+    with use_rules(rules), mesh:
+        fn, args, shardings, donate = build_step(
+            arch, shape_name, mesh, rules, optimized=optimized
+        )
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_stats = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # memory analysis can be backend-dependent
+            mem_stats = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        from .hlo_analysis import analyze_hlo
+
+        corrected = analyze_hlo(hlo)
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": {"axes": dict(zip(mesh.axis_names, mesh.devices.shape))},
+        "multi_pod": multi_pod,
+        # flat XLA numbers (while bodies counted ONCE — diagnostic only)
+        "flops_per_device": cost.get("flops"),
+        "bytes_accessed_per_device": cost.get("bytes accessed"),
+        # trip-count-corrected (launch/hlo_analysis.py) — roofline inputs
+        "corrected_flops_per_device": corrected["flops"],
+        "corrected_bytes_per_device": corrected["bytes"],
+        "corrected_collective_bytes_per_device": corrected["collective_bytes"],
+        "corrected_collective_per_kind": corrected.get("collective_per_kind"),
+        "memory": mem_stats,
+        "collectives": coll,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(json.dumps(report, indent=2, default=str))
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep all arch × shape")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply beyond-paper §Perf sharding changes")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    pairs = (
+        [(a, s) for a in ARCH_IDS for s in sorted(SHAPES)]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = []
+    for arch, shape in pairs:
+        tag = f"{arch}__{shape}__{'pod2' if args.multi_pod else 'pod1'}"
+        if args.optimized:
+            tag += "__opt"
+        try:
+            rep = run_dryrun(arch, shape, args.multi_pod, mesh=mesh,
+                             verbose=not args.all, optimized=args.optimized)
+            status = "OK"
+        except Exception as e:  # noqa: BLE001 — sweep must report all failures
+            rep = {"arch": arch, "shape": shape, "error": repr(e)[:2000]}
+            failures.append(tag)
+            status = f"FAIL: {repr(e)[:200]}"
+        if args.out_dir:
+            os.makedirs(args.out_dir, exist_ok=True)
+            with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+                json.dump(rep, f, indent=2, default=str)
+        print(f"[dryrun] {tag}: {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's flat ``compiled.cost_analysis()`` counts a while-loop body ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes/collectives by the trip
+count (≈ n_layers × inner attention blocks…). The optimized HLO text carries
+``known_trip_count`` on every counted loop, so we parse the module, build the
+computation call graph (while/call/conditional/fusion edges), propagate
+multipliers from ENTRY, and accumulate:
+
+  * flops: 2 · |out| · |contracting dims| for every ``dot`` (fusion bodies
+    included — dots may live inside fusions); convolutions approximated the
+    same way via their window dims.
+  * memory bytes: per *materialized* op (top level of non-fusion
+    computations): output bytes + operand bytes — fusion internals are not
+    double-counted, matching XLA's fusion semantics to first order.
+  * collective bytes: result sizes of all-gather/all-reduce/reduce-scatter/
+    all-to-all/collective-permute (async -start counted, -done skipped),
+    each × its computation's multiplier.
+
+Conventions are documented in EXPERIMENTS.md §Roofline. Parsing is
+necessarily heuristic against HLO text, but every quantity it produces is
+validated against analytic MODEL_FLOPS in benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_shape: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fusion_body: bool = False
+
+
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\s]*?))\s*([\w\-]+)\("
+)
+
+
+def _parse_operands(line: str, op_start: int) -> List[str]:
+    """Operand names from the first parenthesized arg list after the opcode."""
+    depth = 0
+    args = ""
+    for ch in line[op_start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            args += ch
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    """Returns ({computation name: Computation}, entry name)."""
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: "[ENTRY] %name (params...) -> type {"
+        # params may contain '=' inside /*index=N*/ comments — match by
+        # structure, not content.
+        if stripped.endswith("{") and ") -> " in stripped:
+            first = stripped.split(None, 1)[0]
+            is_entry = first == "ENTRY"
+            name_tok = stripped.split(None, 2)[1] if is_entry else first
+            if name_tok.startswith("%"):
+                name = name_tok.lstrip("%").split("(")[0].rstrip()
+                cur = Computation(name=name, ops=[],
+                                  is_fusion_body="fused" in name)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, opname, shape, kind = m.groups()
+        operands = _parse_operands(line, m.end() - 1)
+        cur.ops.append(Op(name=opname, kind=kind, result_shape=shape,
+                          operands=operands, line=line))
+    return comps, entry
+
+
+def _trip_count(line: str) -> int:
+    m = re.search(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)', line)
+    if m:
+        return int(m.group(1))
+    m = re.search(r'known_trip_count"?\s*:\s*{\s*"?n"?\s*:\s*"?(\d+)', line)
+    return int(m.group(1)) if m else 1
+
+
+def _callees(op: Op) -> List[Tuple[str, int]]:
+    """(callee computation, multiplier) edges from one op."""
+    out = []
+    line = op.line
+    if op.kind == "while":
+        body = re.search(r"body=%?([\w.\-]+)", line)
+        if body:
+            out.append((body.group(1), _trip_count(line)))
+    elif op.kind in ("fusion", "call", "async-start", "custom-call"):
+        m = re.search(r"(?:calls|to_apply|called_computation)=%?([\w.\-]+)", line)
+        if m:
+            out.append((m.group(1), 1))
+    elif op.kind == "conditional":
+        for m in re.finditer(r"branch_computations={([^}]*)}", line):
+            for name in re.findall(r"%([\w.\-]+)", m.group(1)):
+                out.append((name, 1))
+        m = re.search(r"(?:true|false)_computation=%?([\w.\-]+)", line)
+        if m:
+            out.append((m.group(1), 1))
+    elif op.kind in ("reduce", "sort", "scatter", "map", "reduce-window",
+                     "select-and-scatter", "all-reduce", "reduce-scatter"):
+        m = re.search(r"to_apply=%?([\w.\-]+)", line)
+        if m:
+            out.append((m.group(1), 1))
+    return out
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for op in comps[name].ops:
+            for callee, k in _callees(op):
+                visit(callee, m * k)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _dot_flops(op: Op, defs: Dict[str, str]) -> float:
+    out_elems = 1
+    for d in _dims(op.result_shape):
+        out_elems *= d
+    # contracting dim sizes from lhs shape
+    lhs_shape = defs.get(op.operands[0], "") if op.operands else ""
+    lhs_dims = _dims(lhs_shape)
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.line)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, defs: Dict[str, str]) -> float:
+    out_elems = 1
+    for d in _dims(op.result_shape):
+        out_elems *= d
+    rhs_shape = defs.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    kernel = 1
+    for d in _dims(rhs_shape):
+        kernel *= d
+    rhs_dims = _dims(rhs_shape)
+    out_feat = rhs_dims[-1] if rhs_dims else 1
+    return 2.0 * out_elems * max(kernel // max(out_feat, 1), 1)
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps, entry = parse_module(hlo)
+    if not entry:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "parse_error": 1.0}
+    mult = _multipliers(comps, entry)
+    # global def map (op name → result shape); names unique per module
+    defs: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            defs[op.name] = op.result_shape
+
+    flops = 0.0
+    mem_bytes = 0.0
+    coll_bytes = 0.0
+    coll_per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, defs)
+            elif op.kind == "convolution":
+                flops += m * _conv_flops(op, defs)
+            base_kind = op.kind.replace("-start", "")
+            if base_kind in _COLLECTIVES and not op.kind.endswith("-done"):
+                b = _shape_bytes(op.result_shape)
+                coll_bytes += m * b
+                coll_per_kind[base_kind] += m * b
+            if not comp.is_fusion_body and op.kind not in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "conditional",
+            ):
+                b = _shape_bytes(op.result_shape)
+                for operand in op.operands:
+                    b += _shape_bytes(defs.get(operand, ""))
+                mem_bytes += m * b
+    return {
+        "flops": flops,
+        "bytes": mem_bytes,
+        "collective_bytes": coll_bytes,
+        "collective_per_kind": coll_per_kind,
+        "n_computations": float(len(comps)),
+    }

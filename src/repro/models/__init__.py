@@ -1,0 +1,1 @@
+from .model import Model, build_model, effective_window, COMPUTE_DTYPE

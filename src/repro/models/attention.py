@@ -1,0 +1,414 @@
+"""GQA attention with RoPE, sliding windows, blockwise (flash-style) softmax,
+and KV caches (linear + rotating-window).
+
+Used by every attention-bearing architecture (dense, vlm, moe, zamba2 shared
+block, whisper). The blockwise path keeps peak activation memory bounded for
+32k-token prefill on the production mesh (online softmax over kv blocks,
+scanned q blocks) — functionally identical to naive attention (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard_act
+from .common import ParamDef, apply_rope
+
+NEG_INF = -1e30
+
+
+def attention_param_defs(
+    d_model: int, n_heads: int, n_kv_heads: int, head_dim: int, prefix: str = ""
+) -> Dict[str, ParamDef]:
+    p = prefix
+    return {
+        f"{p}wq": ParamDef((d_model, n_heads * head_dim), ("embed", "heads")),
+        f"{p}wk": ParamDef((d_model, n_kv_heads * head_dim), ("embed", "kv_heads")),
+        f"{p}wv": ParamDef((d_model, n_kv_heads * head_dim), ("embed", "kv_heads")),
+        f"{p}wo": ParamDef((n_heads * head_dim, d_model), ("heads", "embed")),
+    }
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(b, s, kv, hd) -> (b, s, kv * n_rep, hd) by head repetition."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd))
+    return x.reshape(b, s, kv * n_rep, hd)
+
+
+def _direct_attention(
+    q: jnp.ndarray,  # (b, sq, h, hd)
+    k: jnp.ndarray,  # (b, sk, h, hd)
+    v: jnp.ndarray,
+    mask: Optional[jnp.ndarray],  # (sq, sk) or (b, sq, sk) bool
+) -> jnp.ndarray:
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        scores = jnp.where(m[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _blockwise_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_offset,
+    causal: bool,
+    window: Optional[int],
+    block_q: int = 512,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention, O(block_q*block_kv) score memory.
+
+    q: (b, sq, h, hd); k/v: (b, sk, h, hd). Causal offset: query i has
+    absolute position i + q_offset; key j has absolute position j.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd**-0.5
+    # pad to block multiples
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_kv
+
+    q_blocks = qp.reshape(b, nq, block_q, h, hd).transpose(1, 0, 3, 2, 4)  # (nq,b,h,bq,hd)
+    k_blocks = kp.reshape(b, nk, block_kv, h, hd).transpose(1, 0, 3, 2, 4)
+    v_blocks = vp.reshape(b, nk, block_kv, h, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_block_body(qi, qb):
+        qb32 = qb.astype(jnp.float32) * scale  # (b,h,bq,hd)
+        q_pos = qi * block_q + jnp.arange(block_q) + q_offset  # (bq,)
+
+        def kv_body(carry, inputs):
+            m_prev, l_prev, acc = carry
+            ki, kb, vb = inputs
+            k_pos = ki * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb32, kb.astype(jnp.float32))
+            mask = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            mask &= (k_pos < sk)[None, :]  # kv padding
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        acc0 = jnp.zeros((b, h, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, acc0), (jnp.arange(nk), k_blocks, v_blocks)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (b,h,bq,hd)
+
+    outs = jax.lax.map(lambda args: q_block_body(*args), (jnp.arange(nq), q_blocks))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * block_q, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _want_seq_shard_map(n_heads: int, q_shape) -> bool:
+    from ..sharding import current_rules
+
+    rules = current_rules()
+    if rules is None or not getattr(rules, "seq_shard_attention", False):
+        return False
+    tp = rules.axis_size("model")
+    dp = rules.axis_size(rules.rules.get("batch"))
+    b, s = q_shape[0], q_shape[1]
+    return (
+        tp > 1
+        and n_heads % tp != 0
+        and s > 2048
+        and s % tp == 0
+        and b % dp == 0
+    )
+
+
+def _seq_sharded_attention(q, k, v, window):
+    """Causal attention with the q-sequence explicitly sharded over 'model'
+    (shard_map); kv replicated across the model axis (one all-gather)."""
+    import jax.experimental.shard_map as shmap
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding import current_rules
+
+    rules = current_rules()
+    mesh = rules.mesh
+    dp_axis = rules.rules.get("batch")
+    tp = rules.axis_size("model")
+    s = q.shape[1]
+    s_local = s // tp
+
+    q_spec = P(dp_axis, "model", None, None)
+    kv_spec = P(dp_axis, None, None, None)
+
+    def local(qb, kb, vb):
+        import jax as _jax
+
+        shard = _jax.lax.axis_index("model")
+        q_offset = shard * s_local  # absolute position of this shard's row 0
+        return _blockwise_attention(qb, kb, vb, q_offset, True, window)
+
+    return shmap.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec),
+        out_specs=q_spec,
+        check_rep=False,
+    )(q, k, v)
+
+
+def multi_head_attention(
+    x: jnp.ndarray,  # (b, s, d)
+    params: Dict[str, jnp.ndarray],
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: Optional[jnp.ndarray] = None,  # (b, s) absolute positions
+    rope_theta: Optional[float] = 10000.0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn
+    blockwise_threshold: int = 2048,
+    prefix: str = "",
+    project_out: bool = True,
+) -> jnp.ndarray:
+    """Full attention sublayer (projections + SDPA). Returns (b, s, d), or the
+    pre-o-projection (b, s, h*hd) when project_out=False (sparse exec masks
+    the o-projection's input rows per paper App. A)."""
+    b, s, d = x.shape
+    p = prefix
+    q = (x @ params[f"{p}wq"]).reshape(b, s, n_heads, head_dim)
+    if kv_override is None:
+        k = (x @ params[f"{p}wk"]).reshape(b, s, n_kv_heads, head_dim)
+        v = (x @ params[f"{p}wv"]).reshape(b, s, n_kv_heads, head_dim)
+        if rope_theta is not None:
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override  # pre-projected encoder states (b, sk, kv, hd)
+    # seq ("act_seq") is a FALLBACK target: it picks up the model axis only
+    # when the head count doesn't divide it (e.g. starcoder2's 24/36 heads on
+    # a 16-way mesh) — otherwise heads claim it first (§Perf iteration C).
+    q = shard_act(q, ("batch", "act_seq", "heads", "head_dim"))
+    k = shard_act(k, ("batch", None, "kv_heads", "head_dim"))
+    v = shard_act(v, ("batch", None, "kv_heads", "head_dim"))
+
+    n_rep = n_heads // k.shape[2]
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+
+    sk = k.shape[1]
+    if causal and kv_override is None and _want_seq_shard_map(n_heads, q.shape):
+        # §Perf iteration C: head count doesn't divide the model axis —
+        # instead of letting GSPMD replicate the whole attention per device,
+        # explicitly shard the q-sequence over 'model' with shard_map; each
+        # shard runs blockwise attention for its s/tp rows against full kv.
+        out = _seq_sharded_attention(q, k, v, window)
+    elif max(s, sk) > blockwise_threshold:
+        q_offset = jnp.int32(sk - s) if causal else jnp.int32(0)
+        out = _blockwise_attention(q, k, v, q_offset, causal, window)
+    else:
+        mask = None
+        if causal:
+            qi = jnp.arange(s)[:, None] + (sk - s)
+            kj = jnp.arange(sk)[None, :]
+            mask = kj <= qi
+            if window is not None:
+                mask &= kj > qi - window
+        out = _direct_attention(q, k, v, mask)
+    out = out.reshape(b, s, n_heads * head_dim)
+    if not project_out:
+        return out
+    return out @ params[f"{p}wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static geometry of one layer's KV cache.
+
+    ``window`` caps physical length (rotating writes) — this is what makes
+    dense architectures runnable at the 524k-token shape (DESIGN.md §4).
+    """
+
+    batch: int
+    max_seq: int
+    n_kv_heads: int
+    head_dim: int
+    window: Optional[int] = None
+
+    @property
+    def physical_len(self) -> int:
+        return min(self.max_seq, self.window) if self.window else self.max_seq
+
+
+def init_kv_cache(spec: CacheSpec, n_layers: int, dtype) -> Dict[str, jnp.ndarray]:
+    shape = (n_layers, spec.batch, spec.physical_len, spec.n_kv_heads, spec.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # number of tokens ever written (logical length)
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_layer_update(
+    layer_k: jnp.ndarray,  # (b, P, kv, hd) one layer's cache
+    layer_v: jnp.ndarray,
+    new_k: jnp.ndarray,  # (b, 1, kv, hd) decode step
+    new_v: jnp.ndarray,
+    length: jnp.ndarray,  # tokens already in cache
+    window: Optional[int],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    phys = layer_k.shape[1]
+    slot = length % phys if window else jnp.minimum(length, phys - 1)
+    k = jax.lax.dynamic_update_slice(layer_k, new_k, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(layer_v, new_v, (0, slot, 0, 0))
+    return k, v
+
+
+def decode_attention(
+    x: jnp.ndarray,  # (b, 1, d)
+    params: Dict[str, jnp.ndarray],
+    layer_k: jnp.ndarray,  # (b, P, kv, hd) cache AFTER update
+    layer_v: jnp.ndarray,
+    length: jnp.ndarray,  # logical length INCLUDING current token
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float],
+    window: Optional[int],
+    prefix: str = "",
+    project_out: bool = True,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly rotating) cache."""
+    b, one, d = x.shape
+    p = prefix
+    phys = layer_k.shape[1]
+    q = (x @ params[f"{p}wq"]).reshape(b, 1, n_heads, head_dim)
+    if rope_theta is not None:
+        pos = jnp.broadcast_to((length - 1)[None, None], (b, 1))
+        q = apply_rope(q, pos, rope_theta)
+    q = shard_act(q, ("batch", None, "heads", "head_dim"))
+
+    n_rep = n_heads // n_kv_heads
+    k = repeat_kv(layer_k, n_rep)  # (b, P, h, hd)
+    v = repeat_kv(layer_v, n_rep)
+    scale = head_dim**-0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    # valid slots: < length (linear) — rotation makes all slots valid once full
+    slot_idx = jnp.arange(phys)
+    valid = slot_idx < length
+    if window:
+        # rotating cache: slots hold the last min(length, phys) tokens
+        valid = slot_idx < jnp.minimum(length, phys)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    if not project_out:
+        return out
+    return out @ params[f"{p}wo"]
+
+
+def append_attention(
+    x: jnp.ndarray,  # (b, n, d) new tokens (VLM frame append: n = tokens/frame)
+    params: Dict[str, jnp.ndarray],
+    layer_k: jnp.ndarray,  # (b, P, kv, hd) LINEAR cache (no window rotation)
+    layer_v: jnp.ndarray,
+    length: jnp.ndarray,  # tokens in cache BEFORE this call
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float],
+    kv_replicate: int = 1,
+    prefix: str = "",
+    project_out: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-token cache-extending attention (the paper's frame-append stage).
+
+    Returns (out, new_k_cache, new_v_cache). Linear caches only.
+    """
+    b, n, d = x.shape
+    p = prefix
+    phys = layer_k.shape[1]
+    positions = length[None, None] + jnp.arange(n)[None, :]  # (1, n) bcast
+    positions = jnp.broadcast_to(positions.reshape(1, n), (b, n))
+    q = (x @ params[f"{p}wq"]).reshape(b, n, n_heads, head_dim)
+    k = (x @ params[f"{p}wk"]).reshape(b, n, n_kv_heads, head_dim)
+    v = (x @ params[f"{p}wv"]).reshape(b, n, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if kv_replicate > 1:
+        k, v = repeat_kv(k, kv_replicate), repeat_kv(v, kv_replicate)
+    slots = length + jnp.arange(n)
+    layer_k = layer_k.at[:, slots].set(k)
+    layer_v = layer_v.at[:, slots].set(v)
+
+    n_rep = n_heads // (n_kv_heads * kv_replicate)
+    kk = repeat_kv(layer_k, n_rep)
+    vv = repeat_kv(layer_v, n_rep)
+    scale = head_dim**-0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    slot_idx = jnp.arange(phys)[None, :]  # key position = slot (linear cache)
+    q_pos = (length + jnp.arange(n))[:, None]
+    valid = slot_idx <= q_pos  # causal within the append + all history
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(b, n, n_heads * head_dim)
+    if project_out:
+        out = out @ params[f"{p}wo"]
+    return out, layer_k, layer_v
+
+
+def project_kv_for_decode(
+    x: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    n_kv_heads: int,
+    head_dim: int,
+    length: jnp.ndarray,
+    rope_theta: Optional[float],
+    prefix: str = "",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = x.shape[0]
+    p = prefix
+    k = (x @ params[f"{p}wk"]).reshape(b, 1, n_kv_heads, head_dim)
+    v = (x @ params[f"{p}wv"]).reshape(b, 1, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        pos = jnp.broadcast_to(length[None, None], (b, 1))
+        k = apply_rope(k, pos, rope_theta)
+    return k, v

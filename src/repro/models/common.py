@@ -1,0 +1,135 @@
+"""Shared model building blocks: params-as-pytrees, norms, init helpers.
+
+Params are plain nested dicts of jnp arrays. Every leaf has a parallel
+"logical axes" annotation (same tree structure, tuples of logical axis names)
+produced by the same spec tables that drive initialization, so sharding rules
+can never drift from parameter shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """One parameter's shape, logical axes, and init scale."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: Optional[float] = None  # override stddev for "normal"
+
+    def make(self, key: jax.Array, dtype) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "small_normal":
+            std = self.scale if self.scale is not None else 0.02
+            return (jax.random.normal(key, self.shape) * std).astype(dtype)
+        # fan-in scaled normal (truncation unnecessary for repro purposes)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+def init_params(
+    defs: Dict[str, ParamDef], key: jax.Array, dtype
+) -> Tuple[Params, Axes]:
+    """Instantiate a flat table of ParamDefs → (params, logical axes)."""
+    keys = jax.random.split(key, max(len(defs), 1))
+    params: Params = {}
+    axes: Axes = {}
+    for (name, d), k in zip(sorted(defs.items()), keys):
+        params[name] = d.make(k, dtype)
+        axes[name] = d.axes
+    return params, axes
+
+
+def stack_layer_defs(defs: Dict[str, ParamDef], n_layers: int) -> Dict[str, ParamDef]:
+    """Prepend a scan 'layer' dim to every ParamDef (scan-over-layers)."""
+    return {
+        name: ParamDef(
+            shape=(n_layers,) + d.shape,
+            axes=("layer",) + d.axes,
+            init=d.init,
+            scale=d.scale,
+        )
+        for name, d in defs.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def swish(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def sinusoidal_positions(n_pos: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (n_pos, dim)."""
+    pos = np.arange(n_pos)[:, None]
+    idx = np.arange(dim // 2)[None, :]
+    angles = pos / np.power(10000.0, 2 * idx / dim)
+    emb = np.concatenate([np.sin(angles), np.cos(angles)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jnp.ndarray:
+    """(q_len, kv_len) bool mask; q token i attends kv j iff j <= i + offset."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return kj <= qi

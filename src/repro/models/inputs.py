@@ -1,0 +1,61 @@
+"""Input construction for every (architecture × input shape) pair.
+
+``input_specs``: ShapeDtypeStruct stand-ins (no allocation) — the dry-run
+path. ``make_dummy_batch``: concrete random arrays — tests/examples.
+
+Geometry rules (DESIGN.md §4):
+  * text LMs: tokens (B, S).
+  * early-fusion VLM/moe-with-frontend: tokens (B, S - frontend_tokens) +
+    frontend (B, frontend_tokens, d_frontend); total residual length = S.
+  * audio enc-dec: tokens (B, S) decoder tokens + frontend
+    (B, frontend_tokens, d_frontend) encoder frames (conv stub output).
+  * decode shapes: token (B, 1) + KV/state cache of logical length S.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import InputShape, ModelConfig
+
+TOKEN_DT = jnp.int32
+FRONT_DT = jnp.bfloat16
+
+
+def _geometry(cfg: ModelConfig, shape: InputShape) -> Dict[str, Tuple[int, ...]]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        out: Dict[str, Tuple[int, ...]] = {"tokens": (b, 1)}
+        return out
+    if cfg.is_encdec:
+        return {"tokens": (b, s), "frontend": (b, cfg.frontend_tokens, cfg.d_frontend)}
+    if cfg.d_frontend:
+        # early fusion: vision prefix + text; clamp so tiny smoke shapes work
+        n_front = min(cfg.frontend_tokens, s // 2)
+        s_text = s - n_front
+        return {"tokens": (b, s_text), "frontend": (b, n_front, cfg.d_frontend)}
+    return {"tokens": (b, s)}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    geo = _geometry(cfg, shape)
+    out = {}
+    for name, shp in geo.items():
+        dt = TOKEN_DT if name == "tokens" else FRONT_DT
+        out[name] = jax.ShapeDtypeStruct(shp, dt)
+    return out
+
+
+def make_dummy_batch(cfg: ModelConfig, shape: InputShape, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    geo = _geometry(cfg, shape)
+    out: Dict[str, jnp.ndarray] = {}
+    for name, shp in geo.items():
+        if name == "tokens":
+            out[name] = jnp.asarray(rng.integers(0, cfg.vocab_size, shp), TOKEN_DT)
+        else:
+            out[name] = jnp.asarray(rng.normal(0, 1, shp), FRONT_DT)
+    return out

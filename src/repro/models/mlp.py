@@ -1,0 +1,79 @@
+"""Gated MLP (SwiGLU / GeLU) with optional neuron-sparse execution.
+
+The sparse path implements the paper's masked matmul semantics
+(App. B.2: ỹ = Σ M_i a_i W_i): a row mask over a matrix's *input* dimension
+zeroes the corresponding activations. On flash/TPU hardware the mask is
+realized as chunked reads (serving/sparse_exec.py + kernels/); here the dense
+masked form is the mathematical reference the kernels are tested against.
+
+Masks per the paper's Appendix A convention:
+  * ``hidden_mask``: over d_model — shared by gate and up (they share input).
+  * ``ffn_mask``: over d_ff — the down projection's own input.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard_act
+from .common import ParamDef, swish
+
+
+def mlp_param_defs(d_model: int, d_ff: int, prefix: str = "") -> Dict[str, ParamDef]:
+    p = prefix
+    return {
+        f"{p}w_gate": ParamDef((d_model, d_ff), ("embed", "ffn")),
+        f"{p}w_up": ParamDef((d_model, d_ff), ("embed", "ffn")),
+        f"{p}w_down": ParamDef((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def swiglu_mlp(
+    x: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    prefix: str = "",
+    hidden_mask: Optional[jnp.ndarray] = None,
+    ffn_mask: Optional[jnp.ndarray] = None,
+    activation: str = "silu",
+) -> jnp.ndarray:
+    p = prefix
+    if hidden_mask is not None:
+        x = x * hidden_mask.astype(x.dtype)
+    gate = x @ params[f"{p}w_gate"]
+    up = x @ params[f"{p}w_up"]
+    act = swish(gate) if activation == "silu" else jax.nn.gelu(gate)
+    h = act * up
+    h = shard_act(h, ("batch", None, "ffn"))
+    if ffn_mask is not None:
+        h = h * ffn_mask.astype(h.dtype)
+    return h @ params[f"{p}w_down"]
+
+
+def gelu_mlp_param_defs(d_model: int, d_ff: int, prefix: str = "") -> Dict[str, ParamDef]:
+    """Non-gated 2-matrix MLP (whisper/starcoder-style c_fc/c_proj)."""
+    p = prefix
+    return {
+        f"{p}w_fc": ParamDef((d_model, d_ff), ("embed", "ffn")),
+        f"{p}b_fc": ParamDef((d_ff,), ("ffn",), init="zeros"),
+        f"{p}w_proj": ParamDef((d_ff, d_model), ("ffn", "embed")),
+        f"{p}b_proj": ParamDef((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(
+    x: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    prefix: str = "",
+    hidden_mask: Optional[jnp.ndarray] = None,
+    ffn_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    p = prefix
+    if hidden_mask is not None:
+        x = x * hidden_mask.astype(x.dtype)
+    h = jax.nn.gelu(x @ params[f"{p}w_fc"] + params[f"{p}b_fc"])
+    h = shard_act(h, ("batch", None, "ffn"))
+    if ffn_mask is not None:
+        h = h * ffn_mask.astype(h.dtype)
+    return h @ params[f"{p}w_proj"] + params[f"{p}b_proj"]

@@ -1,0 +1,230 @@
+"""Mamba2 (SSD) blocks — the zamba2-7b substrate.
+
+Chunked state-space-duality formulation (Dao & Gu 2024, "ssd_minimal"):
+within a chunk the recurrence is computed as masked matmuls (MXU-friendly on
+the TPU target), across chunks a short ``lax.scan`` carries the state. The
+chunk computation is wrapped in ``jax.checkpoint`` so training stores only
+chunk-boundary states.
+
+Decode is the O(1) recurrent update — this is why zamba2/xlstm handle the
+long_500k shape with constant physical state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard_act
+from .common import ParamDef, rms_norm, swish
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_param_defs(cfg: Mamba2Config, prefix: str = "") -> Dict[str, ParamDef]:
+    p = prefix
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        f"{p}w_in": ParamDef((cfg.d_model, d_in_proj), ("embed", "conv_dim")),
+        f"{p}conv_w": ParamDef((cfg.d_conv, cfg.conv_dim), (None, "conv_dim"), scale=0.5),
+        f"{p}conv_b": ParamDef((cfg.conv_dim,), ("conv_dim",), init="zeros"),
+        f"{p}a_log": ParamDef((cfg.n_heads,), ("ssm_heads",), init="zeros"),
+        f"{p}dt_bias": ParamDef((cfg.n_heads,), ("ssm_heads",), init="zeros"),
+        f"{p}d_skip": ParamDef((cfg.n_heads,), ("ssm_heads",), init="ones"),
+        f"{p}norm_w": ParamDef((cfg.d_inner,), ("conv_dim",), init="ones"),
+        f"{p}w_out": ParamDef((cfg.d_inner, cfg.d_model), ("conv_dim", "embed")),
+    }
+
+
+def _split_in_proj(zxbcdt: jnp.ndarray, cfg: Mamba2Config):
+    d_in, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + cfg.conv_dim]
+    dt = zxbcdt[..., d_in + cfg.conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, d_conv: int):
+    """Depthwise causal conv over (b, s, c)."""
+    pad = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    # stack shifted views: (d_conv, b, s, c)
+    views = jnp.stack([pad[:, i : i + xbc.shape[1], :] for i in range(d_conv)])
+    out = jnp.einsum("kbsc,kc->bsc", views, w) + b
+    return swish(out)
+
+
+def mamba2_forward(
+    x: jnp.ndarray,  # (b, s, d)
+    params: Dict[str, jnp.ndarray],
+    cfg: Mamba2Config,
+    prefix: str = "",
+    return_state: bool = False,
+):
+    """Full-sequence chunked SSD forward.
+
+    With return_state=True also returns the decode-ready state dict
+    (prefill path): padded chunk-tail steps have dt=0 ⇒ decay 1, zero input,
+    so the carried state is exact."""
+    p = prefix
+    b, s, _ = x.shape
+    h, pdim, n, g, q = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups, cfg.chunk
+
+    zxbcdt = x @ params[f"{p}w_in"]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, params[f"{p}conv_w"], params[f"{p}conv_b"], cfg.d_conv)
+    xs = xbc[..., : cfg.d_inner].reshape(b, s, h, pdim)
+    bmat = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., cfg.d_inner + g * n :].reshape(b, s, g, n)
+    xs = shard_act(xs, ("batch", None, "ssm_heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params[f"{p}dt_bias"])  # (b,s,h)
+    a = -jnp.exp(params[f"{p}a_log"].astype(jnp.float32))  # (h,)
+    da = dt * a  # (b,s,h) log-decay per step
+
+    # chunk the sequence (pad to multiple of q)
+    pad = (-s) % q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xs_c = xs.reshape(b, nc, q, h, pdim)
+    b_c = bmat.reshape(b, nc, q, g, n)
+    c_c = cmat.reshape(b, nc, q, g, n)
+    da_c = da.reshape(b, nc, q, h)
+    dt_c = dt.reshape(b, nc, q, h)
+
+    da_cs = jnp.cumsum(da_c, axis=2)  # (b,nc,q,h) inclusive cumsum
+
+    @jax.checkpoint
+    def chunk_body(state, inp):
+        """state: (b, h, p, n); one chunk's SSD computation."""
+        xs_i, b_i, c_i, da_cs_i, dt_i = inp  # (b,q,h,p),(b,q,g,n),(b,q,g,n),(b,q,h),(b,q,h)
+        # broadcast groups → heads
+        rep = h // g
+        b_h = jnp.repeat(b_i, rep, axis=2)  # (b,q,h,n)
+        c_h = jnp.repeat(c_i, rep, axis=2)
+
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(da_cs_i)  # (b,q,h) decay from chunk start to t
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", c_h, state) * decay_in[..., None]
+
+        # intra-chunk: masked "attention" form
+        seg = da_cs_i[:, :, None, :] - da_cs_i[:, None, :, :]  # (b,q,q,h) cs_i - cs_j
+        iq = jnp.arange(q)
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        l_mat = jnp.where(causal, jnp.exp(seg), 0.0)  # (b,q,q,h)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", c_h, b_h) * l_mat * dt_i[:, None, :, :]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xs_i.astype(jnp.float32))
+
+        # state for next chunk
+        decay_out = jnp.exp(da_cs_i[:, -1:, :] - da_cs_i)  # decay from t to chunk end
+        weighted_x = xs_i.astype(jnp.float32) * (dt_i * decay_out)[..., None]
+        new_state = jnp.exp(da_cs_i[:, -1, :])[..., None, None] * state + jnp.einsum(
+            "bqhp,bqhn->bhpn", weighted_x, b_h
+        )
+        return new_state, (y_inter + y_intra)
+
+    state0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    xs_t = xs_c.transpose(1, 0, 2, 3, 4)
+    b_t = b_c.transpose(1, 0, 2, 3, 4)
+    c_t = c_c.transpose(1, 0, 2, 3, 4)
+    da_t = da_cs.transpose(1, 0, 2, 3)
+    dt_t = dt_c.transpose(1, 0, 2, 3)
+    final_state, y_chunks = jax.lax.scan(
+        chunk_body, state0, (xs_t, b_t, c_t, da_t, dt_t)
+    )
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, pdim)[:, :s]
+
+    y = y + xs[:, :s].astype(jnp.float32) * params[f"{p}d_skip"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * swish(z), params[f"{p}norm_w"])
+    out = y @ params[f"{p}w_out"]
+    if not return_state:
+        return out
+    # conv state: last (d_conv-1) RAW xbc inputs (pre-conv, pre-activation)
+    zxbcdt_raw = x @ params[f"{p}w_in"]
+    _, xbc_raw, _ = _split_in_proj(zxbcdt_raw, cfg)
+    conv_state = xbc_raw[:, s - (cfg.d_conv - 1):, :] if s >= cfg.d_conv - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (cfg.d_conv - 1 - s, 0), (0, 0))
+    )
+    return out, {"conv": conv_state.astype(x.dtype), "ssm": final_state}
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent, O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_state_init(cfg: Mamba2Config, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    x: jnp.ndarray,  # (b, 1, d)
+    state: Dict[str, jnp.ndarray],
+    params: Dict[str, jnp.ndarray],
+    cfg: Mamba2Config,
+    prefix: str = "",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    p = prefix
+    b = x.shape[0]
+    h, pdim, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+
+    zxbcdt = (x[:, 0] @ params[f"{p}w_in"])  # (b, ...)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+
+    conv_win = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (b,dc,c)
+    xbc = swish(
+        jnp.einsum("bkc,kc->bc", conv_win, params[f"{p}conv_w"]) + params[f"{p}conv_b"]
+    )
+    new_conv = conv_win[:, 1:]
+
+    xs = xbc[..., : cfg.d_inner].reshape(b, h, pdim)
+    bmat = xbc[..., cfg.d_inner : cfg.d_inner + g * n].reshape(b, g, n)
+    cmat = xbc[..., cfg.d_inner + g * n :].reshape(b, g, n)
+    rep = h // g
+    b_h = jnp.repeat(bmat, rep, axis=1)  # (b,h,n)
+    c_h = jnp.repeat(cmat, rep, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params[f"{p}dt_bias"])  # (b,h)
+    a = -jnp.exp(params[f"{p}a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (b,h)
+
+    ssm = state["ssm"] * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xs.astype(jnp.float32) * dt[..., None], b_h.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, c_h.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params[f"{p}d_skip"][None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * swish(z), params[f"{p}norm_w"])
+    out = (y @ params[f"{p}w_out"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,390 @@
+"""Decoder block + scan-over-layers stack for dense / moe / vlm families.
+
+The stack is a single ``jax.lax.scan`` over stacked per-layer params (HLO size
+independent of depth — required for 80-layer dry-runs), with optional
+``jax.checkpoint`` per layer for training.
+
+Neuron-chunking integration (first-class, paper §3): every block accepts an
+optional ``sparse_ctx`` (serving/sparse_exec.SparseExecution). When present,
+the block computes input importances for the q/o/gate/down projections
+(k/v/up share masks per paper App. A), runs utility-guided chunk selection
+*inside the jit*, applies the masks, and accumulates the additive-model I/O
+latency estimate. Dense training never pays for this path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard_act
+from .attention import (
+    attention_param_defs,
+    cache_layer_update,
+    decode_attention,
+    multi_head_attention,
+    project_kv_for_decode,
+)
+from .common import ParamDef, layer_norm, rms_norm
+from .mlp import gelu_mlp, gelu_mlp_param_defs, mlp_param_defs, swiglu_mlp
+from .moe import MoEConfig, moe_ffn, moe_param_defs
+
+
+def _norm_defs(cfg: ModelConfig, name: str) -> Dict[str, ParamDef]:
+    defs = {f"{name}_w": ParamDef((cfg.d_model,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        defs[f"{name}_b"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+    return defs
+
+
+def apply_norm(x, params, cfg: ModelConfig, name: str):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params[f"{name}_w"], params[f"{name}_b"])
+    return rms_norm(x, params[f"{name}_w"])
+
+
+def moe_cfg_of(cfg: ModelConfig) -> MoEConfig:
+    return MoEConfig(
+        n_experts=cfg.n_experts,
+        top_k=cfg.moe_top_k,
+        d_model=cfg.d_model,
+        d_ff=cfg.d_ff,
+        capacity_factor=cfg.moe_capacity_factor,
+        shared_expert=cfg.moe_shared_expert,
+        dispatch=cfg.moe_dispatch,
+    )
+
+
+def block_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    """One decoder block's params (unstacked)."""
+    defs: Dict[str, ParamDef] = {}
+    defs.update(_norm_defs(cfg, "ln1"))
+    defs.update(_norm_defs(cfg, "ln2"))
+    defs.update(
+        attention_param_defs(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        )
+    )
+    if cfg.has_moe:
+        defs.update(moe_param_defs(moe_cfg_of(cfg)))
+    elif cfg.mlp == "gelu":
+        defs.update(gelu_mlp_param_defs(cfg.d_model, cfg.d_ff))
+    else:
+        defs.update(mlp_param_defs(cfg.d_model, cfg.d_ff))
+    return defs
+
+
+def _apply_mask(x, mask):
+    return x if mask is None else x * mask.astype(x.dtype)
+
+
+def block_forward(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (b, s, d)
+    cfg: ModelConfig,
+    positions: Optional[jnp.ndarray],
+    window: Optional[int],
+    sparse_ctx: Any = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (x_out, moe_aux, io_latency_s)."""
+    io = jnp.float32(0.0)
+    h = apply_norm(x, params, cfg, "ln1")
+    h = shard_act(h, ("batch", None, "act_embed"))
+
+    mask_q = None
+    if sparse_ctx is not None:
+        mask_q, lat = sparse_ctx.mask("hidden_attn", h)
+        io += lat
+    attn_in = _apply_mask(h, mask_q)
+    attn_raw = multi_head_attention(
+        attn_in,
+        params,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+        positions=positions,
+        rope_theta=cfg.rope_theta,
+        causal=True,
+        window=window,
+        project_out=sparse_ctx is None,
+    )
+    if sparse_ctx is not None:
+        mask_o, lat = sparse_ctx.mask("attn_out", attn_raw)
+        io += lat
+        attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
+    x = x + attn_raw
+
+    h = apply_norm(x, params, cfg, "ln2")
+    h = shard_act(h, ("batch", None, "act_embed"))
+    aux = jnp.float32(0.0)
+    if cfg.has_moe:
+        y, aux = moe_ffn(h, params, moe_cfg_of(cfg))
+    else:
+        y, lat = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
+        io += lat
+    x = x + y
+    x = shard_act(x, ("batch", "act_seq", "act_embed"))
+    return x, aux, io
+
+
+def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx):
+    """Gated/plain MLP with the paper's gate(+up-shared) and down masks."""
+    if sparse_ctx is None:
+        y = gelu_mlp(h, params) if cfg.mlp == "gelu" else swiglu_mlp(h, params)
+        return y, jnp.float32(0.0)
+    mask_g, io1 = sparse_ctx.mask("hidden_mlp", h)
+    hm = _apply_mask(h, mask_g)
+    if cfg.mlp == "gelu":
+        mid = jax.nn.gelu(hm @ params["w_fc"] + params["b_fc"])
+        mask_f, io2 = sparse_ctx.mask("ffn", mid)
+        y = _apply_mask(mid, mask_f) @ params["w_proj"] + params["b_proj"]
+    else:
+        from .common import swish
+
+        mid = swish(hm @ params["w_gate"]) * (hm @ params["w_up"])
+        mask_f, io2 = sparse_ctx.mask("ffn", mid)
+        y = _apply_mask(mid, mask_f) @ params["w_down"]
+    return y, io1 + io2
+
+
+def stack_forward(
+    stacked: Dict[str, jnp.ndarray],  # each leaf (L, ...)
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: Optional[jnp.ndarray],
+    window: Optional[int],
+    remat: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan the block over L layers. Returns (hidden, total_moe_aux)."""
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h2, aux2, _ = block_forward(layer_params, h, cfg, positions, window)
+        return (h2, aux + aux2), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, stacked KV cache)
+# ---------------------------------------------------------------------------
+
+
+def block_decode(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (b, 1, d)
+    layer_k: jnp.ndarray,
+    layer_v: jnp.ndarray,
+    length: jnp.ndarray,  # tokens in cache BEFORE this one
+    cfg: ModelConfig,
+    window: Optional[int],
+    sparse_ctx: Any = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (x_out, new_k, new_v, io_latency)."""
+    io = jnp.float32(0.0)
+    h = apply_norm(x, params, cfg, "ln1")
+
+    mask_q = None
+    if sparse_ctx is not None:
+        mask_q, lat = sparse_ctx.mask("hidden_attn", h)
+        io += lat
+    attn_in = _apply_mask(h, mask_q)
+    new_k, new_v = project_kv_for_decode(
+        attn_in, params, cfg.n_kv_heads, cfg.resolved_head_dim, length, cfg.rope_theta
+    )
+    if cfg.kv_replicate > 1:  # shardable-cache replication (§Perf iteration A)
+        from .attention import repeat_kv
+
+        new_k = repeat_kv(new_k, cfg.kv_replicate)
+        new_v = repeat_kv(new_v, cfg.kv_replicate)
+    layer_k, layer_v = cache_layer_update(
+        layer_k, layer_v, new_k, new_v, length, window
+    )
+    attn_raw = decode_attention(
+        attn_in,
+        params,
+        layer_k,
+        layer_v,
+        length + 1,
+        cfg.n_heads,
+        cfg.n_cache_kv_heads,
+        cfg.resolved_head_dim,
+        cfg.rope_theta,
+        window,
+        project_out=sparse_ctx is None,
+    )
+    if sparse_ctx is not None:
+        mask_o, lat = sparse_ctx.mask("attn_out", attn_raw)
+        io += lat
+        attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
+    x = x + attn_raw
+
+    h = apply_norm(x, params, cfg, "ln2")
+    if cfg.has_moe:
+        y, _ = moe_ffn(h, params, moe_cfg_of(cfg))
+    else:
+        y, lat = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
+        io += lat
+    x = x + y
+    return x, layer_k, layer_v, io
+
+
+def stack_decode(
+    stacked: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    cache: Dict[str, jnp.ndarray],  # k/v: (L, b, P, kv, hd), length: ()
+    cfg: ModelConfig,
+    window: Optional[int],
+    sparse_ctx: Any = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray]:
+    length = cache["length"]
+
+    def body(carry, layer):
+        h, io = carry
+        layer_params, lk, lv = layer
+        h2, lk2, lv2, io2 = block_decode(
+            layer_params, h, lk, lv, length, cfg, window, sparse_ctx
+        )
+        return (h2, io + io2), (lk2, lv2)
+
+    (x, io), (ks, vs) = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stacked, cache["k"], cache["v"])
+    )
+    new_cache = {"k": ks, "v": vs, "length": length + 1}
+    return x, new_cache, io
+
+
+# ---------------------------------------------------------------------------
+# frame append (multi-token cache extension — the paper's VLM stage)
+# ---------------------------------------------------------------------------
+
+
+def block_append(
+    params,
+    x: jnp.ndarray,  # (b, n, d) new (visual) tokens
+    layer_k,
+    layer_v,
+    length,
+    cfg: ModelConfig,
+    sparse_ctx: Any = None,
+):
+    from .attention import append_attention
+
+    io = jnp.float32(0.0)
+    h = apply_norm(x, params, cfg, "ln1")
+    mask_q = None
+    if sparse_ctx is not None:
+        mask_q, lat = sparse_ctx.mask("hidden_attn", h)
+        io += lat
+    attn_in = _apply_mask(h, mask_q)
+    attn_raw, layer_k, layer_v = append_attention(
+        attn_in,
+        params,
+        layer_k,
+        layer_v,
+        length,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+        cfg.rope_theta,
+        kv_replicate=cfg.kv_replicate,
+        project_out=sparse_ctx is None,
+    )
+    if sparse_ctx is not None:
+        mask_o, lat = sparse_ctx.mask("attn_out", attn_raw)
+        io += lat
+        attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
+    x = x + attn_raw
+
+    h = apply_norm(x, params, cfg, "ln2")
+    if cfg.has_moe:
+        y, _ = moe_ffn(h, params, moe_cfg_of(cfg))
+    else:
+        y, lat = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
+        io += lat
+    return x + y, layer_k, layer_v, io
+
+
+def stack_append(
+    stacked,
+    x: jnp.ndarray,
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    sparse_ctx: Any = None,
+):
+    """Append n tokens to every layer's cache (paper §2.1 frame appending)."""
+    length = cache["length"]
+    n = x.shape[1]
+
+    def body(carry, layer):
+        h, io = carry
+        layer_params, lk, lv = layer
+        h2, lk2, lv2, io2 = block_append(
+            layer_params, h, lk, lv, length, cfg, sparse_ctx
+        )
+        return (h2, io + io2), (lk2, lv2)
+
+    (x, io), (ks, vs) = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stacked, cache["k"], cache["v"])
+    )
+    return x, {"k": ks, "v": vs, "length": length + n}, io
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence, also fills the cache)
+# ---------------------------------------------------------------------------
+
+
+def block_prefill(
+    params, x, cfg: ModelConfig, positions, window, phys_len: int
+):
+    """Like block_forward but also returns this layer's (k, v) cache fill."""
+    from .attention import repeat_kv
+
+    b, s, _ = x.shape
+    h = apply_norm(x, params, cfg, "ln1")
+    k = (h @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+    v = (h @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+    if cfg.rope_theta is not None:
+        from .common import apply_rope
+
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.kv_replicate > 1:
+        k, v = repeat_kv(k, cfg.kv_replicate), repeat_kv(v, cfg.kv_replicate)
+    # keep the LAST phys_len positions (rotating-window layout: slot = pos % P)
+    if phys_len < s:
+        keep_k, keep_v = k[:, -phys_len:], v[:, -phys_len:]
+        roll = (s % phys_len)
+        # place so that slot (pos % P) matches decode's rotating writes
+        keep_k = jnp.roll(keep_k, shift=roll, axis=1)
+        keep_v = jnp.roll(keep_v, shift=roll, axis=1)
+    else:
+        pad = phys_len - s
+        keep_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        keep_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    x_out, aux, _ = block_forward(params, x, cfg, positions, window)
+    return x_out, aux, keep_k, keep_v
+
+
+def stack_prefill(
+    stacked,
+    x,
+    cfg: ModelConfig,
+    positions,
+    window: Optional[int],
+    phys_len: int,
+    remat: bool = False,
+):
+    def body(carry, layer_params):
+        h, aux = carry
+        h2, aux2, k, v = block_prefill(layer_params, h, cfg, positions, window, phys_len)
+        return (h2, aux + aux2), (k, v)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), (ks, vs) = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), stacked)
+    cache = {"k": ks, "v": vs, "length": jnp.int32(x.shape[1])}
+    return x, aux, cache

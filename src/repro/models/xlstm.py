@@ -1,0 +1,249 @@
+"""xLSTM blocks (sLSTM + mLSTM) — the xlstm-125m substrate.
+
+mLSTM: matrix-memory cell C ∈ R^{dh×dh} per head with exponential gating and
+max-stabilizer state; pre-up-projection (factor 2) block, qkv from the inner
+stream, gated output, down-projection.
+
+sLSTM: scalar-memory cell with hidden-state recurrence feeding the gates,
+followed by a GeLU feed-forward (factor 4/3) as in the xLSTM paper's block.
+
+Sequence processing is a chunked ``lax.scan`` (chunk boundaries checkpointed)
+so training at 4k tokens does not store every step's matrix memory. Decode is
+the O(1) recurrent update (→ long_500k capable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard_act
+from .common import ParamDef, rms_norm, swish
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    m_proj_factor: float = 2.0
+    s_ff_factor: float = 1.3334
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.m_proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff_s(self) -> int:
+        return int(self.s_ff_factor * self.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_param_defs(cfg: XLSTMConfig, prefix: str = "") -> Dict[str, ParamDef]:
+    p = prefix
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        f"{p}w_up": ParamDef((d, 2 * di), ("embed", "ffn")),
+        f"{p}w_q": ParamDef((di, di), ("ffn", "heads")),
+        f"{p}w_k": ParamDef((di, di), ("ffn", "heads")),
+        f"{p}w_v": ParamDef((di, di), ("ffn", "heads")),
+        f"{p}w_ig": ParamDef((di, h), ("ffn", None), scale=0.02),
+        f"{p}b_ig": ParamDef((h,), (None,), init="zeros"),
+        f"{p}w_fg": ParamDef((di, h), ("ffn", None), scale=0.02),
+        f"{p}b_fg": ParamDef((h,), (None,), init="ones"),
+        f"{p}norm_w": ParamDef((di,), ("ffn",), init="ones"),
+        f"{p}w_down": ParamDef((di, d), ("ffn", "embed")),
+    }
+
+
+def _mlstm_scan(q, k, v, log_i, log_f, state, chunk: int):
+    """Recurrent mLSTM over (b, s, h, dh) with chunked remat.
+
+    state: (c (b,h,dh,dh), n (b,h,dh), m (b,h)). Returns (y, state)."""
+    b, s, h, dh = q.shape
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, log_i, log_f = map(zf, (q, k, v, log_i, log_f))
+    nc = (s + pad) // chunk
+    valid = jnp.arange(s + pad) < s  # padded steps must not touch the state
+
+    def step(state, inp):
+        c0, n0, m0 = state
+        qt, kt, vt, li, lf, ok = inp  # (b,h,dh) ×3, (b,h) ×2, ()
+        m_new = jnp.maximum(lf + m0, li)
+        i_p = jnp.exp(li - m_new)[..., None]  # (b,h,1)
+        f_p = jnp.exp(lf + m0 - m_new)[..., None]
+        c = f_p[..., None] * c0 + i_p[..., None] * jnp.einsum("bhv,bhk->bhvk", vt, kt)
+        n = f_p * n0 + i_p * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)  # (b,h,dh)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        state = (
+            jnp.where(ok, c, c0),
+            jnp.where(ok, n, n0),
+            jnp.where(ok, m_new, m0),
+        )
+        return state, num / den
+
+    @jax.checkpoint
+    def chunk_step(state, inp):
+        return jax.lax.scan(step, state, inp)
+
+    def to_chunks(x):  # (b, s, ...) -> (nc, chunk, b, ...)
+        x = jnp.moveaxis(x, 1, 0).reshape(nc, chunk, *x.shape[:1], *x.shape[2:])
+        return x
+
+    inputs = tuple(map(to_chunks, (q, k, v, log_i, log_f))) + (
+        valid.reshape(nc, chunk),
+    )
+    state, y = jax.lax.scan(chunk_step, state, inputs)
+    y = jnp.moveaxis(y.reshape(nc * chunk, b, h, dh), 0, 1)[:, :s]
+    return y, state
+
+
+def mlstm_state_init(cfg: XLSTMConfig, batch: int):
+    h, dh = cfg.n_heads, cfg.head_dim
+    return (
+        jnp.zeros((batch, h, dh, dh), jnp.float32),
+        jnp.zeros((batch, h, dh), jnp.float32),
+        jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def mlstm_forward(
+    x: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    cfg: XLSTMConfig,
+    state=None,
+    prefix: str = "",
+):
+    """(b, s, d) -> (b, s, d); returns (out, new_state)."""
+    p = prefix
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    up = x @ params[f"{p}w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)  # (b,s,di) each
+    xm = shard_act(xm, ("batch", None, "ffn"))
+
+    qf = (xm @ params[f"{p}w_q"]).reshape(b, s, h, dh).astype(jnp.float32)
+    kf = (xm @ params[f"{p}w_k"]).reshape(b, s, h, dh).astype(jnp.float32) / (dh**0.5)
+    vf = (xm @ params[f"{p}w_v"]).reshape(b, s, h, dh).astype(jnp.float32)
+    log_i = (xm @ params[f"{p}w_ig"] + params[f"{p}b_ig"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xm @ params[f"{p}w_fg"] + params[f"{p}b_fg"]).astype(jnp.float32)
+    )
+
+    if state is None:
+        state = mlstm_state_init(cfg, b)
+    y, state = _mlstm_scan(qf, kf, vf, log_i, log_f, state, cfg.chunk)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y, params[f"{p}norm_w"]) * swish(z)
+    return y @ params[f"{p}w_down"], state
+
+
+def mlstm_decode_step(x, params, cfg, state, prefix: str = ""):
+    out, state = mlstm_forward(x, params, cfg, state=state, prefix=prefix)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_param_defs(cfg: XLSTMConfig, prefix: str = "") -> Dict[str, ParamDef]:
+    p = prefix
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        f"{p}w_gates": ParamDef((d, 4 * d), ("embed", "ffn")),  # z,i,f,o pre-acts
+        f"{p}r_gates": ParamDef((h, cfg.s_head_dim, 4 * cfg.s_head_dim), ("heads", None, None), scale=0.02),
+        f"{p}b_gates": ParamDef((4 * d,), ("ffn",), init="zeros"),
+        f"{p}norm_w": ParamDef((d,), ("embed",), init="ones"),
+        f"{p}w_ff_up": ParamDef((d, cfg.d_ff_s), ("embed", "ffn")),
+        f"{p}w_ff_down": ParamDef((cfg.d_ff_s, d), ("ffn", "embed")),
+    }
+
+
+def slstm_state_init(cfg: XLSTMConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.full((batch, d), -1e30, jnp.float32), z)  # c, n, m, h
+
+
+def slstm_forward(
+    x: jnp.ndarray,
+    params: Dict[str, jnp.ndarray],
+    cfg: XLSTMConfig,
+    state=None,
+    prefix: str = "",
+):
+    """sLSTM with head-wise recurrent gate mixing + FF. (b,s,d)->(b,s,d)."""
+    p = prefix
+    b, s, d = x.shape
+    h, sdh = cfg.n_heads, cfg.s_head_dim
+    pre = x @ params[f"{p}w_gates"] + params[f"{p}b_gates"]  # (b,s,4d)
+    pre = pre.astype(jnp.float32)
+    if state is None:
+        state = slstm_state_init(cfg, b)
+
+    r_w = params[f"{p}r_gates"].astype(jnp.float32)  # (h, sdh, 4*sdh)
+
+    def step(carry, inp):
+        pre_t, ok = inp
+        c, n, m, h_prev = carry  # (b,d) each
+        rec = jnp.einsum("bhk,hkj->bhj", h_prev.reshape(b, h, sdh), r_w)
+        # rec: (b, h, 4*sdh) → interleave back to (b, 4d) gate layout per head
+        rec = rec.reshape(b, h, 4, sdh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+        g = pre_t + rec
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        carry = tuple(
+            jnp.where(ok, new, old)
+            for new, old in zip((c_new, n_new, m_new, h_new), carry)
+        )
+        return carry, h_new
+
+    @jax.checkpoint
+    def chunk_step(carry, inp):
+        return jax.lax.scan(step, carry, inp)
+
+    chunk = cfg.chunk
+    pad = (-s) % chunk
+    nc = (s + pad) // chunk
+    pre_t = jnp.moveaxis(jnp.pad(pre, ((0, 0), (0, pad), (0, 0))), 1, 0)
+    pre_c = pre_t.reshape(nc, chunk, b, 4 * d)
+    valid = (jnp.arange(s + pad) < s).reshape(nc, chunk)
+    state, ys = jax.lax.scan(chunk_step, state, (pre_c, valid))
+    y = jnp.moveaxis(ys.reshape(s + pad, b, d), 0, 1)[:, :s].astype(x.dtype)
+
+    y = rms_norm(y, params[f"{p}norm_w"])
+    ff = jax.nn.gelu(y @ params[f"{p}w_ff_up"]) @ params[f"{p}w_ff_down"]
+    return ff, state
+
+
+def slstm_decode_step(x, params, cfg, state, prefix: str = ""):
+    out, state = slstm_forward(x, params, cfg, state=state, prefix=prefix)
+    return out, state

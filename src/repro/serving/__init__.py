@@ -1,0 +1,2 @@
+from .engine import ServeEngine, StepStats
+from .sparse_exec import SparseExecution

@@ -1,0 +1,145 @@
+"""SparseExecution: the paper's runtime policy wired into the model blocks.
+
+One instance per (model config × device × policy). Model blocks call
+``mask(kind, acts)`` once per sparsifiable projection input —
+kind ∈ {hidden_attn, hidden_mlp, ffn, attn_out} mirroring the paper's
+q / gate / down / o sites (k, v, up share masks with q and gate, App. A).
+
+Everything runs inside jit: importance → utility-guided chunk selection
+(jit-compiled ``lax.while_loop`` greedy) → mask + additive-model latency.
+Latency accounts for every matrix sharing the mask (q+k+v for hidden_attn,
+gate+up for hidden_mlp) with per-matrix row sizes.
+
+Methods: "chunk" (ours), "topk" (TEAL/LLMFlash-style baseline),
+"dense" (no sparsification — full contiguous load).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.baselines import topk_mask
+from ..core.chunking import ChunkConfig, ChunkSelector
+from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profile_table
+from ..core.reorder import Reordering
+
+DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 (paper: fp16)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _Site:
+    """One sparsification site: a selector + latency tables for every matrix
+    sharing this input (e.g. q/k/v)."""
+
+    n: int
+    selector: ChunkSelector
+    tables: Tuple[LatencyTable, ...]  # one per sharing matrix
+    sparsity: float
+    dense_latency: float
+
+    def budget(self) -> jnp.ndarray:
+        return jnp.int32(round((1.0 - self.sparsity) * self.n))
+
+
+def _site(n_rows: int, out_cols: Tuple[int, ...], device, sparsity: float) -> _Site:
+    primary_rb = out_cols[0] * DTYPE_BYTES
+    cfg = ChunkConfig.for_shape(n_rows, out_cols[0],
+                                device if isinstance(device, str) else device.name)
+    selector = ChunkSelector.build(n_rows, primary_rb, device=device, cfg=cfg)
+    tables = tuple(
+        profile_table(device, c * DTYPE_BYTES, max_rows=selector.max_size)
+        for c in out_cols
+    )
+    dense = float(
+        sum(
+            get_profile(device if isinstance(device, str) else device.name)
+            .latency_bytes(n_rows * c * DTYPE_BYTES)
+            for c in out_cols
+        )
+    )
+    return _Site(n=n_rows, selector=selector, tables=tables, sparsity=sparsity,
+                 dense_latency=dense)
+
+
+class SparseExecution:
+    """sparse_ctx implementation passed into model block functions."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        device: str | DeviceProfile = "nano",
+        sparsity: float | Dict[str, float] = 0.4,
+        method: str = "chunk",
+        reorderings: Optional[Dict[str, Reordering]] = None,
+        cached: Optional[Dict[str, "jnp.ndarray"]] = None,
+    ):
+        """``cached``: per-site bool masks of neurons whose weights are
+        memory-resident (paper §5 "Leveraging Additional Memory Budget"):
+        they get ZERO importance for selection (never loaded from flash) but
+        always participate in compute. The paper notes remaining uncached
+        accesses become more scattered — making chunk selection *more*
+        valuable; `tests/test_serving.py` asserts exactly that."""
+        if method not in ("chunk", "topk", "dense"):
+            raise ValueError(f"unknown sparse method {method!r}")
+        self.cfg = cfg
+        self.method = method
+        self.reorderings = reorderings or {}
+        self.cached = cached or {}
+        sp = sparsity if isinstance(sparsity, dict) else {
+            k: float(sparsity) for k in ("hidden_attn", "hidden_mlp", "ffn", "attn_out")
+        }
+        d, hd_all = cfg.d_model, cfg.n_heads * cfg.resolved_head_dim
+        kv_all = cfg.n_kv_heads * cfg.resolved_head_dim
+        self.sites: Dict[str, _Site] = {
+            # q + k + v share the hidden-state mask
+            "hidden_attn": _site(d, (hd_all, kv_all, kv_all), device, sp["hidden_attn"]),
+            "attn_out": _site(hd_all, (d,), device, sp["attn_out"]),
+        }
+        if cfg.d_ff and not cfg.has_moe:
+            # gate + up share the hidden mask; down has its own (ffn) mask
+            self.sites["hidden_mlp"] = _site(d, (cfg.d_ff, cfg.d_ff), device, sp["hidden_mlp"])
+            self.sites["ffn"] = _site(cfg.d_ff, (d,), device, sp["ffn"])
+
+    def mask(self, kind: str, acts: jnp.ndarray):
+        """acts (..., N) → (mask (N,) float or None, est latency seconds)."""
+        site = self.sites.get(kind)
+        if site is None:
+            return None, jnp.float32(0.0)
+        if self.method == "dense":
+            return None, jnp.float32(site.dense_latency)
+
+        from ..core.importance import importance
+
+        v = importance(acts)
+        if kind in self.reorderings:
+            v = self.reorderings[kind].apply_to_acts(v)
+        cached = self.cached.get(kind)
+        if cached is not None:
+            cv = cached
+            if kind in self.reorderings:
+                cv = self.reorderings[kind].apply_to_acts(
+                    cv.astype(jnp.float32)
+                ).astype(bool)
+            v = jnp.where(cv, 0.0, v)  # resident weights cost no I/O
+
+        if self.method == "topk":
+            m = topk_mask(v, site.budget())
+        else:
+            m, _, _ = site.selector.select(v, site.budget())
+        lat = jnp.float32(0.0)
+        for t in site.tables:
+            lat += t.mask_latency(m)
+        if kind in self.reorderings:
+            # map mask back to original row order for application to acts
+            inv = jnp.asarray(self.reorderings[kind].inverse)
+            m = jnp.take(m, inv, axis=0)
+        if cached is not None:
+            m = m | cached  # cached neurons always compute, at zero I/O
+        return m.astype(jnp.float32), lat
+
+    def dense_total_latency(self) -> float:
+        """Full-load I/O latency per layer (all sites dense)."""
+        return float(sum(s.dense_latency for s in self.sites.values()))

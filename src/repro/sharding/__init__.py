@@ -1,0 +1,8 @@
+from .specs import (
+    MeshRules,
+    current_rules,
+    logical_to_spec,
+    set_rules,
+    shard_act,
+    use_rules,
+)

@@ -1,0 +1,3 @@
+from .checkpoint import apply_row_permutations, load_checkpoint, save_checkpoint
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state, lr_schedule
+from .train_step import Trainer, lm_loss

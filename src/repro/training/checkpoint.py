@@ -1,0 +1,80 @@
+"""Checkpointing: pytree ⇄ .npz + JSON manifest, with hot-cold reordering
+applied at load time (DESIGN.md §8: reordering is a checkpoint transform,
+not a file-layout rewrite).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_NATIVE = {np.float32, np.float64, np.int32, np.int64, np.int8, np.uint8,
+            np.uint32, np.uint64, np.float16, np.bool_}
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.type not in _NATIVE:
+            # bf16 etc: .npz can't round-trip ml_dtypes — store f32
+            # (lossless for bf16); manifest keeps the logical dtype and
+            # load casts back to the target leaf dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(params)
+    np.savez(os.path.join(path, "params.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a params pytree or eval_shape
+    thereof). Returns (params, step)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "params.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems
+        )
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+def apply_row_permutations(params: Any, perms: Dict[str, np.ndarray]) -> Any:
+    """Apply hot-cold reorderings at load time: perms maps a param path
+    substring → row permutation applied to dim 0 of matching leaves."""
+    def visit(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for pat, perm in perms.items():
+            if pat in key and leaf.ndim >= 2 and leaf.shape[0] == perm.shape[0]:
+                return leaf[jnp.asarray(perm)]
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)

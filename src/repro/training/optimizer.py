@@ -1,0 +1,95 @@
+"""AdamW + schedules, pure JAX (no optax dependency offline).
+
+Optimizer state is a pytree matching params: {m, v} in float32 ("master"
+moments), plus a scalar step. Weight decay is decoupled (AdamW). Global-norm
+gradient clipping included. All ops are elementwise → shard exactly like the
+params they track (FSDP-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any  # pytree like params, f32
+    v: Any  # pytree like params, f32
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def _decay_mask(path: Tuple, leaf) -> bool:
+    """No weight decay for norms/biases/1-D params (standard practice)."""
+    return leaf.ndim >= 2
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: OptState
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        if _decay_mask((), p):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * update
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

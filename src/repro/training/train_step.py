@@ -1,0 +1,107 @@
+"""Training step: chunked cross-entropy LM loss + AdamW, pjit-ready.
+
+The chunked loss scans over sequence chunks, materializing logits for at most
+``loss_chunk`` positions at a time — at llama4-scout's 202k vocab this is the
+difference between a ~26 GB and a ~0.4 GB peak logits buffer per device
+(DESIGN.md §5).
+
+Alignment (``text_offset``): early-fusion VLMs prepend ``n_front`` visual
+positions to the residual stream; token t is predicted from hidden position
+``n_front + t - 1``. For plain LMs (offset 0) this reduces to the standard
+shift-by-one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..sharding import shard_act
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+
+def _chunked_softmax_xent(
+    hidden: jnp.ndarray,  # (b, s_tok, d) hidden states aligned with targets
+    targets: jnp.ndarray,  # (b, s_tok) int32
+    head: jnp.ndarray,  # (d, V)
+    loss_chunk: int,
+) -> jnp.ndarray:
+    b, s, d = hidden.shape
+    pad = (-s) % loss_chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nc = (s + pad) // loss_chunk
+    hid_c = hidden.reshape(b, nc, loss_chunk, d).transpose(1, 0, 2, 3)
+    tgt_c = targets.reshape(b, nc, loss_chunk).transpose(1, 0, 2)
+    valid_c = (
+        (jnp.arange(s + pad) < s).reshape(nc, loss_chunk)[:, None, :]
+    )  # (nc,1,chunk)
+
+    def body(total, inp):
+        h, t, ok = inp
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)  # (b,chunk,V)
+        logits = shard_act(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ok
+        return total + nll.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hid_c, tgt_c, valid_c))
+    return total / (b * s)
+
+
+def lm_loss(
+    model: Model, params: Any, batch: Dict[str, jnp.ndarray], loss_chunk: int = 512
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE over the token positions (+ MoE aux)."""
+    hidden, aux = model.forward(params, batch)
+    tokens = batch["tokens"]
+    offset = 0
+    if (not model.cfg.is_encdec) and "frontend" in batch:
+        offset = batch["frontend"].shape[1]
+    if offset > 0:
+        # predict tokens[t] from hidden[offset + t - 1], all t
+        hid = jax.lax.dynamic_slice_in_dim(hidden, offset - 1, tokens.shape[1], axis=1)
+        tgt = tokens
+    else:
+        hid = hidden[:, :-1]
+        tgt = tokens[:, 1:]
+    head = params["embed"].T if model.cfg.tie_embeddings else params["head"]
+    ce = _chunked_softmax_xent(hid, tgt, head, loss_chunk)
+    return ce + aux, {"ce": ce, "moe_aux": aux}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Trainer:
+    """Bundles model + optimizer config into a jit-able train_step."""
+
+    model: Model
+    opt: AdamWConfig = AdamWConfig()
+    loss_chunk: int = 512
+
+    def init_state(self, key) -> Tuple[Any, OptState]:
+        from .optimizer import init_opt_state
+
+        params = self.model.init(key)
+        return params, init_opt_state(params)
+
+    def train_step(
+        self, params: Any, opt_state: OptState, batch: Dict[str, jnp.ndarray]
+    ):
+        """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+        def loss_fn(p):
+            return lm_loss(self.model, p, batch, self.loss_chunk)
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(self.opt, params, grads, opt_state)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return params, opt_state, metrics
+
+    def jit_train_step(self, donate: bool = True):
+        return jax.jit(self.train_step, donate_argnums=(0, 1) if donate else ())

@@ -1,0 +1,68 @@
+"""Contiguity-distribution abstraction (paper §3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Chunk,
+    average_chunk_size_jax,
+    chunk_stats_np,
+    chunks_to_mask_np,
+    contiguity_distribution_np,
+    contiguity_histogram_jax,
+    mask_to_chunks_np,
+    mask_to_runs_jax,
+)
+
+
+def test_paper_example():
+    """Selecting {1,2,4,6,7} yields chunks {1,2},{4},{6,7} (paper §3)."""
+    mask = np.zeros(8, bool)
+    mask[[1, 2, 4, 6, 7]] = True
+    chunks = mask_to_chunks_np(mask)
+    assert chunks == [Chunk(1, 2), Chunk(4, 1), Chunk(6, 2)]
+    assert contiguity_distribution_np(mask) == {2: 2, 1: 1}
+
+
+def test_empty_and_full():
+    assert mask_to_chunks_np(np.zeros(5, bool)) == []
+    assert mask_to_chunks_np(np.ones(5, bool)) == [Chunk(0, 5)]
+    assert chunk_stats_np(np.zeros(4, bool)) == (0.0, 0)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_np(bits):
+    mask = np.asarray(bits, bool)
+    chunks = mask_to_chunks_np(mask)
+    back = chunks_to_mask_np(chunks, len(mask))
+    assert (back == mask).all()
+    # chunks are maximal: no two adjacent
+    for a, b in zip(chunks, chunks[1:]):
+        assert a.stop < b.start
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=128))
+@settings(max_examples=60, deadline=None)
+def test_jax_matches_np(bits):
+    mask = np.asarray(bits, bool)
+    starts, sizes, n = mask_to_runs_jax(jnp.asarray(mask))
+    n = int(n)
+    got = [Chunk(int(s), int(z)) for s, z in zip(starts[:n], sizes[:n])]
+    assert got == mask_to_chunks_np(mask)
+    # histogram count equals number of chunks; weighted sum = popcount
+    hist = np.asarray(contiguity_histogram_jax(jnp.asarray(mask), len(mask)))
+    assert hist.sum() == len(got)
+    assert (hist * np.arange(len(hist))).sum() == mask.sum()
+
+
+def test_average_chunk_size_jax():
+    mask = np.zeros(10, bool)
+    mask[[0, 1, 2, 5, 6, 9]] = True  # sizes 3, 2, 1
+    assert float(average_chunk_size_jax(jnp.asarray(mask))) == pytest.approx(2.0)
+
+
+def test_overlapping_chunks_rejected():
+    with pytest.raises(ValueError):
+        chunks_to_mask_np([Chunk(0, 3), Chunk(2, 2)], 8)

@@ -1,0 +1,175 @@
+"""Importance, TEAL-style allocation, reordering, baselines, offload sim."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FlashOffloadSimulator,
+    LayerProfile,
+    Reordering,
+    activation_frequency,
+    allocate_sparsity,
+    budgets_from_sparsity,
+    bundled_latency,
+    calibrate_threshold,
+    chunk_stats_np,
+    coactivation_reordering,
+    coefficient_of_variation,
+    hot_cold_reordering,
+    importance,
+    importance_np,
+    retention,
+    threshold_mask,
+    topk_mask,
+    topk_mask_np,
+    unbundled_latency,
+)
+
+# ---------------------------------------------------------------- importance
+
+
+def test_importance_multi_token_average(rng):
+    acts = rng.normal(0, 1, (4, 8, 16)).astype(np.float32)  # (b, s, n)
+    v = np.asarray(importance(jnp.asarray(acts)))
+    want = np.abs(acts).reshape(-1, 16).mean(0)
+    np.testing.assert_allclose(v, want, rtol=1e-5)
+    np.testing.assert_allclose(importance_np(acts), want, rtol=1e-5)
+
+
+def test_cv_separates_relu_from_vlm(rng):
+    """Table 1's phenomenon: ReLU-like (spiky) ≫ gated (smooth) CV."""
+    smooth = rng.gamma(4.0, 1.0, 4096)  # SwiGLU-ish magnitude profile
+    spiky = np.where(rng.random(4096) < 0.05, rng.gamma(4.0, 10.0, 4096), 1e-3)
+    cv_s = float(coefficient_of_variation(jnp.asarray(smooth)))
+    cv_p = float(coefficient_of_variation(jnp.asarray(spiky)))
+    assert cv_p > 3 * cv_s
+
+
+def test_retention_bounds(rng):
+    v = jnp.asarray(rng.random(64).astype(np.float32))
+    assert float(retention(v, jnp.ones(64, bool))) == pytest.approx(1.0)
+    assert float(retention(v, jnp.zeros(64, bool))) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------- allocation
+
+
+def test_teal_allocation_hits_target(rng):
+    profiles = [
+        LayerProfile(f"l{i}", rng.gamma(1.0 + i, 1.0, 256).astype(np.float32))
+        for i in range(4)
+    ]
+    alloc = allocate_sparsity(profiles, target_sparsity=0.4, step=0.05)
+    assert np.mean(list(alloc.values())) == pytest.approx(0.4, abs=0.011)
+    budgets = budgets_from_sparsity(alloc, {f"l{i}": 256 for i in range(4)})
+    assert all(0 < b <= 256 for b in budgets.values())
+
+
+def test_teal_allocation_prefers_skewed_layers():
+    """A layer whose mass concentrates in few neurons absorbs more sparsity."""
+    n = 512
+    skewed = np.zeros(n, np.float32)
+    skewed[:16] = 100.0
+    flat = np.ones(n, np.float32)
+    alloc = allocate_sparsity(
+        [LayerProfile("skewed", skewed), LayerProfile("flat", flat)],
+        target_sparsity=0.3,
+    )
+    assert alloc["skewed"] > alloc["flat"]
+
+
+# ---------------------------------------------------------------- reordering
+
+
+def test_hot_cold_reordering_roundtrip(rng):
+    cal = rng.random((32, 64)).astype(np.float32)
+    r = hot_cold_reordering(cal)
+    w = rng.normal(0, 1, (64, 16))
+    a = rng.normal(0, 1, (64,)).astype(np.float32)
+    y_orig = a @ w
+    y_perm = np.asarray(r.apply_to_acts(jnp.asarray(a))) @ r.apply_to_rows(w)
+    np.testing.assert_allclose(y_orig, y_perm, rtol=1e-5)
+    assert (r.perm[r.inverse] == np.arange(64)).all()
+
+
+def test_hot_cold_improves_contiguity():
+    """§3.3: with stable hot/cold structure, reordering clusters the hot set."""
+    rng = np.random.default_rng(1)
+    n, s = 256, 64
+    hot = rng.permutation(n)[: n // 2]  # scattered hot neurons
+    cal = rng.random((s, n)).astype(np.float32) * 0.1
+    cal[:, hot] += 1.0
+    r = hot_cold_reordering(cal)
+    v = cal.mean(0)
+    mask_before = topk_mask_np(v, n // 2)
+    mask_after = topk_mask_np(v[r.perm], n // 2)
+    assert chunk_stats_np(mask_after)[0] > 5 * chunk_stats_np(mask_before)[0]
+
+
+def test_coactivation_reordering_valid_permutation(rng):
+    cal = rng.random((16, 48)).astype(np.float32)
+    r = coactivation_reordering(cal)
+    assert sorted(r.perm.tolist()) == list(range(48))
+
+
+def test_activation_frequency_range(rng):
+    freq = activation_frequency(rng.random((20, 30)).astype(np.float32))
+    assert freq.shape == (30,)
+    assert ((0 <= freq) & (freq <= 1)).all()
+    assert freq.mean() == pytest.approx(0.5, abs=0.05)  # top-50% definition
+
+
+# ---------------------------------------------------------------- baselines
+
+
+def test_topk_np_jax_agree(rng):
+    v = rng.random(128).astype(np.float32)
+    m_np = topk_mask_np(v, 40)
+    m_j = np.asarray(topk_mask(jnp.asarray(v), jnp.int32(40)))
+    assert (m_np == m_j).all()
+    assert m_np.sum() == 40
+
+
+def test_threshold_calibration(rng):
+    cal = rng.random((100, 64)).astype(np.float32)
+    t = calibrate_threshold(cal, sparsity=0.7)
+    m = np.asarray(threshold_mask(jnp.asarray(cal[0]), t))
+    assert 0.1 < m.mean() < 0.5  # ~30% kept on average
+
+
+def test_bundling_beats_separate_loads_for_same_mask(rng):
+    """App. L: bundling q/k/v rows turns 3 scattered reads into 1."""
+    mask = np.zeros(512, bool)
+    mask[rng.permutation(512)[:128]] = True
+    sep = unbundled_latency(mask, row_bytes=2048, n_matrices=3, device="nano")
+    bun = bundled_latency(mask, row_bytes=2048, bundle=3, device="nano")
+    assert bun < sep
+
+
+# ---------------------------------------------------------------- offload sim
+
+
+def test_simulator_proportional_lift(rng):
+    sim = FlashOffloadSimulator("nano", seed=0, noise=0.02)
+    mask = np.zeros(1024, bool)
+    mask[:256] = True
+    mask[512:768] = True
+    est = sim.estimate(mask, 2048)
+    meas = np.mean([sim.measure(mask, 2048) for _ in range(50)])
+    lift = meas / est
+    assert 1.0 < lift < 1.8  # Fig. 5: proportional, device-dependent bias
+    assert sim.total_io_seconds() > 0
+    sim.reset()
+    assert sim.total_io_seconds() == 0
+
+
+def test_simulator_fragmention_penalty(rng):
+    """Fig. 4b: same bytes, scattered pattern much slower."""
+    sim = FlashOffloadSimulator("agx", seed=1)
+    n = 2048
+    contig = np.zeros(n, bool)
+    contig[:1024] = True
+    scattered = np.zeros(n, bool)
+    scattered[::2] = True  # same popcount, all size-1 chunks
+    assert sim.estimate(scattered, 4096) > 5 * sim.estimate(contig, 4096)

@@ -1,0 +1,71 @@
+"""Dry-run tooling: HLO collective parser + input geometry."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+from repro.models.inputs import input_specs, make_dummy_batch
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[128,128]{1,0} all-gather(%p), replica_groups={}, dimensions={0}
+  %ar = f32[64]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[4,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = (f32[16]{0}, f32[16]{0}) all-to-all(%a, %b)
+  %cp = u32[2]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %ags = bf16[256]{0} all-gather-start(%p2)
+  %agd = bf16[256]{0} all-gather-done(%ags)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("(f32[16], f32[16])") == 128
+    assert _shape_bytes("u32[2]") == 8
+    assert _shape_bytes("f32[]") == 4  # scalar
+
+
+def test_collective_parser():
+    got = collective_bytes(HLO_SAMPLE)
+    pk = got["per_kind_bytes"]
+    assert pk["all-gather"] == 128 * 128 * 2 + 256 * 2  # incl. -start, not -done
+    assert pk["all-reduce"] == 64 * 4
+    assert pk["reduce-scatter"] == 4 * 128 * 2
+    assert pk["all-to-all"] == 2 * 16 * 4
+    assert pk["collective-permute"] == 8
+    assert got["total_bytes"] == sum(pk.values())
+
+
+@pytest.mark.parametrize("shape_name", sorted(SHAPES))
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "internvl2-76b", "whisper-small"])
+def test_input_specs_geometry(arch, shape_name):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    specs = input_specs(cfg, shape)
+    if shape.is_decode:
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+    else:
+        total = sum(
+            s.shape[1] for k, s in specs.items()
+            if k == "tokens" or (cfg.d_frontend and not cfg.is_encdec and k == "frontend")
+        )
+        if cfg.is_encdec:
+            assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+            assert specs["frontend"].shape[1] == cfg.frontend_tokens
+        else:
+            assert total == shape.seq_len  # early fusion sums to S
+
+
+def test_dummy_batch_matches_specs():
+    cfg = get_config("internvl2-76b")
+    shape = get_shape("train_4k")
+    specs = input_specs(cfg, shape)
+    batch = make_dummy_batch(cfg, shape)
+    for k, s in specs.items():
+        assert batch[k].shape == s.shape and batch[k].dtype == s.dtype
+    assert int(jnp.max(batch["tokens"])) < cfg.vocab_size

@@ -1,0 +1,81 @@
+"""Trip-count-aware HLO analyzer (launch/hlo_analysis.py) — the roofline's
+measurement instrument, so it gets its own oracle tests."""
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_module
+
+HLO = """
+HloModule test
+
+%fused_computation (param_0: f32[8,16], param_1: f32[16,32]) -> f32[8,32] {
+  %param_0 = f32[8,16]{1,0} parameter(0)
+  %param_1 = f32[16,32]{1,0} parameter(1)
+  ROOT %dot.9 = f32[8,32]{1,0} dot(%param_0, %param_1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body (p: (s32[], f32[8,16], f32[16,32], f32[8,32])) -> (s32[], f32[8,16], f32[16,32], f32[8,32]) {
+  %p = (s32[], f32[8,16], f32[16,32], f32[8,32]) parameter(0)
+  %gte0 = s32[] get-tuple-element(%p), index=0
+  %gte1 = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %gte2 = f32[16,32]{1,0} get-tuple-element(%p), index=2
+  %fusion.1 = f32[8,32]{1,0} fusion(%gte1, %gte2), kind=kLoop, calls=%fused_computation
+  %ar = f32[8,32]{1,0} all-reduce(%fusion.1), to_apply=%add
+  ROOT %tup = (s32[], f32[8,16], f32[16,32], f32[8,32]) tuple(%gte0, %gte1, %gte2, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16], f32[16,32], f32[8,32])) -> pred[] {
+  %p2 = (s32[], f32[8,16], f32[16,32], f32[8,32]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %a = f32[] add(%x, %y)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,32]{1,0} parameter(1)
+  %init = (s32[], f32[8,16], f32[16,32], f32[8,32]) tuple(%a, %a, %b, %a)
+  %w = (s32[], f32[8,16], f32[16,32], f32[8,32]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %dot.top = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,32]{1,0} get-tuple-element(%w), index=3
+}
+"""
+
+
+def test_parse_module_structure():
+    comps, entry = parse_module(HLO)
+    assert entry == "main"
+    assert set(comps) >= {"main", "body", "cond", "add", "fused_computation"}
+    assert comps["fused_computation"].is_fusion_body
+
+
+def test_trip_count_multiplied_flops():
+    a = analyze_hlo(HLO)
+    # dot inside the while body's fusion: 2*8*32*16 = 8192 flops × 10 trips,
+    # plus the top-level dot once.
+    assert a["flops"] == pytest.approx(8192 * 10 + 8192)
+
+
+def test_collectives_multiplied():
+    a = analyze_hlo(HLO)
+    # all-reduce result f32[8,32] = 1024 B × 10 trips
+    assert a["collective_bytes"] == pytest.approx(1024 * 10)
+    assert a["collective_per_kind"]["all-reduce"] == pytest.approx(1024 * 10)
+
+
+def test_memory_counts_fusion_boundary_not_internals():
+    a = analyze_hlo(HLO)
+    # fusion call site contributes (out + operands) per trip; the dot inside
+    # the fusion body must not also be counted as memory traffic.
+    # fusion: out 8*32*4 + in 8*16*4 + 16*32*4 = 1024+512+2048 = 3584 × 10
+    assert a["bytes"] >= 3584 * 10
+    comps, _ = parse_module(HLO)
+    # sanity: entry dot counted once in flops (already covered above)
+
+
+def test_malformed_hlo_graceful():
+    out = analyze_hlo("not an hlo module at all")
+    assert out["flops"] == 0.0 and out.get("parse_error") == 1.0

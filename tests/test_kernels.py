@@ -1,0 +1,98 @@
+"""Pallas kernel validation: shape/dtype sweeps + property tests vs ref.py
+oracles, executed in interpret mode (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.contiguity import mask_to_chunks_np
+from repro.kernels import (
+    align_chunk_table,
+    chunk_gather_matmul_ref,
+    chunk_gather_swiglu_ref,
+    chunk_table_to_mask,
+    plan_to_kernel_table,
+    sparse_matmul,
+    sparse_swiglu,
+)
+
+SHAPES = [(128, 128, 1), (256, 256, 4), (512, 384, 2), (64, 128, 8)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rel_err(a, b):
+    denom = max(1.0, float(jnp.max(jnp.abs(b))))
+    return float(jnp.max(jnp.abs(a - b))) / denom
+
+
+@pytest.mark.parametrize("n,d,b", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chunk_gather_matmul_sweep(n, d, b, dtype, rng):
+    w = jnp.asarray(rng.normal(0, 1, (n, d)), dtype)
+    x = jnp.asarray(rng.normal(0, 1, (b, n)), dtype)
+    mask = rng.random(n) < 0.5
+    s, z = plan_to_kernel_table(mask, block_rows=8, max_chunks=max(n // 8, 1),
+                                max_chunk_rows=64)
+    y = sparse_matmul(w, x, jnp.asarray(s), jnp.asarray(z),
+                      tile_d=128, max_chunk_rows=64)
+    yref = chunk_gather_matmul_ref(w, x, s, z)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert _rel_err(y, yref) < tol
+
+
+@pytest.mark.parametrize("n,f,b", [(128, 128, 1), (256, 256, 4)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chunk_gather_swiglu_sweep(n, f, b, dtype, rng):
+    wg = jnp.asarray(rng.normal(0, 1, (n, f)), dtype)
+    wu = jnp.asarray(rng.normal(0, 1, (n, f)), dtype)
+    x = jnp.asarray(rng.normal(0, 1, (b, n)), dtype)
+    mask = rng.random(n) < 0.4
+    s, z = plan_to_kernel_table(mask, block_rows=8, max_chunks=max(n // 8, 1),
+                                max_chunk_rows=64)
+    y = sparse_swiglu(wg, wu, x, jnp.asarray(s), jnp.asarray(z),
+                      tile_f=128, max_chunk_rows=64)
+    yref = chunk_gather_swiglu_ref(wg, wu, x, s, z)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert _rel_err(y, yref) < tol
+
+
+def test_empty_plan_gives_zeros(rng):
+    w = jnp.asarray(rng.normal(0, 1, (64, 128)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64)), jnp.float32)
+    s = jnp.zeros((4,), jnp.int32)
+    z = jnp.zeros((4,), jnp.int32)
+    y = sparse_matmul(w, x, s, z, tile_d=128, max_chunk_rows=32)
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+
+
+def test_full_plan_equals_dense(rng):
+    n, d, b = 128, 128, 3
+    w = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (b, n)), jnp.float32)
+    s, z = plan_to_kernel_table(np.ones(n, bool), block_rows=8,
+                                max_chunks=n // 8, max_chunk_rows=64)
+    y = sparse_matmul(w, x, jnp.asarray(s), jnp.asarray(z),
+                      tile_d=128, max_chunk_rows=64)
+    dense = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    assert _rel_err(y, dense) < 1e-5
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_align_chunk_table_properties(seed, density):
+    """Alignment covers the original selection, is block-aligned, within
+    max_chunk_rows, and non-overlapping."""
+    rng = np.random.default_rng(seed)
+    n, br, mc = 256, 8, 64
+    mask = rng.random(n) < density
+    chunks = mask_to_chunks_np(mask)
+    s0 = np.asarray([c.start for c in chunks], np.int32)
+    z0 = np.asarray([c.size for c in chunks], np.int32)
+    s, z = align_chunk_table(s0, z0, br, n, max_chunk_rows=mc)
+    covered = np.asarray(chunk_table_to_mask(s, z, n))
+    assert (covered | ~mask).all()  # superset of the selection
+    assert (s % br == 0).all() and (z % br == 0).all()
+    assert (z <= mc).all() and (z > 0).all() if len(z) else True
+    ends = s + z
+    assert (s[1:] >= ends[:-1]).all() if len(s) > 1 else True

@@ -1,0 +1,108 @@
+"""MeshRules resolution logic + real sharded execution on a small host-device
+mesh (subprocess so the 512-device dry-run flag never leaks into this
+process's single-device tests)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+
+def _rules(shape=(2, 2), axes=("data", "model"), fsdp=False):
+    import os
+
+    # rules resolution is pure metadata — a 1-device mesh suffices via
+    # jax.make_mesh only when sizes match; use Mesh over a numpy grid of
+    # the single device replicated? Not possible. Test the logic with a
+    # fake mesh-like object instead.
+    class FakeMesh:
+        def __init__(self, shape, axes):
+            self.axis_names = axes
+            self.shape = dict(zip(axes, shape))
+
+    from repro.sharding.specs import MeshRules
+
+    mesh = FakeMesh(shape, axes)
+    return MeshRules.for_mesh(mesh, fsdp=fsdp)  # type: ignore[arg-type]
+
+
+def test_divisibility_dropping():
+    rules = _rules((4, 16))
+    # 36 heads % 16 → replicated; 64 → sharded
+    assert rules.spec(("batch", None, "heads", None), (8, 1, 36, 128)) == P("data")
+    assert rules.spec(("batch", None, "heads", None), (8, 1, 64, 128)) == P(
+        "data", None, "model"
+    )
+
+
+def test_cache_seq_fallback():
+    rules = _rules((16, 16))
+    # kv=8 can't take model(16) → cache_seq picks it up
+    spec = rules.spec(
+        ("layer", "batch", "cache_seq", "cache_kv_heads", "head_dim"),
+        (22, 128, 32768, 8, 64),
+    )
+    assert spec == P(None, "data", "model")
+    # kv=16 divides → kv gets model, seq stays unsharded
+    spec2 = rules.spec(
+        ("layer", "batch", "cache_seq", "cache_kv_heads", "head_dim"),
+        (22, 128, 32768, 16, 64),
+    )
+    assert spec2 == P(None, "data", None, "model")
+
+
+def test_no_axis_reuse():
+    rules = _rules((2, 2))
+    # two dims both wanting 'model': only the first gets it
+    spec = rules.spec(("heads", "ffn"), (4, 8))
+    assert spec == P("model")  # trailing None trimmed
+
+
+def test_multipod_batch_axes():
+    rules = _rules((2, 16, 16), axes=("pod", "data", "model"))
+    assert rules.spec(("batch", None), (256, 4096)) == P(("pod", "data"))
+    # batch=1 (long_500k): replicated
+    assert rules.spec(("batch", None), (1, 1)) == P()
+
+
+def test_fsdp_embed():
+    rules = _rules((16, 16), fsdp=True)
+    assert rules.spec(("embed", "ffn"), (8192, 28672)) == P("data", "model")
+    no_fsdp = _rules((16, 16), fsdp=False)
+    assert no_fsdp.spec(("embed", "ffn"), (8192, 28672)) == P(None, "model")
+
+
+SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.launch.dryrun import run_dryrun, collective_bytes
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+rep = run_dryrun("tinyllama-1.1b", "train_4k", mesh=mesh, verbose=False)
+assert rep["flops_per_device"] and rep["flops_per_device"] > 0
+assert rep["collectives"]["total_bytes"] > 0, "train step must communicate"
+rep2 = run_dryrun("olmoe-1b-7b", "decode_32k", mesh=mesh, verbose=False)
+assert rep2["flops_per_device"] > 0
+print("SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_real_sharded_lowering_small_mesh():
+    """Real lower+compile on an 8-host-device (2,2,2) mesh in a subprocess."""
+    out = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=540,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr

@@ -31,6 +31,7 @@ def main() -> None:
         fig10_contiguity,
         fig13_overhead,
         roofline,
+        serve_throughput,
         table1_cv,
         table3_bundling,
     )
@@ -51,6 +52,7 @@ def main() -> None:
         "appn": appn_llm,
         "disc5": disc5_caching,
         "roofline": roofline,
+        "serve": serve_throughput,
     }
     selected = sys.argv[1:] or list(modules)
     rows = Rows()

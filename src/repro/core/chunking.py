@@ -61,8 +61,14 @@ class ChunkConfig:
     @staticmethod
     def for_shape(rows: int, cols: int, device: str = "nano") -> "ChunkConfig":
         """Heuristic from the paper's Table 2: bigger matrices → coarser
-        start size / jump cap to stay under the 2 ms selection budget."""
-        max_kb = 236.0 if device in ("agx", "jetson_agx_990pro") else 348.0
+        start size / jump cap to stay under the 2 ms selection budget.
+
+        The max chunk size is the device's throughput-saturation point
+        (§3.2.2): AGX + 990 Pro saturates later (knee ≈ 34.7 KB → 348 KB
+        cap) than Nano + P31 (knee ≈ 23.9 KB → 236 KB cap, the class
+        default); the 348/236 ratio matches the knee-bytes ratio of the two
+        profiles in ``latency_model.py``."""
+        max_kb = 348.0 if device in ("agx", "jetson_agx_990pro") else 236.0
         if rows >= 16384:
             start = 32.0
         elif rows >= 8192:

@@ -99,6 +99,40 @@ class FlashOffloadSimulator:
         self.log.append(IOEvent(name=name, nbytes=0, n_chunks=n_chunks, latency_s=latency))
         return latency
 
+    def measure_from_estimate_batch(
+        self,
+        est_s: np.ndarray,
+        n_chunks: int = 32,
+        diversity: float = 0.5,
+        name: str = "",
+    ) -> np.ndarray:
+        """Vectorized ``measure_from_estimate`` for the scan-fused decode
+        path: one call consumes the whole (n_steps,) on-device estimate
+        array in a single host round-trip. Zero estimates (plan-reuse steps,
+        dense_free) stay exactly zero and draw no jitter. Appends one IOEvent
+        per step, matching the per-token path's log granularity."""
+        est = np.asarray(est_s, dtype=np.float64).reshape(-1)
+        lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
+        # consume the RNG stream and the event log exactly as the scalar
+        # path would: one draw + one IOEvent per POSITIVE estimate, in order
+        pos = est > 0.0
+        jitter = np.ones_like(est)
+        jitter[pos] = self.rng.lognormal(
+            mean=0.0, sigma=self.noise, size=int(pos.sum())
+        )
+        latency = np.where(pos, est * lift * jitter, 0.0)
+        for i, lat in enumerate(latency):
+            if pos[i]:
+                self.log.append(
+                    IOEvent(
+                        name=f"{name}[{i}]" if name else name,
+                        nbytes=0,
+                        n_chunks=n_chunks,
+                        latency_s=float(lat),
+                    )
+                )
+        return latency
+
     def measure_full_load(self, n_rows: int, row_bytes: int, name: str = "") -> float:
         """Dense (no sparsification) load: one saturating sequential read."""
         return self.measure_chunks([Chunk(0, n_rows)], row_bytes, name=name)

@@ -182,6 +182,8 @@ def run_dryrun(
         t_compile = time.time() - t0 - t_lower
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older JAX: one dict per device
+            cost = cost[0] if cost else {}
         try:
             mem = compiled.memory_analysis()
             mem_stats = {

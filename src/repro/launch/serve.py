@@ -1,8 +1,15 @@
 """Serving launcher: streaming-VLM (or plain LLM) inference with the
 neuron-chunking policy and flash-offload simulation.
 
+Single-stream mode (prefill → frames → fused decode):
+
   PYTHONPATH=src python -m repro.launch.serve --arch internvl2-76b --reduced \
       --method chunk --sparsity 0.4 --frames 4 --decode-tokens 16
+
+Continuous-batching mode (Poisson arrivals over request slots):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+      --streams 8 --arrival-rate 100 --method chunk
 """
 from __future__ import annotations
 
@@ -16,14 +23,20 @@ from ..configs import ARCH_IDS, get_config
 from ..configs.base import InputShape
 from ..models import build_model
 from ..models.inputs import make_dummy_batch
-from ..serving import ServeEngine
+from ..serving import (
+    SERVE_METHODS,
+    PoissonArrivalDriver,
+    Request,
+    Scheduler,
+    ServeEngine,
+)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="internvl2-76b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--method", choices=("dense", "topk", "chunk"), default="chunk")
+    ap.add_argument("--method", choices=SERVE_METHODS, default="chunk")
     ap.add_argument("--sparsity", type=float, default=0.4)
     ap.add_argument("--device", choices=("nano", "agx"), default="nano")
     ap.add_argument("--batch", type=int, default=2)
@@ -31,6 +44,18 @@ def main():
     ap.add_argument("--frames", type=int, default=2)
     ap.add_argument("--decode-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--plan-refresh-interval", type=int, default=1,
+                    help="recompute chunk selection every k decode steps; "
+                         "reuse the resident plan in between")
+    ap.add_argument("--per-token", action="store_true",
+                    help="use the legacy one-jit-per-token decode loop "
+                         "instead of the fused lax.scan loop")
+    ap.add_argument("--streams", type=int, default=0,
+                    help=">0: continuous-batching mode — serve this many "
+                         "Poisson-arriving requests through --batch slots")
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="request arrival rate (requests/sec, sim clock)")
+    ap.add_argument("--round-tokens", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -40,7 +65,12 @@ def main():
     params = model.init(jax.random.key(0))
     eng = ServeEngine(model, params, max_seq=args.max_seq, batch_size=args.batch,
                       device=args.device, sparsity=args.sparsity,
-                      method=args.method)
+                      method=args.method,
+                      plan_refresh_interval=args.plan_refresh_interval)
+
+    if args.streams > 0:
+        _serve_streams(args, cfg, eng)
+        return
 
     shape = InputShape("cli", args.prompt_len, args.batch, "train")
     batch = make_dummy_batch(cfg, shape)
@@ -58,13 +88,42 @@ def main():
             print(f"[frame {i}] {n_tok} tokens  io_est {st.io_est_s*1e3:.2f} ms  "
                   f"io_sim {st.io_sim_s*1e3:.2f} ms")
     tok0 = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
-    out = eng.decode(tok0, args.decode_tokens)
+    decode = eng.decode_per_token if args.per_token else eng.decode
+    out = decode(tok0, args.decode_tokens)
     dsteps = [s for s in eng.stats if s.kind == "decode"]
-    print(f"[decode] {args.decode_tokens} tokens  "
-          f"mean io_sim {np.mean([s.io_sim_s for s in dsteps])*1e3:.2f} ms/token")
+    mode = "per-token" if args.per_token else "fused-scan"
+    print(f"[decode:{mode}] {args.decode_tokens} tokens  "
+          f"mean io_sim {np.mean([s.io_sim_s for s in dsteps])*1e3:.2f} ms/token  "
+          f"wall {sum(s.wall_s for s in dsteps)*1e3:.1f} ms")
     s = eng.io_summary()
     print(f"[total] method={args.method} sparsity={args.sparsity} "
+          f"refresh_interval={args.plan_refresh_interval} "
           f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms")
+
+
+def _serve_streams(args, cfg, eng):
+    """Continuous-batching mode: Poisson arrivals into request slots."""
+    rng = np.random.default_rng(0)
+
+    def make_request(rid: int) -> Request:
+        batch = make_dummy_batch(cfg, InputShape("req", args.prompt_len, 1, "train"))
+        # vary prompts so streams are not identical
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, batch["tokens"].shape), jnp.int32
+        )
+        prompt = dict(batch)
+        prompt["tokens"] = toks
+        return Request(rid=rid, prompt=prompt, max_new_tokens=args.decode_tokens)
+
+    driver = PoissonArrivalDriver(args.arrival_rate, make_request, seed=1)
+    sched = Scheduler(eng, round_tokens=args.round_tokens)
+    sched.submit(driver.generate(args.streams))
+    stats = sched.run()
+    print(f"[serve] method={args.method} slots={args.batch} "
+          f"rate={args.arrival_rate}/s refresh={args.plan_refresh_interval}")
+    print(f"[serve] {stats.row()}")
+    print(f"[serve] ttft p50 {stats.ttft_p50_s*1e3:.2f} ms  "
+          f"sim time {stats.sim_time_s*1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -285,13 +285,20 @@ def cache_layer_update(
     layer_v: jnp.ndarray,
     new_k: jnp.ndarray,  # (b, 1, kv, hd) decode step
     new_v: jnp.ndarray,
-    length: jnp.ndarray,  # tokens already in cache
+    length: jnp.ndarray,  # tokens already in cache: scalar, or (b,) per-slot
     window: Optional[int],
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     phys = layer_k.shape[1]
     slot = length % phys if window else jnp.minimum(length, phys - 1)
-    k = jax.lax.dynamic_update_slice(layer_k, new_k, (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(layer_v, new_v, (0, slot, 0, 0))
+    if length.ndim == 0:
+        k = jax.lax.dynamic_update_slice(layer_k, new_k, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(layer_v, new_v, (0, slot, 0, 0))
+    else:
+        # continuous batching: each batch row is an independent request with
+        # its own write position
+        rows = jnp.arange(layer_k.shape[0])
+        k = layer_k.at[rows, slot].set(new_k[:, 0])
+        v = layer_v.at[rows, slot].set(new_v[:, 0])
     return k, v
 
 
@@ -300,7 +307,7 @@ def decode_attention(
     params: Dict[str, jnp.ndarray],
     layer_k: jnp.ndarray,  # (b, P, kv, hd) cache AFTER update
     layer_v: jnp.ndarray,
-    length: jnp.ndarray,  # logical length INCLUDING current token
+    length: jnp.ndarray,  # logical length INCLUDING current token; () or (b,)
     n_heads: int,
     n_kv_heads: int,
     head_dim: int,
@@ -309,13 +316,16 @@ def decode_attention(
     prefix: str = "",
     project_out: bool = True,
 ) -> jnp.ndarray:
-    """Single-token attention against a (possibly rotating) cache."""
+    """Single-token attention against a (possibly rotating) cache.
+
+    ``length`` may be a scalar (whole batch at the same position) or a (b,)
+    vector (continuous batching: one independent request per batch row)."""
     b, one, d = x.shape
     p = prefix
     phys = layer_k.shape[1]
     q = (x @ params[f"{p}wq"]).reshape(b, 1, n_heads, head_dim)
     if rope_theta is not None:
-        pos = jnp.broadcast_to((length - 1)[None, None], (b, 1))
+        pos = jnp.broadcast_to(jnp.reshape(length - 1, (-1, 1)), (b, 1))
         q = apply_rope(q, pos, rope_theta)
     q = shard_act(q, ("batch", None, "heads", "head_dim"))
 
@@ -327,12 +337,13 @@ def decode_attention(
         "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * scale
     # valid slots: < length (linear) — rotation makes all slots valid once full
-    slot_idx = jnp.arange(phys)
-    valid = slot_idx < length
+    slot_idx = jnp.arange(phys)[None, :]  # (1, P)
+    len_col = jnp.reshape(length, (-1, 1))  # (1, 1) or (b, 1)
+    valid = slot_idx < len_col
     if window:
         # rotating cache: slots hold the last min(length, phys) tokens
-        valid = slot_idx < jnp.minimum(length, phys)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid = slot_idx < jnp.minimum(len_col, phys)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)).astype(x.dtype)
     out = out.reshape(b, 1, n_heads * head_dim)
@@ -409,6 +420,6 @@ def project_kv_for_decode(
     k = (x @ params[f"{p}wk"]).reshape(b, 1, n_kv_heads, head_dim)
     v = (x @ params[f"{p}wv"]).reshape(b, 1, n_kv_heads, head_dim)
     if rope_theta is not None:
-        pos = jnp.broadcast_to(length[None, None], (b, 1))
+        pos = jnp.broadcast_to(jnp.reshape(length, (-1, 1)), (b, 1))
         k = apply_rope(k, pos, rope_theta)
     return k, v

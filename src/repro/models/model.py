@@ -136,6 +136,19 @@ class Model:
     def decode_step(self, params, token, cache, sparse_ctx=None):
         return self._impl.decode_step(params, token, cache, sparse_ctx)
 
+    def decode_step_planned(
+        self, params, token, cache, sparse_ctx=None, plan=None, refresh=None
+    ):
+        """decode_step threading chunk-plan reuse state through the layer
+        stack (dense/moe/vlm). Families without sparsification sites run a
+        plain decode_step and pass ``plan`` through unchanged."""
+        if hasattr(self._impl, "decode_step_planned"):
+            return self._impl.decode_step_planned(
+                params, token, cache, sparse_ctx, plan, refresh
+            )
+        logits, cache, io = self._impl.decode_step(params, token, cache, sparse_ctx)
+        return logits, cache, io, plan
+
     def append_frame(self, params, frame_embeds, cache, sparse_ctx=None):
         """VLM frame-append stage (paper §2.1): project one frame's patch
         embeddings and extend every layer's KV cache. dense/moe/vlm only."""
@@ -248,17 +261,29 @@ class _DecoderLM:
         return _final_norm(x, params, cfg), cache, io
 
     def decode_step(self, params, token, cache, sparse_ctx=None):
+        logits, cache, io, _ = self.decode_step_planned(params, token, cache, sparse_ctx)
+        return logits, cache, io
+
+    def decode_step_planned(
+        self, params, token, cache, sparse_ctx=None, plan=None, refresh=None
+    ):
+        """decode_step + chunk-plan state: ``plan`` is {site: (L, N)} cached
+        masks (see SparseExecution.init_plan), ``refresh`` a scalar bool
+        selecting recompute-vs-reuse. Returns (logits, cache, io, plan)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], token, axis=0).astype(COMPUTE_DTYPE)  # (b,1,d)
         # window semantics are baked into the cache's physical length
         phys = cache["k"].shape[2]
         window = cfg.sliding_window if (cfg.sliding_window and phys == cfg.sliding_window) else None
-        x, cache, io = stack_decode(params["layers"], x, cache, cfg, window, sparse_ctx)
+        x, cache, io, plan = stack_decode(
+            params["layers"], x, cache, cfg, window, sparse_ctx,
+            plan=plan, refresh=refresh,
+        )
         x = _final_norm(x, params, cfg)
         head = params["embed"].T if cfg.tie_embeddings else params["head"]
         logits = (x[:, 0] @ head.astype(x.dtype)).astype(jnp.float32)
         logits = shard_act(logits, ("batch", "vocab"))
-        return logits, cache, io
+        return logits, cache, io, plan
 
 
 # ---------------------------------------------------------------------------
@@ -475,7 +500,7 @@ class _Zamba:
                 return h2 + out, st2
 
             h, gstate2 = jax.lax.scan(inner, h, (gp, gstate))
-            h2, lk2, lv2, _ = block_decode(
+            h2, lk2, lv2, _, _ = block_decode(
                 params["shared"], h, lk, lv, length, cfg, window
             )
             return h2, (gstate2, lk2, lv2)

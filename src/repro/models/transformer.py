@@ -122,31 +122,34 @@ def block_forward(
     if cfg.has_moe:
         y, aux = moe_ffn(h, params, moe_cfg_of(cfg))
     else:
-        y, lat = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
+        y, lat, _ = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
         io += lat
     x = x + y
     x = shard_act(x, ("batch", "act_seq", "act_embed"))
     return x, aux, io
 
 
-def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx):
-    """Gated/plain MLP with the paper's gate(+up-shared) and down masks."""
+def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx, plan=None, refresh=None):
+    """Gated/plain MLP with the paper's gate(+up-shared) and down masks.
+
+    Returns (y, io_latency, new_plan); plan is passed through untouched on
+    the unplanned paths (forward / append / per-token decode)."""
     if sparse_ctx is None:
         y = gelu_mlp(h, params) if cfg.mlp == "gelu" else swiglu_mlp(h, params)
-        return y, jnp.float32(0.0)
-    mask_g, io1 = sparse_ctx.mask("hidden_mlp", h)
+        return y, jnp.float32(0.0), plan
+    mask_g, io1, plan = _site_mask(sparse_ctx, "hidden_mlp", h, plan, refresh)
     hm = _apply_mask(h, mask_g)
     if cfg.mlp == "gelu":
         mid = jax.nn.gelu(hm @ params["w_fc"] + params["b_fc"])
-        mask_f, io2 = sparse_ctx.mask("ffn", mid)
+        mask_f, io2, plan = _site_mask(sparse_ctx, "ffn", mid, plan, refresh)
         y = _apply_mask(mid, mask_f) @ params["w_proj"] + params["b_proj"]
     else:
         from .common import swish
 
         mid = swish(hm @ params["w_gate"]) * (hm @ params["w_up"])
-        mask_f, io2 = sparse_ctx.mask("ffn", mid)
+        mask_f, io2, plan = _site_mask(sparse_ctx, "ffn", mid, plan, refresh)
         y = _apply_mask(mid, mask_f) @ params["w_down"]
-    return y, io1 + io2
+    return y, io1 + io2, plan
 
 
 def stack_forward(
@@ -174,24 +177,46 @@ def stack_forward(
 # ---------------------------------------------------------------------------
 
 
+def _site_mask(sparse_ctx, kind: str, acts, plan, refresh):
+    """One sparsification site, optionally through a reusable chunk plan.
+
+    Without a plan (``plan is None`` or the site has none) this is exactly
+    ``sparse_ctx.mask``. With a plan, selection is recomputed only when
+    ``refresh`` is true; otherwise the cached mask is reused at zero I/O
+    cost (its chunks are still resident from the step that selected them —
+    the temporal-reuse mechanism, see docs/serving.md).
+
+    Returns (mask, io_latency, new_plan).
+    """
+    if sparse_ctx is None:
+        return None, jnp.float32(0.0), plan
+    if plan is None or kind not in plan:
+        m, lat = sparse_ctx.mask(kind, acts)
+        return m, lat, plan
+    m, lat, entry = sparse_ctx.mask_planned(kind, acts, plan[kind], refresh)
+    new_plan = dict(plan)
+    new_plan[kind] = entry
+    return m, lat, new_plan
+
+
 def block_decode(
     params: Dict[str, jnp.ndarray],
     x: jnp.ndarray,  # (b, 1, d)
     layer_k: jnp.ndarray,
     layer_v: jnp.ndarray,
-    length: jnp.ndarray,  # tokens in cache BEFORE this one
+    length: jnp.ndarray,  # tokens in cache BEFORE this one; () or (b,)
     cfg: ModelConfig,
     window: Optional[int],
     sparse_ctx: Any = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (x_out, new_k, new_v, io_latency)."""
+    plan: Optional[Dict[str, jnp.ndarray]] = None,  # per-layer site masks
+    refresh: Optional[jnp.ndarray] = None,  # scalar bool: recompute selection
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, Any]:
+    """Returns (x_out, new_k, new_v, io_latency, new_plan)."""
     io = jnp.float32(0.0)
     h = apply_norm(x, params, cfg, "ln1")
 
-    mask_q = None
-    if sparse_ctx is not None:
-        mask_q, lat = sparse_ctx.mask("hidden_attn", h)
-        io += lat
+    mask_q, lat, plan = _site_mask(sparse_ctx, "hidden_attn", h, plan, refresh)
+    io += lat
     attn_in = _apply_mask(h, mask_q)
     new_k, new_v = project_kv_for_decode(
         attn_in, params, cfg.n_kv_heads, cfg.resolved_head_dim, length, cfg.rope_theta
@@ -218,7 +243,7 @@ def block_decode(
         project_out=sparse_ctx is None,
     )
     if sparse_ctx is not None:
-        mask_o, lat = sparse_ctx.mask("attn_out", attn_raw)
+        mask_o, lat, plan = _site_mask(sparse_ctx, "attn_out", attn_raw, plan, refresh)
         io += lat
         attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
     x = x + attn_raw
@@ -227,35 +252,55 @@ def block_decode(
     if cfg.has_moe:
         y, _ = moe_ffn(h, params, moe_cfg_of(cfg))
     else:
-        y, lat = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
+        y, lat, plan = _mlp_maybe_sparse(h, params, cfg, sparse_ctx, plan, refresh)
         io += lat
     x = x + y
-    return x, layer_k, layer_v, io
+    return x, layer_k, layer_v, io, plan
 
 
 def stack_decode(
     stacked: Dict[str, jnp.ndarray],
     x: jnp.ndarray,
-    cache: Dict[str, jnp.ndarray],  # k/v: (L, b, P, kv, hd), length: ()
+    cache: Dict[str, jnp.ndarray],  # k/v: (L, b, P, kv, hd), length: () or (b,)
     cfg: ModelConfig,
     window: Optional[int],
     sparse_ctx: Any = None,
-) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray]:
+    plan: Optional[Dict[str, jnp.ndarray]] = None,  # {site: (L, N)} masks
+    refresh: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Any]:
+    """Scan the decode block over layers. ``plan`` (when not None) carries
+    each layer's cached chunk masks as scan inputs and the refreshed masks
+    come back as scan outputs — so a fused multi-token decode loop can reuse
+    selection across steps. Returns (x, new_cache, io, new_plan)."""
     length = cache["length"]
+    planned = plan is not None and len(plan) > 0
 
     def body(carry, layer):
         h, io = carry
-        layer_params, lk, lv = layer
-        h2, lk2, lv2, io2 = block_decode(
-            layer_params, h, lk, lv, length, cfg, window, sparse_ctx
+        if planned:
+            layer_params, lk, lv, layer_plan = layer
+        else:
+            layer_params, lk, lv = layer
+            layer_plan = None
+        h2, lk2, lv2, io2, plan2 = block_decode(
+            layer_params, h, lk, lv, length, cfg, window, sparse_ctx,
+            plan=layer_plan, refresh=refresh,
         )
-        return (h2, io + io2), (lk2, lv2)
+        ys = (lk2, lv2, plan2) if planned else (lk2, lv2)
+        return (h2, io + io2), ys
 
-    (x, io), (ks, vs) = jax.lax.scan(
-        body, (x, jnp.float32(0.0)), (stacked, cache["k"], cache["v"])
+    xs = (
+        (stacked, cache["k"], cache["v"], plan)
+        if planned
+        else (stacked, cache["k"], cache["v"])
     )
+    (x, io), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    if planned:
+        ks, vs, new_plan = ys
+    else:
+        (ks, vs), new_plan = ys, plan
     new_cache = {"k": ks, "v": vs, "length": length + 1}
-    return x, new_cache, io
+    return x, new_cache, io, new_plan
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +349,7 @@ def block_append(
     if cfg.has_moe:
         y, _ = moe_ffn(h, params, moe_cfg_of(cfg))
     else:
-        y, lat = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
+        y, lat, _ = _mlp_maybe_sparse(h, params, cfg, sparse_ctx)
         io += lat
     return x + y, layer_k, layer_v, io
 

@@ -1,2 +1,4 @@
 from .engine import ServeEngine, StepStats
-from .sparse_exec import SparseExecution
+from .request import PoissonArrivalDriver, Request, RequestState
+from .scheduler import Scheduler, SchedulerStats
+from .sparse_exec import SERVE_METHODS, SPARSE_METHODS, SparseExecution, validate_method

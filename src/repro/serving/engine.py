@@ -1,10 +1,31 @@
-"""ServeEngine: batched streaming-VLM serving with flash-offload simulation.
+"""ServeEngine: streaming-VLM serving with flash-offload simulation.
 
 Pipeline per the paper (§2.1): prefill(prompt) → append_frame(frame)* →
-decode(n)*. Each stage runs as one jit-compiled step; the sparse policy
-(SparseExecution) executes inside the jit and returns the additive-model I/O
-latency estimate; the FlashOffloadSimulator converts estimates into
-"measured" samples with the pattern-dependent lift (Fig. 5 behaviour).
+decode(n)*. Prefill and frame-append run as one jit-compiled step each; the
+decode path is a **fused ``lax.scan`` multi-token loop** — the whole n-token
+generation is one jit call that accumulates per-step additive-model I/O
+estimates on device and returns (tokens, io_estimates) once, eliminating the
+per-token ``float(io)`` host round-trip the seed engine paid. The legacy
+one-python-iteration-per-token loop survives as ``decode_per_token`` for
+A/B comparison (benchmarks/serve_throughput.py) and regression tests.
+
+Inside the scan, ``plan_refresh_interval`` enables temporal chunk-plan
+reuse: utility-guided selection reruns every k steps and the cached masks
+are reused (at zero I/O — their chunks are still resident) in between.
+See docs/serving.md for the full decode contract.
+
+Two operating modes share the engine:
+
+  * classic single-stream mode: prefill / append_frame / decode drive one
+    batch of lockstep requests through a scalar-length KV cache;
+  * slot mode (``enable_slots`` + Scheduler): each batch row is an
+    independent request slot with its own cache length; ``admit_slot``
+    prefills one request into a free slot and ``decode_slots`` runs the
+    fused loop over all slots at once (continuous batching).
+
+``method`` ∈ SERVE_METHODS: "chunk" | "topk" | "dense" stream weights from
+simulated flash through SparseExecution; "dense_free" means fully
+memory-resident weights (no flash tier, zero I/O, no SparseExecution).
 
 Works with any dense/moe/vlm architecture; recurrent archs serve through
 decode_step only (their state is the cache).
@@ -23,7 +44,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.offload import ComputeModel, FlashOffloadSimulator
 from ..models.model import Model
-from .sparse_exec import SparseExecution
+from .sparse_exec import SparseExecution, validate_method
 
 
 @dataclasses.dataclass
@@ -45,10 +66,14 @@ class ServeEngine:
         batch_size: int,
         device: str = "nano",
         sparsity: float | Dict[str, float] = 0.4,
-        method: str = "chunk",  # chunk | topk | dense
+        method: str = "chunk",  # see SERVE_METHODS
         reorderings: Optional[dict] = None,
         seed: int = 0,
+        plan_refresh_interval: int = 1,
     ):
+        validate_method(method, allow_dense_free=True)
+        if plan_refresh_interval < 1:
+            raise ValueError("plan_refresh_interval must be >= 1")
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -56,6 +81,7 @@ class ServeEngine:
         self.simulator = FlashOffloadSimulator(device, seed=seed)
         self.compute_model = ComputeModel()
         self.method = method
+        self.plan_refresh_interval = plan_refresh_interval
         self.sparse_ctx = (
             None
             if method == "dense_free"
@@ -64,15 +90,106 @@ class ServeEngine:
         )
         self.cache = model.init_cache(batch_size, max_seq)
         self.stats: List[StepStats] = []
+        self._plan = None  # chunk-plan carry, persists across decode calls
 
-        self._decode = jax.jit(
-            lambda p, t, c: model.decode_step(p, t, c, self.sparse_ctx)
+        # per-token baseline shares the fused loop's step function (the
+        # planned path), so the two decode modes differ ONLY in host-loop
+        # structure — that's what makes their outputs byte-identical
+        self._decode_one = jax.jit(
+            lambda p, t, c, plan, i: model.decode_step_planned(
+                p, t, c, self.sparse_ctx, plan,
+                (i % self.plan_refresh_interval) == 0,
+            )
         )
         self._append = jax.jit(
             lambda p, f, c: model.append_frame(p, f, c, self.sparse_ctx)
         )
+        self._decode_scan = jax.jit(self._decode_scan_impl, static_argnums=3)
+        self._prefill_one = jax.jit(
+            lambda p, b: model.prefill(p, b, self.max_seq)
+        )
 
-    # -- stages --------------------------------------------------------------
+    # -- fused decode loop ----------------------------------------------------
+    def _init_plan(self):
+        if self.sparse_ctx is None:
+            return {}
+        return self.sparse_ctx.init_plan(self.model.cfg.n_layers)
+
+    def _decode_scan_impl(self, params, token, cache, n_tokens: int, plan):
+        """One jit: scan ``decode_step_planned`` over n_tokens greedy steps.
+
+        Returns (tokens (b, n), final cache, final plan, io (n,)). All I/O
+        estimates stay on device until the caller syncs the whole array once.
+        """
+        k = self.plan_refresh_interval
+
+        def step(carry, i):
+            tok, cache, plan = carry
+            refresh = (i % k) == 0
+            logits, cache, io, plan = self.model.decode_step_planned(
+                params, tok, cache, self.sparse_ctx, plan, refresh
+            )
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            return (nxt, cache, plan), (nxt[:, 0], io)
+
+        (_, cache, plan), (toks, ios) = jax.lax.scan(
+            step, (token, cache, plan), jnp.arange(n_tokens)
+        )
+        return toks.T, cache, plan, ios  # toks: (n, b) -> (b, n)
+
+    def _run_decode_scan(self, tokens: jnp.ndarray, n_tokens: int):
+        """Shared fused-loop body: run the scan, sync the estimate array
+        once, convert it to simulated measurements, log per-step stats.
+        Returns (new_tokens (b, n), per-step simulated io (n,))."""
+        if self._plan is None:
+            self._plan = self._init_plan()
+        t0 = time.perf_counter()
+        toks, self.cache, self._plan, ios = self._decode_scan(
+            self.params, tokens, self.cache, n_tokens, self._plan
+        )
+        ios = np.asarray(ios, np.float64)  # ONE host sync for the whole scan
+        wall = time.perf_counter() - t0
+        sims = self.simulator.measure_from_estimate_batch(ios, name="decode")
+        per_step_wall = wall / max(n_tokens, 1)
+        for est, sim in zip(ios, sims):
+            self.stats.append(
+                StepStats("decode", 1, float(est), float(sim), 0.0, per_step_wall)
+            )
+        return toks, sims
+
+    def decode(self, first_token: jnp.ndarray, n_tokens: int, greedy: bool = True):
+        """Greedy-decode n_tokens with the fused scan loop. Returns
+        (b, n_tokens+1) including ``first_token`` — same contract (and, at
+        equal settings, byte-identical output) as the legacy
+        ``decode_per_token`` loop."""
+        toks, _ = self._run_decode_scan(first_token, n_tokens)
+        return jnp.concatenate([first_token, toks], axis=1)
+
+    def decode_per_token(self, first_token: jnp.ndarray, n_tokens: int,
+                         greedy: bool = True):
+        """The seed engine's decode loop: one jit call + one ``float(io)``
+        host sync per python iteration. Runs the same step function as the
+        fused scan (including plan reuse), so at equal settings the two
+        modes produce byte-identical tokens — the only difference is the
+        per-token host round-trip the scan eliminates."""
+        if self._plan is None:
+            self._plan = self._init_plan()
+        token = first_token
+        out = [token]
+        for i in range(n_tokens):
+            t0 = time.perf_counter()
+            logits, self.cache, io, self._plan = self._decode_one(
+                self.params, token, self.cache, self._plan, jnp.int32(i)
+            )
+            io = float(io)  # the per-token host sync the scan path avoids
+            wall = time.perf_counter() - t0
+            token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(token)
+            sim = self.simulator.measure_from_estimate(io, name="decode")
+            self.stats.append(StepStats("decode", 1, io, sim, 0.0, wall))
+        return jnp.concatenate(out, axis=1)
+
+    # -- classic single-stream stages ----------------------------------------
     def prefill(self, batch: Dict[str, jnp.ndarray]):
         t0 = time.perf_counter()
         last, self.cache = self.model.prefill(self.params, batch, self.max_seq)
@@ -82,6 +199,7 @@ class ServeEngine:
         est = self._dense_io() if self.sparse_ctx else 0.0
         sim = self.simulator.measure_from_estimate(est, name="prefill")
         self.stats.append(StepStats("prefill", n, est, sim, 0.0, wall))
+        self._plan = None  # new sequence → stale plan
         return last
 
     def append_frame(self, frame_embeds: jnp.ndarray):
@@ -96,19 +214,44 @@ class ServeEngine:
         )
         return hidden
 
-    def decode(self, first_token: jnp.ndarray, n_tokens: int, greedy: bool = True):
-        token = first_token
-        out = [token]
-        for _ in range(n_tokens):
-            t0 = time.perf_counter()
-            logits, self.cache, io = self._decode(self.params, token, self.cache)
-            io = float(io)
-            wall = time.perf_counter() - t0
-            token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            out.append(token)
-            sim = self.simulator.measure_from_estimate(io, name="decode")
-            self.stats.append(StepStats("decode", 1, io, sim, 0.0, wall))
-        return jnp.concatenate(out, axis=1)
+    # -- slot mode (continuous batching; used by serving.scheduler) ----------
+    def enable_slots(self):
+        """Switch the cache to per-slot lengths: each batch row becomes an
+        independent request slot (empty until ``admit_slot``)."""
+        self.cache = self.model.init_cache(self.batch_size, self.max_seq)
+        self.cache["length"] = jnp.zeros((self.batch_size,), jnp.int32)
+        self._plan = None
+
+    def admit_slot(self, slot: int, batch: Dict[str, jnp.ndarray]):
+        """Prefill one request (leading batch dim 1) into ``slot``,
+        overwriting whatever a previous occupant left there. Returns the
+        request's last-position logits (1, vocab) and the prefill I/O
+        estimate (the request's weights stream in once, contiguously)."""
+        if not (0 <= slot < self.batch_size):
+            raise ValueError(f"slot {slot} out of range [0, {self.batch_size})")
+        last, cache1 = self._prefill_one(self.params, batch)
+        for key in ("k", "v"):
+            self.cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                self.cache[key], cache1[key], slot, axis=1
+            )
+        self.cache["length"] = (
+            self.cache["length"].at[slot].set(cache1["length"].astype(jnp.int32))
+        )
+        est = self._dense_io() if self.sparse_ctx else 0.0
+        sim = self.simulator.measure_from_estimate(est, name=f"admit[{slot}]")
+        self.stats.append(
+            StepStats("prefill", int(batch["tokens"].shape[1]), est, sim, 0.0, 0.0)
+        )
+        return last, sim
+
+    def decode_slots(self, tokens: jnp.ndarray, n_tokens: int):
+        """Fused decode round over all slots. ``tokens``: (batch, 1) current
+        input token per slot (free slots decode garbage that callers drop).
+        Returns (new_tokens (batch, n), per-step simulated io (n,))."""
+        return self._run_decode_scan(tokens, n_tokens)
+
+    def slot_lengths(self) -> np.ndarray:
+        return np.asarray(self.cache["length"]).reshape(-1)
 
     # -- accounting ----------------------------------------------------------
     def _dense_io(self) -> float:

@@ -1,0 +1,177 @@
+"""Continuous-batching scheduler over the slot-mode ServeEngine.
+
+vLLM-style iteration-level scheduling, adapted to the flash-offload
+simulator: the engine's batch dimension is a fixed array of request slots;
+requests are admitted FCFS into free slots (prefill scatters their KV into
+the shared cache), every decode round runs the engine's fused ``lax.scan``
+loop across ALL slots at once, and slots are recycled the moment their
+request hits its token budget — no waiting for the rest of the batch.
+
+Time is simulated: the clock advances by the simulator's per-step I/O
+latency (the quantity the paper's policies change) plus a first-order
+compute term, so tokens/s and request-latency percentiles reflect the
+policy under test rather than host-python speed. Wall time is tracked
+separately by the engine's StepStats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import ServeEngine
+from .request import Request, RequestState
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Aggregate serving metrics over one ``run``."""
+
+    finished: int
+    sim_time_s: float
+    decode_tokens: int
+    tokens_per_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+    ttft_p50_s: float
+
+    def row(self) -> str:
+        return (
+            f"{self.finished:4d} req  {self.decode_tokens:5d} tok  "
+            f"{self.tokens_per_s:8.1f} tok/s  "
+            f"p50 {self.latency_p50_s*1e3:7.2f} ms  "
+            f"p95 {self.latency_p95_s*1e3:7.2f} ms"
+        )
+
+
+class Scheduler:
+    """FCFS continuous batching over ``engine.batch_size`` slots.
+
+    ``round_tokens`` is the fused-scan granularity: each round decodes that
+    many tokens for every running slot in ONE jit call, then reconciles
+    (finishes, evictions, admissions) on the host. Larger rounds amortize
+    more host overhead but over-decode up to round_tokens-1 tokens for a
+    request that finishes mid-round (the tokens are dropped; the slot is
+    recycled at the round boundary).
+    """
+
+    def __init__(
+        self,
+        engine: ServeEngine,
+        round_tokens: int = 4,
+        compute_s_per_token: float = 0.0,
+    ):
+        if round_tokens < 1:
+            raise ValueError("round_tokens must be >= 1")
+        self.engine = engine
+        self.n_slots = engine.batch_size
+        self.round_tokens = round_tokens
+        self.compute_s_per_token = compute_s_per_token
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Optional[Request]] = [None] * self.n_slots
+        self.finished: List[Request] = []
+        self.now_s = 0.0
+        self.decode_tokens = 0
+        # per-slot current input token fed to the next decode round
+        self._slot_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        engine.enable_slots()
+
+    # -- admission / eviction ------------------------------------------------
+    def submit(self, requests) -> None:
+        for r in requests if isinstance(requests, (list, tuple)) else [requests]:
+            self.waiting.append(r)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.running) if r is None]
+
+    def num_running(self) -> int:
+        return self.n_slots - len(self.free_slots())
+
+    def _admit_ready(self) -> int:
+        """Admit WAITING requests that have arrived into free slots (FCFS).
+        Prefill advances the clock by the request's simulated weight-stream
+        time. Returns the number admitted."""
+        admitted = 0
+        for slot in self.free_slots():
+            if not self.waiting or self.waiting[0].arrival_s > self.now_s:
+                break
+            req = self.waiting.popleft()
+            last, prefill_sim = self.engine.admit_slot(slot, req.prompt)
+            self.now_s += float(prefill_sim)
+            req.state = RequestState.RUNNING
+            req.slot = slot
+            req.admitted_s = self.now_s
+            self.running[slot] = req
+            tok0 = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            self._slot_tokens = self._slot_tokens.at[slot].set(tok0[0])
+            admitted += 1
+        return admitted
+
+    def _evict(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        if req.finished_s is None:
+            req.finished_s = self.now_s
+        self.running[req.slot] = None
+        req.slot = None
+        self.finished.append(req)
+
+    # -- decode rounds -------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration: admit, decode a round, reconcile.
+        Returns False when there is nothing left to do."""
+        # fast-forward an idle engine to the next arrival
+        if self.num_running() == 0:
+            if not self.waiting:
+                return False
+            self.now_s = max(self.now_s, self.waiting[0].arrival_s)
+        self._admit_ready()
+        if self.num_running() == 0:
+            return bool(self.waiting)
+
+        toks, sims = self.engine.decode_slots(self._slot_tokens, self.round_tokens)
+        toks_np = np.asarray(toks)  # (slots, round_tokens)
+        active = [r for r in self.running if r is not None]
+        for i, sim in enumerate(sims):
+            # the batch shares each model step; clock advances once per step
+            self.now_s += float(sim) + self.compute_s_per_token
+            for req in active:
+                if req.done:
+                    continue  # over-decoded filler for an already-done request
+                req.tokens_out.append(int(toks_np[req.slot, i]))
+                self.decode_tokens += 1
+                if req.first_token_s is None:
+                    req.first_token_s = self.now_s
+                if req.done:
+                    # latency marks the token's mid-round time; the slot is
+                    # only recycled at the round boundary below
+                    req.finished_s = self.now_s
+        self._slot_tokens = toks[:, -1:]
+        for req in list(active):
+            if req.done:
+                self._evict(req)
+        return bool(self.waiting) or self.num_running() > 0
+
+    def run(self, max_rounds: int = 100_000) -> SchedulerStats:
+        """Drive until every submitted request has finished."""
+        rounds = 0
+        while self.step():
+            rounds += 1
+            if rounds >= max_rounds:
+                raise RuntimeError(f"scheduler did not drain in {max_rounds} rounds")
+        return self.stats()
+
+    def stats(self) -> SchedulerStats:
+        lats = np.array([r.latency_s() for r in self.finished]) if self.finished else np.array([0.0])
+        ttfts = np.array([r.ttft_s() for r in self.finished]) if self.finished else np.array([0.0])
+        return SchedulerStats(
+            finished=len(self.finished),
+            sim_time_s=self.now_s,
+            decode_tokens=self.decode_tokens,
+            tokens_per_s=self.decode_tokens / max(self.now_s, 1e-12),
+            latency_p50_s=float(np.percentile(lats, 50)),
+            latency_p95_s=float(np.percentile(lats, 95)),
+            ttft_p50_s=float(np.percentile(ttfts, 50)),
+        )

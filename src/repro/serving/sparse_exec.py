@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
@@ -27,6 +28,21 @@ from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profi
 from ..core.reorder import Reordering
 
 DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 (paper: fp16)
+
+# The single source of truth for serving policy names (ServeEngine and
+# SparseExecution both validate against these):
+#   * SPARSE_METHODS run through SparseExecution (selection + I/O accounting);
+#   * "dense_free" means fully memory-resident weights — dense compute with
+#     NO flash tier at all, so no SparseExecution instance and zero I/O.
+SPARSE_METHODS = ("chunk", "topk", "dense")
+SERVE_METHODS = SPARSE_METHODS + ("dense_free",)
+
+
+def validate_method(method: str, allow_dense_free: bool = False) -> str:
+    allowed = SERVE_METHODS if allow_dense_free else SPARSE_METHODS
+    if method not in allowed:
+        raise ValueError(f"unknown sparse method {method!r}; expected one of {allowed}")
+    return method
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -82,8 +98,7 @@ class SparseExecution:
         always participate in compute. The paper notes remaining uncached
         accesses become more scattered — making chunk selection *more*
         valuable; `tests/test_serving.py` asserts exactly that."""
-        if method not in ("chunk", "topk", "dense"):
-            raise ValueError(f"unknown sparse method {method!r}")
+        validate_method(method)
         self.cfg = cfg
         self.method = method
         self.reorderings = reorderings or {}
@@ -110,7 +125,38 @@ class SparseExecution:
             return None, jnp.float32(0.0)
         if self.method == "dense":
             return None, jnp.float32(site.dense_latency)
+        return self._compute_mask(kind, site, acts)
 
+    def mask_planned(self, kind: str, acts: jnp.ndarray, cached_mask: jnp.ndarray,
+                     refresh: jnp.ndarray):
+        """``mask`` with temporal chunk-plan reuse (scanned decode loop).
+
+        When ``refresh`` is true the selection runs as usual and its mask
+        becomes the new plan entry; otherwise the cached mask from the last
+        refresh step is reused at ZERO I/O cost — its chunks were loaded on
+        that step and stay resident until the next refresh (the residency
+        model benchmarks/disc5_caching.py gestures at, applied temporally).
+        ``lax.cond`` skips the selection compute entirely on reuse steps.
+
+        Returns (mask (N,) float, est latency, new plan entry (N,) float).
+        """
+        site = self.sites.get(kind)
+        if site is None:
+            return None, jnp.float32(0.0), cached_mask
+        if self.method == "dense":
+            # nothing resident to reuse: dense streams every matrix each step
+            return None, jnp.float32(site.dense_latency), cached_mask
+
+        def _refresh(_):
+            return self._compute_mask(kind, site, acts)
+
+        def _reuse(_):
+            return cached_mask, jnp.float32(0.0)
+
+        m, lat = jax.lax.cond(refresh, _refresh, _reuse, None)
+        return m, lat, m
+
+    def _compute_mask(self, kind: str, site: _Site, acts: jnp.ndarray):
         from ..core.importance import importance
 
         v = importance(acts)
@@ -139,6 +185,18 @@ class SparseExecution:
         if cached is not None:
             m = m | cached  # cached neurons always compute, at zero I/O
         return m.astype(jnp.float32), lat
+
+    def init_plan(self, n_layers: int) -> Dict[str, jnp.ndarray]:
+        """Per-layer cached chunk masks for the scanned decode loop:
+        {site: (n_layers, N) float32}, zero-initialized (the first scan step
+        always refreshes, so the zeros are never applied). Empty for dense —
+        there is no selection to cache."""
+        if self.method == "dense":
+            return {}
+        return {
+            kind: jnp.zeros((n_layers, site.n), jnp.float32)
+            for kind, site in self.sites.items()
+        }
 
     def dense_total_latency(self) -> float:
         """Full-load I/O latency per layer (all sites dense)."""

@@ -122,3 +122,23 @@ def test_for_shape_heuristic_matches_paper_table2():
     big = ChunkConfig.for_shape(18944, 3584, "agx")
     small = ChunkConfig.for_shape(896, 128, "agx")
     assert big.min_chunk_kb > small.min_chunk_kb
+
+
+def test_for_shape_saturation_cap_per_device():
+    """Regression: the per-device max chunk size is the throughput
+    saturation point — AGX+990Pro saturates later than Nano+P31, so its cap
+    must be the larger one (348 vs 236 KB; the caps were once swapped)."""
+    from repro.core.latency_model import JETSON_AGX, JETSON_NANO
+
+    for rows, cols in ((18944, 3584), (3584, 3584), (896, 128)):
+        assert ChunkConfig.for_shape(rows, cols, "nano").max_chunk_kb == 236.0
+        assert ChunkConfig.for_shape(rows, cols, "agx").max_chunk_kb == 348.0
+        assert (
+            ChunkConfig.for_shape(rows, cols, "jetson_agx_990pro").max_chunk_kb
+            == 348.0
+        )
+    # the nano cap is the class default; the ratio of caps tracks the ratio
+    # of the devices' two-regime knees (bigger knee ⇒ later saturation)
+    assert ChunkConfig().max_chunk_kb == 236.0
+    knee_ratio = JETSON_AGX.knee_bytes / JETSON_NANO.knee_bytes
+    assert 348.0 / 236.0 == pytest.approx(knee_ratio, rel=0.05)

@@ -1,0 +1,273 @@
+"""Continuous-batching serve stack: scheduler lifecycle, scan-fused decode
+equivalence with the per-token loop, and chunk-plan reuse invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.models import build_model
+from repro.models.inputs import make_dummy_batch
+from repro.serving import (
+    PoissonArrivalDriver,
+    Request,
+    RequestState,
+    Scheduler,
+    ServeEngine,
+)
+
+SMOKE = InputShape(name="smoke", seq_len=16, global_batch=2, kind="train")
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(model, params, method="chunk", refresh=1, batch=2, seed=1):
+    return ServeEngine(model, params, max_seq=64, batch_size=batch,
+                       device="nano", sparsity=0.4, method=method, seed=seed,
+                       plan_refresh_interval=refresh)
+
+
+def _requests(cfg, n, max_new=4, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    out = []
+    for rid in range(n):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+        out.append(Request(rid=rid, prompt={"tokens": toks}, max_new_tokens=max_new))
+    return out
+
+
+# -- scheduler lifecycle -----------------------------------------------------
+
+
+def test_admission_eviction_more_requests_than_slots(lm):
+    cfg, model, params = lm
+    eng = _engine(model, params, batch=2)
+    sched = Scheduler(eng, round_tokens=2)
+    reqs = _requests(cfg, 5, max_new=3)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.001 * i
+    sched.submit(reqs)
+
+    # first iteration can admit at most the 2 slots
+    assert sched.step()
+    assert sched.num_running() <= 2
+    stats = sched.run()
+    assert stats.finished == 5
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert all(len(r.tokens_out) == 3 for r in reqs)
+    # FCFS: finish order respects arrival order for equal-length requests
+    assert [r.rid for r in sched.finished] == [0, 1, 2, 3, 4]
+    # slots were recycled (eviction worked): all free at drain
+    assert sched.free_slots() == [0, 1]
+    # timing marks are causally ordered on the simulated clock
+    for r in reqs:
+        assert r.arrival_s <= r.admitted_s <= r.first_token_s <= r.finished_s
+        assert r.latency_s() > 0 and r.ttft_s() > 0
+
+
+def test_poisson_driver_monotone_arrivals(lm):
+    cfg, _, _ = lm
+    driver = PoissonArrivalDriver(
+        100.0, lambda rid: _requests(cfg, 1)[0], seed=4
+    )
+    reqs = driver.generate(10)
+    arrivals = [r.arrival_s for r in reqs]
+    assert all(a < b for a, b in zip(arrivals, arrivals[1:]))
+    assert arrivals[0] > 0
+    with pytest.raises(ValueError):
+        PoissonArrivalDriver(0.0, lambda rid: None)
+
+
+def test_scheduler_idle_fast_forwards_to_arrival(lm):
+    cfg, model, params = lm
+    eng = _engine(model, params, batch=2)
+    sched = Scheduler(eng, round_tokens=2)
+    reqs = _requests(cfg, 1, max_new=2)
+    reqs[0].arrival_s = 5.0  # far in the simulated future
+    sched.submit(reqs)
+    stats = sched.run()
+    assert stats.finished == 1
+    assert reqs[0].admitted_s >= 5.0
+
+
+# -- scan-fused decode vs per-token loop -------------------------------------
+
+
+@pytest.mark.parametrize("method", ["chunk", "topk", "dense", "dense_free"])
+def test_fused_decode_matches_per_token(lm, method):
+    cfg, model, params = lm
+    batch = make_dummy_batch(cfg, SMOKE)
+    eng_f = _engine(model, params, method=method, seed=3)
+    eng_l = _engine(model, params, method=method, seed=3)
+    tok0 = jnp.argmax(eng_f.prefill(batch), -1)[:, None].astype(jnp.int32)
+    eng_l.prefill(batch)
+    out_f = eng_f.decode(tok0, 6)
+    out_l = eng_l.decode_per_token(tok0, 6)
+    assert bool(jnp.all(out_f == out_l)), "tokens must be byte-identical"
+    io_f = [s.io_est_s for s in eng_f.stats if s.kind == "decode"]
+    io_l = [s.io_est_s for s in eng_l.stats if s.kind == "decode"]
+    np.testing.assert_allclose(io_f, io_l, rtol=1e-6)
+    np.testing.assert_allclose(sum(io_f), sum(io_l), rtol=1e-6)
+
+
+def test_fused_decode_matches_per_token_with_plan_reuse(lm):
+    """At refresh>1 the two modes must still agree on tokens, estimates AND
+    simulated measurements — the batch simulator path consumes the RNG
+    stream and event log exactly as the scalar path does (zero-estimate
+    reuse steps draw no jitter and log no event)."""
+    cfg, model, params = lm
+    batch = make_dummy_batch(cfg, SMOKE)
+    eng_f = _engine(model, params, refresh=2, seed=3)
+    eng_l = _engine(model, params, refresh=2, seed=3)
+    tok0 = jnp.argmax(eng_f.prefill(batch), -1)[:, None].astype(jnp.int32)
+    eng_l.prefill(batch)
+    out_f = eng_f.decode(tok0, 6)
+    out_l = eng_l.decode_per_token(tok0, 6)
+    assert bool(jnp.all(out_f == out_l))
+    sim_f = [s.io_sim_s for s in eng_f.stats if s.kind == "decode"]
+    sim_l = [s.io_sim_s for s in eng_l.stats if s.kind == "decode"]
+    np.testing.assert_allclose(sim_f, sim_l, rtol=1e-9)
+    assert len(eng_f.simulator.log) == len(eng_l.simulator.log)
+
+
+def test_fused_decode_single_host_sync_accounting(lm):
+    """The scan path logs one StepStats per token (same granularity as the
+    loop) from ONE on-device estimate array."""
+    cfg, model, params = lm
+    batch = make_dummy_batch(cfg, SMOKE)
+    eng = _engine(model, params)
+    tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
+    out = eng.decode(tok0, 5)
+    assert out.shape == (2, 6)
+    steps = [s for s in eng.stats if s.kind == "decode"]
+    assert len(steps) == 5
+    assert all(s.io_sim_s > 0 and s.io_est_s > 0 for s in steps)
+
+
+# -- chunk-plan reuse --------------------------------------------------------
+
+
+def test_plan_reuse_refresh_cadence_and_latency_bound(lm):
+    """With plan_refresh_interval=k, selection I/O is paid on exactly
+    ceil(n/k) steps; reuse steps are free (resident chunks) and no reuse-mode
+    step ever exceeds the per-step refresh-mode latency estimate."""
+    cfg, model, params = lm
+    batch = make_dummy_batch(cfg, SMOKE)
+    n = 8
+
+    eng1 = _engine(model, params, refresh=1, seed=3)
+    tok0 = jnp.argmax(eng1.prefill(batch), -1)[:, None].astype(jnp.int32)
+    eng1.decode(tok0, n)
+    io1 = [s.io_est_s for s in eng1.stats if s.kind == "decode"]
+
+    engk = _engine(model, params, refresh=3, seed=3)
+    engk.prefill(batch)
+    engk.decode(tok0, n)
+    iok = [s.io_est_s for s in engk.stats if s.kind == "decode"]
+
+    refresh_steps = [i for i, v in enumerate(iok) if v > 0]
+    assert refresh_steps == [0, 3, 6]  # every k-th step
+    assert all(v == 0.0 for i, v in enumerate(iok) if i not in refresh_steps)
+    assert max(iok) <= max(io1) * 1.25 + 1e-12
+    assert sum(iok) < sum(io1)
+
+
+def test_plan_reuse_interval_one_is_identity(lm):
+    cfg, model, params = lm
+    batch = make_dummy_batch(cfg, SMOKE)
+    eng1 = _engine(model, params, refresh=1, seed=3)
+    tok0 = jnp.argmax(eng1.prefill(batch), -1)[:, None].astype(jnp.int32)
+    out1 = eng1.decode(tok0, 5)
+    io1 = [s.io_est_s for s in eng1.stats if s.kind == "decode"]
+    assert all(v > 0 for v in io1)  # every step refreshes → every step pays
+    assert out1.shape == (2, 6)
+
+
+def test_plan_refresh_interval_validation(lm):
+    cfg, model, params = lm
+    with pytest.raises(ValueError):
+        _engine(model, params, refresh=0)
+
+
+# -- slot-mode engine invariants ---------------------------------------------
+
+
+def test_admit_slot_isolates_requests(lm):
+    """Admitting into one slot must not disturb the other slot's cache
+    length, and per-slot lengths advance together under decode_slots."""
+    cfg, model, params = lm
+    eng = _engine(model, params, batch=2)
+    eng.enable_slots()
+    reqs = _requests(cfg, 2, max_new=2)
+    last0, _ = eng.admit_slot(0, reqs[0].prompt)
+    assert eng.slot_lengths().tolist() == [8, 0]
+    last1, _ = eng.admit_slot(1, reqs[1].prompt)
+    assert eng.slot_lengths().tolist() == [8, 8]
+    toks = jnp.concatenate(
+        [jnp.argmax(last0, -1)[:, None], jnp.argmax(last1, -1)[:, None]]
+    ).astype(jnp.int32)
+    new_toks, sims = eng.decode_slots(toks, 3)
+    assert new_toks.shape == (2, 3)
+    assert eng.slot_lengths().tolist() == [11, 11]
+    with pytest.raises(ValueError):
+        eng.admit_slot(7, reqs[0].prompt)
+
+
+def test_dense_free_validated_in_one_place(lm):
+    """``dense_free`` (fully memory-resident weights, no flash tier) is an
+    engine-level policy: ServeEngine accepts it and skips SparseExecution
+    entirely; SparseExecution itself only knows the streaming methods. Both
+    validate against the shared SERVE_METHODS/SPARSE_METHODS tuples."""
+    from repro.serving import (
+        SERVE_METHODS,
+        SPARSE_METHODS,
+        SparseExecution,
+        validate_method,
+    )
+
+    cfg, model, params = lm
+    assert set(SERVE_METHODS) == set(SPARSE_METHODS) | {"dense_free"}
+    assert validate_method("dense_free", allow_dense_free=True) == "dense_free"
+    with pytest.raises(ValueError):
+        validate_method("dense_free")  # streaming contexts reject it
+    with pytest.raises(ValueError):
+        validate_method("bogus", allow_dense_free=True)
+    with pytest.raises(ValueError):
+        SparseExecution(cfg, method="dense_free")
+    with pytest.raises(ValueError):
+        _engine(model, params, method="bogus")
+
+    eng = _engine(model, params, method="dense_free")
+    assert eng.sparse_ctx is None
+    batch = make_dummy_batch(cfg, SMOKE)
+    tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
+    out = eng.decode(tok0, 3)
+    assert out.shape == (2, 4)
+    s = eng.io_summary()
+    assert s["io_est_s"] == 0.0 and s["io_sim_s"] == 0.0  # no flash tier
+
+
+def test_slot_decode_matches_single_stream(lm):
+    """A request decoded in slot mode produces the same tokens as the same
+    prompt decoded through the classic single-stream path."""
+    cfg, model, params = lm
+    req = _requests(cfg, 1, max_new=4)[0]
+
+    eng_s = _engine(model, params, batch=1, seed=3)
+    eng_s.enable_slots()
+    last, _ = eng_s.admit_slot(0, req.prompt)
+    tok0 = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    slot_toks, _ = eng_s.decode_slots(tok0, 4)
+
+    eng_c = _engine(model, params, batch=1, seed=3)
+    last_c, cache = model.prefill(params, req.prompt, 64)
+    eng_c.cache = cache
+    out_c = eng_c.decode(tok0, 4)
+    assert bool(jnp.all(slot_toks == out_c[:, 1:]))

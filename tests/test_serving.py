@@ -1,8 +1,14 @@
-"""Serving engine + SparseExecution: end-to-end policies and invariants."""
+"""Serving engine + SparseExecution: end-to-end policies and invariants.
+
+Marked ``slow`` module-wide (reduced-VLM engine runs take ~100 s total);
+the fast tier's serving coverage lives in tests/test_scheduler.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_config
 from repro.configs.base import InputShape

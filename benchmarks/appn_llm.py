@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from .common import Rows, llm_importance
-from .fig6_tradeoff import matched_speedups, tradeoff_curves
+from .fig6_tradeoff import matched_speedups
 
 MODELS = {
     "llama3-8b": (4096, 14336),

@@ -10,10 +10,9 @@ behaviour, not new hardware measurements.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Iterable, List, Tuple
+from typing import Callable, List, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -15,7 +15,6 @@ from repro.core import (
     ChunkConfig,
     ChunkSelector,
     activation_frequency,
-    retention,
     topk_mask_np,
 )
 

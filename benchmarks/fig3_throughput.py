@@ -1,7 +1,6 @@
 """Fig. 3 / Fig. 4a: read throughput vs block size per device profile."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import JETSON_AGX, JETSON_NANO
 

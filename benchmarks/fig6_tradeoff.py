@@ -13,7 +13,7 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ChunkConfig, ChunkSelector, profile_table, retention, topk_mask_np
+from repro.core import ChunkConfig, ChunkSelector, retention, topk_mask_np
 
 from .common import ImportanceModel, Rows
 
@@ -37,7 +37,6 @@ def tradeoff_curves(
     v = imp.sample()
     vj = jnp.asarray(v)
     row_bytes = cols * 2
-    max_kb = 236.0 if device == "agx" else 348.0
     sel = ChunkSelector.build(
         n, row_bytes, device=device,
         cfg=ChunkConfig.for_shape(n, cols, device),

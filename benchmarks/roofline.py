@@ -18,7 +18,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs import get_config
 from repro.configs.shapes import get_shape
@@ -49,7 +49,6 @@ def count_params(cfg) -> Dict[str, float]:
         mlp_total = mlp_active = n_mats * d * f
     if cfg.arch_type == "hybrid":
         m_cfg_inner = cfg.ssm_expand * d
-        conv_dim = m_cfg_inner + 2 * cfg.ssm_state
         mamba = d * (2 * m_cfg_inner + 2 * cfg.ssm_state + m_cfg_inner // cfg.ssm_head_dim) \
             + m_cfg_inner * d
         shared = attn + 3 * d * f

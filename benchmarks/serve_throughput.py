@@ -1,21 +1,35 @@
 """Serving throughput: fused-scan decode vs the legacy per-token loop, the
-chunk-plan reuse knob, and continuous-batching request latency per policy.
+chunk-plan reuse knob, the residency-cache budget sweep, and
+continuous-batching request latency per policy.
 
-Three sections (reduced InternVL2 under the Nano flash simulator):
+Four sections (reduced InternVL2 under the Nano flash simulator):
 
   * serve/fused_vs_loop — equal batch, equal policy: wall tokens/s of the
     one-jit ``lax.scan`` decode vs the seed's one-jit-call-per-token loop,
     asserting byte-identical greedy tokens (the acceptance criterion);
   * serve/plan_reuse — I/O per token as ``plan_refresh_interval`` grows
     (selection reruns every k steps, resident chunks are free in between);
+  * serve/cache_sweep — steady-state decode I/O vs DRAM residency budget
+    (``cache_mb``) for chunk AND topk at fixed sparsity: the serve-stack
+    reproduction of the paper's §5 claim — more cache → strictly less
+    flash I/O, and the chunk-vs-topk advantage persists (indeed grows) at
+    every swept budget because the remaining misses are more scattered;
   * serve/batch_<method> — chunk vs topk vs dense vs dense_free under
     concurrent Poisson-arriving streams: simulated tokens/s and p50/p95
     request latency from the continuous-batching scheduler.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.serve_throughput
+CI artifact: PYTHONPATH=src python -m benchmarks.serve_throughput \
+                 --smoke --out BENCH_serve.json
+(--smoke runs the first three sections shrunk to well under a minute on
+CPU — continuous batching is covered by tier-1 tests — and skips the
+wall-clock speedup assertion, which is noise-prone on shared CI runners;
+the byte-identity and I/O-ordering assertions always run.)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -26,7 +40,13 @@ from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.models import build_model
 from repro.models.inputs import make_dummy_batch
-from repro.serving import PoissonArrivalDriver, Request, Scheduler, ServeEngine
+from repro.serving import (
+    PoissonArrivalDriver,
+    Request,
+    Scheduler,
+    ServeEngine,
+    SparseExecution,
+)
 
 from .common import Rows
 
@@ -45,10 +65,10 @@ def _setup():
     return cfg, model, params, batch
 
 
-def _engine(model, params, method="chunk", refresh=1, seed=5):
+def _engine(model, params, method="chunk", refresh=1, seed=5, cache_mb=0.0):
     return ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
                        device="nano", sparsity=0.4, method=method, seed=seed,
-                       plan_refresh_interval=refresh)
+                       plan_refresh_interval=refresh, cache_mb=cache_mb)
 
 
 def _timed_decode(eng, decode_fn, tok0, n, repeats=3):
@@ -66,44 +86,98 @@ def _timed_decode(eng, decode_fn, tok0, n, repeats=3):
     return out, float(np.median(walls))
 
 
-def bench_fused_vs_loop(rows: Rows, model, params, batch) -> None:
+def bench_fused_vs_loop(rows: Rows, model, params, batch,
+                        decode_tokens=DECODE_TOKENS, repeats=3,
+                        assert_speedup=True) -> None:
     eng_f = _engine(model, params)
     eng_l = _engine(model, params)
     tok0 = jnp.argmax(eng_f.prefill(batch), -1)[:, None].astype(jnp.int32)
     eng_l.prefill(batch)
     # warm up both compiled paths, then measure from identical cache state
-    eng_f.decode(tok0, DECODE_TOKENS)
-    eng_l.decode_per_token(tok0, DECODE_TOKENS)
+    eng_f.decode(tok0, decode_tokens)
+    eng_l.decode_per_token(tok0, decode_tokens)
     eng_f.prefill(batch)
     eng_l.prefill(batch)
-    out_f, wall_f = _timed_decode(eng_f, eng_f.decode, tok0, DECODE_TOKENS)
+    out_f, wall_f = _timed_decode(eng_f, eng_f.decode, tok0, decode_tokens,
+                                  repeats=repeats)
     eng_l.prefill(batch)
-    out_l, wall_l = _timed_decode(eng_l, eng_l.decode_per_token, tok0, DECODE_TOKENS)
+    out_l, wall_l = _timed_decode(eng_l, eng_l.decode_per_token, tok0,
+                                  decode_tokens, repeats=repeats)
     identical = bool(jnp.all(out_f == out_l))
-    tps_f = DECODE_TOKENS * BATCH / wall_f
-    tps_l = DECODE_TOKENS * BATCH / wall_l
+    tps_f = decode_tokens * BATCH / wall_f
+    tps_l = decode_tokens * BATCH / wall_l
     assert identical, "fused scan and per-token loop diverged"
-    assert tps_f > tps_l, (
-        f"fused decode must beat the per-token loop: {tps_f:.1f} vs {tps_l:.1f} tok/s"
-    )
-    rows.add("serve/fused_scan", wall_f / DECODE_TOKENS * 1e6,
+    if assert_speedup:
+        assert tps_f > tps_l, (
+            f"fused decode must beat the per-token loop: {tps_f:.1f} vs {tps_l:.1f} tok/s"
+        )
+    rows.add("serve/fused_scan", wall_f / decode_tokens * 1e6,
              f"tokens_per_s={tps_f:.1f}")
-    rows.add("serve/per_token_loop", wall_l / DECODE_TOKENS * 1e6,
+    rows.add("serve/per_token_loop", wall_l / decode_tokens * 1e6,
              f"tokens_per_s={tps_l:.1f}")
     rows.add("serve/fused_vs_loop", 0.0,
              f"speedup={tps_f / tps_l:.2f}x identical_tokens={identical}")
 
 
-def bench_plan_reuse(rows: Rows, model, params, batch) -> None:
-    for k in (1, 2, 4, 8):
+def bench_plan_reuse(rows: Rows, model, params, batch,
+                     intervals=(1, 2, 4, 8), decode_tokens=DECODE_TOKENS) -> None:
+    for k in intervals:
         eng = _engine(model, params, refresh=k)
         tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
-        eng.decode(tok0, DECODE_TOKENS)
+        eng.decode(tok0, decode_tokens)
         steps = [s for s in eng.stats if s.kind == "decode"]
         io_tok = float(np.mean([s.io_est_s for s in steps]))
         refreshes = sum(1 for s in steps if s.io_est_s > 0)
         rows.add(f"serve/plan_reuse_k{k}", io_tok * 1e6,
-                 f"refresh_steps={refreshes}/{DECODE_TOKENS}")
+                 f"refresh_steps={refreshes}/{decode_tokens}")
+
+
+def bench_cache_sweep(rows: Rows, model, params, batch, cfg,
+                      fractions=(0.0, 0.15, 0.35, 0.7),
+                      decode_tokens=DECODE_TOKENS) -> None:
+    """§5 end-to-end: sweep the residency-cache byte budget at fixed 0.4
+    sparsity and record steady-state decode I/O + hit rate for chunk and
+    topk. Asserts the acceptance criteria: chunk I/O is monotone
+    non-increasing in budget (strictly below cache-0 whenever the budget is
+    > 0) and the chunk-vs-topk advantage persists at every point."""
+    sizing = SparseExecution(cfg, device="nano", sparsity=0.4)  # sizes the sweep
+    total_mb = sizing.sparsifiable_bytes(cfg.n_layers) / (1024.0 * 1024.0)
+    budgets = [round(f * total_mb, 3) for f in fractions]
+    steady = {}
+    for method in ("chunk", "topk"):
+        for mb in budgets:
+            eng = _engine(model, params, method=method, refresh=2, cache_mb=mb)
+            eng.simulator.noise = 0.0  # deterministic sim for the assertions
+            tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
+            eng.decode(tok0, decode_tokens)
+            steps = [s for s in eng.stats if s.kind == "decode"]
+            # steady state: drop the warm-up half where the tier is filling
+            tail = steps[len(steps) // 2:]
+            io_tok = float(np.mean([s.io_sim_s for s in tail]))
+            hit = sum(s.hit_rows for s in tail)
+            miss = sum(s.miss_rows for s in tail)
+            rate = hit / (hit + miss) if (hit + miss) > 0 else 0.0
+            steady[(method, mb)] = io_tok
+            rows.add(f"serve/cache_sweep_{method}_mb{mb:g}", io_tok * 1e6,
+                     f"hit_rate={rate:.3f} cache_frac_of_weights="
+                     f"{mb / total_mb if total_mb else 0:.2f}")
+    chunk_ios = [steady[("chunk", mb)] for mb in budgets]
+    for prev, cur, mb in zip(chunk_ios, chunk_ios[1:], budgets[1:]):
+        assert cur <= prev * (1 + 1e-9), (
+            f"chunk I/O must be monotone non-increasing in cache budget; "
+            f"rose to {cur:.3e} at {mb} MB"
+        )
+        assert cur < chunk_ios[0], (
+            f"cache_mb={mb} > 0 must beat the cache-0 run strictly "
+            f"({cur:.3e} vs {chunk_ios[0]:.3e})"
+        )
+    for mb in budgets:
+        ratio = steady[("topk", mb)] / max(steady[("chunk", mb)], 1e-30)
+        assert ratio > 1.0, (
+            f"chunk-vs-topk I/O advantage must persist at cache_mb={mb} "
+            f"(ratio {ratio:.2f})"
+        )
+        rows.add(f"serve/cache_topk_vs_chunk_mb{mb:g}", 0.0, f"ratio={ratio:.2f}x")
 
 
 def bench_continuous_batching(rows: Rows, cfg, model, params,
@@ -139,15 +213,53 @@ def bench_continuous_batching(rows: Rows, cfg, model, params,
         )
 
 
-def run(rows: Rows) -> None:
+def run(rows: Rows, smoke: bool = False) -> None:
     cfg, model, params, batch = _setup()
+    if smoke:
+        # tiny everything: identity + I/O-ordering assertions still run,
+        # wall-clock speedup (noisy on shared CI runners) does not; the
+        # continuous-batching section is exercised by tier-1 tests instead
+        bench_fused_vs_loop(rows, model, params, batch, decode_tokens=8,
+                            repeats=1, assert_speedup=False)
+        bench_plan_reuse(rows, model, params, batch, intervals=(1, 4),
+                         decode_tokens=8)
+        bench_cache_sweep(rows, model, params, batch, cfg,
+                          fractions=(0.0, 0.35), decode_tokens=8)
+        return
     bench_fused_vs_loop(rows, model, params, batch)
     bench_plan_reuse(rows, model, params, batch)
+    bench_cache_sweep(rows, model, params, batch, cfg)
     bench_continuous_batching(rows, cfg, model, params)
 
 
+def _emit_json(rows: Rows, path: str, smoke: bool) -> None:
+    payload = {
+        "bench": "serve_throughput",
+        "arch": ARCH,
+        "smoke": smoke,
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows.rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI: every section in <60 s on CPU")
+    ap.add_argument("--out", default=None,
+                    help="also write the rows as JSON (the CI perf artifact, "
+                         "e.g. BENCH_serve.json)")
+    args = ap.parse_args()
     rows = Rows()
     print("name,us_per_call,derived")
-    run(rows)
+    t0 = time.perf_counter()
+    run(rows, smoke=args.smoke)
     rows.emit()
+    print(f"# total {time.perf_counter() - t0:.1f}s")
+    if args.out:
+        _emit_json(rows, args.out, args.smoke)

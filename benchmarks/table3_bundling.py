@@ -47,10 +47,13 @@ def run(rows: Rows) -> None:
             chunk_curve.append((float(retention(vj, m_c)), float(lat_c) * 3))
         ch = sorted(chunk_curve)
         ret_c = np.asarray([r for r, _ in ch])
-        lat_c = np.asarray([l for _, l in ch])
-        ours_at = lambda r: max(float(np.interp(r, ret_c, lat_c)), 1e-12)
-        sp_base = np.mean([l / ours_at(r) for r, l in base])
-        sp_bund = np.mean([l / ours_at(r) for r, l in bund])
+        lat_c = np.asarray([lat for _, lat in ch])
+
+        def ours_at(r):
+            return max(float(np.interp(r, ret_c, lat_c)), 1e-12)
+
+        sp_base = np.mean([lat / ours_at(r) for r, lat in base])
+        sp_bund = np.mean([lat / ours_at(r) for r, lat in bund])
         rows.add(
             f"table3/{name}",
             ours_at(base[2][0]) * 1e6,

@@ -16,12 +16,11 @@ import dataclasses
 from typing import Optional
 
 import jax.numpy as jnp
-import numpy as np
 
 from .baselines import topk_mask
 from .chunking import ChunkConfig, ChunkSelector
 from .importance import importance, retention
-from .latency_model import DeviceProfile, LatencyTable, get_profile
+from .latency_model import DeviceProfile, LatencyTable
 from .reorder import Reordering
 
 

@@ -12,12 +12,10 @@
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax.numpy as jnp
 import numpy as np
 
-from .latency_model import DeviceProfile, LatencyTable, profile_table
+from .latency_model import DeviceProfile, profile_table
 
 
 def topk_mask(v: jnp.ndarray, budget) -> jnp.ndarray:

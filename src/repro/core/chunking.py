@@ -22,13 +22,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .latency_model import KB, DeviceProfile, LatencyTable, profile_table
+from .latency_model import (
+    KB,
+    DeviceProfile,
+    LatencyTable,
+    profile_table,
+    resident_rows_in_windows,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,14 +118,26 @@ def select_chunks_np(
     row_bytes: int,
     table: LatencyTable,
     cfg: ChunkConfig,
+    resident: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    """Literal Algorithm 1. Returns a bool mask of shape (N,)."""
+    """Literal Algorithm 1. Returns a bool mask of shape (N,).
+
+    ``resident`` (bool (N,), optional): rows already memory-resident in the
+    DRAM cache tier. A candidate window's cost counts only its NON-resident
+    rows (resident rows transfer nothing), making the utility the marginal
+    I/O cost of the window — the residency-aware variant the runtime
+    ``ChunkSelector.select`` implements."""
     v = np.asarray(v, np.float32)
     n = v.shape[0]
     cumsum = np.concatenate([[0.0], np.cumsum(v, dtype=np.float32)])
     starts, sizes = _candidate_schedule(n, row_bytes, cfg)
     benefit = cumsum[starts + sizes] - cumsum[starts]
-    cost = np.asarray(table.lookup(jnp.asarray(sizes)), np.float32)
+    if resident is None:
+        cost_rows = sizes
+    else:
+        rcum = np.concatenate([[0.0], np.cumsum(np.asarray(resident, np.float32))])
+        cost_rows = sizes - np.rint(rcum[starts + sizes] - rcum[starts]).astype(np.int64)
+    cost = np.asarray(table.lookup(jnp.asarray(cost_rows)), np.float32)
     score = benefit / np.maximum(cost, 1e-30)
     order = np.argsort(-score, kind="stable")
 
@@ -181,12 +199,28 @@ class ChunkSelector:
         return int(self.starts.shape[0])
 
     @functools.partial(jax.jit, static_argnums=0)
-    def select(self, v: jnp.ndarray, budget: jnp.ndarray):
-        """Returns (mask bool (N,), n_selected, est_latency_seconds)."""
+    def select(self, v: jnp.ndarray, budget: jnp.ndarray, resident=None):
+        """Returns (mask bool (N,), n_selected, est_latency_seconds).
+
+        ``resident`` (bool (N,), optional): rows already memory-resident in
+        the DRAM residency tier. When given, selection is **marginal-cost
+        aware**: a candidate window's utility divides its importance by the
+        latency of only its non-resident rows (resident rows transfer
+        nothing, so a window overlapping the cache is nearly free), and the
+        returned ``est_latency`` charges only the cache-miss rows of the
+        final mask. With ``resident=None`` (or all-false) this reduces
+        exactly to Algorithm 1.
+        """
         v = v.astype(jnp.float32)
         cumsum = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(v)])
         benefit = cumsum[self.starts + self.sizes] - cumsum[self.starts]
-        cost = jnp.maximum(self.table.lookup(self.sizes), 1e-30)
+        if resident is None:
+            cost_rows = self.sizes
+        else:
+            cost_rows = self.sizes - resident_rows_in_windows(
+                self.starts, self.sizes, resident
+            )
+        cost = jnp.maximum(self.table.lookup(cost_rows), 1e-30)
         score = benefit / cost
         order = jnp.argsort(-score, stable=True)
         starts_s = self.starts[order]
@@ -216,7 +250,10 @@ class ChunkSelector:
             cond, body, (jnp.int32(0), mask0, jnp.int32(0))
         )
         mask = mask[: self.n].astype(bool)
-        est_latency = self.table.mask_latency(mask)
+        if resident is None:
+            est_latency = self.table.mask_latency(mask)
+        else:
+            est_latency = self.table.mask_latency_miss(mask, resident)
         return mask, selected, est_latency
 
     def select_for_sparsity(self, v: jnp.ndarray, sparsity: float):

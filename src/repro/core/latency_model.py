@@ -29,7 +29,7 @@ tables (runtime selection inside jit).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -54,6 +54,11 @@ class DeviceProfile:
       interleave_lift: multiplicative lift applied by the *simulator* (not
         the model) to mimic the pattern-dependent controller effects the
         paper observes as a proportional bias in Fig. 5.
+      dram_cache_mb: default DRAM budget (MB) for the dynamic chunk
+        residency cache (paper §5 "Leveraging Additional Memory Budget") —
+        the capacity ``ServeEngine`` uses when no explicit ``cache_mb`` is
+        given. 0 disables the residency tier; the CLI ``--cache-mb`` and the
+        engine argument override it per run.
     """
 
     name: str
@@ -61,6 +66,15 @@ class DeviceProfile:
     iops: float
     base_latency: float = 0.0
     interleave_lift: float = 1.0
+    dram_cache_mb: float = 0.0
+
+    def cache_capacity_bytes(self, cache_mb: Optional[float] = None) -> int:
+        """Residency-tier capacity in bytes; ``cache_mb`` overrides the
+        profile default."""
+        mb = self.dram_cache_mb if cache_mb is None else float(cache_mb)
+        if mb < 0:
+            raise ValueError(f"cache_mb must be >= 0, got {mb}")
+        return int(mb * MB)
 
     @property
     def knee_bytes(self) -> float:
@@ -131,6 +145,21 @@ class LatencyTable:
         _, sizes, _ = mask_to_runs_jax(mask)
         return jnp.sum(self.lookup(sizes) * (sizes > 0))
 
+    def mask_latency_miss(self, mask: jnp.ndarray, resident: jnp.ndarray) -> jnp.ndarray:
+        """Residency-aware additive model: Σ runs(mask) T[miss rows in run].
+
+        Each selected run issues ONE request charged for its non-resident
+        rows only — resident rows inside a run are served from the DRAM
+        tier and do not fragment the read (read-through coalescing; a
+        per-row split would wrongly pay 1/iops per fragment). Fully
+        resident runs issue no request at all. With ``resident`` all-false
+        this equals ``mask_latency``. jit-safe."""
+        from .contiguity import mask_to_runs_jax
+
+        starts, sizes, _ = mask_to_runs_jax(mask)
+        miss = sizes - resident_rows_in_windows(starts, sizes, resident).astype(sizes.dtype)
+        return jnp.sum(self.lookup(miss) * (miss > 0))
+
     def mask_latency_np(self, mask: np.ndarray) -> float:
         from .contiguity import mask_to_chunks_np
 
@@ -184,6 +213,21 @@ PROFILES: Dict[str, DeviceProfile] = {
 PROFILES["agx"] = JETSON_AGX
 PROFILES["nano"] = JETSON_NANO
 PROFILES["tpu"] = TPU_V5E_HBM
+
+
+def resident_rows_in_windows(
+    starts: jnp.ndarray, sizes: jnp.ndarray, resident: jnp.ndarray
+) -> jnp.ndarray:
+    """Resident-row count inside each [start, start+size) window, via a
+    float32 prefix sum (exact for counts < 2^24) rounded back to int.
+    Shared by ``LatencyTable.mask_latency_miss`` and the marginal-cost
+    scoring in ``ChunkSelector.select`` so the selector's per-window cost
+    and the final latency charge can never diverge. jit-safe."""
+    rcum = jnp.concatenate(
+        [jnp.zeros((1,), jnp.float32), jnp.cumsum(resident.astype(jnp.float32))]
+    )
+    res_in = rcum[starts + sizes] - rcum[starts]
+    return jnp.round(res_in).astype(jnp.int32)
 
 
 def get_profile(name: str) -> DeviceProfile:

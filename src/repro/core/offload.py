@@ -17,7 +17,7 @@ EXPERIMENTS.md that refers to Jetson hardware, and is labeled as such.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -27,12 +27,18 @@ from .latency_model import DeviceProfile, get_profile
 
 @dataclasses.dataclass
 class IOEvent:
-    """One simulated weight-matrix load."""
+    """One simulated weight-matrix load.
+
+    ``hit_rate`` is the DRAM residency-cache hit fraction of the rows the
+    step *selected* (hit rows transfer nothing — the event's latency charges
+    only the cache-miss bytes). 0.0 when the residency tier is disabled.
+    """
 
     name: str
     nbytes: int
     n_chunks: int
     latency_s: float
+    hit_rate: float = 0.0
 
 
 class FlashOffloadSimulator:
@@ -86,17 +92,27 @@ class FlashOffloadSimulator:
         return self.measure_chunks(mask_to_chunks_np(mask), row_bytes, name=name)
 
     def measure_from_estimate(
-        self, est_s: float, n_chunks: int = 32, diversity: float = 0.5, name: str = ""
+        self,
+        est_s: float,
+        n_chunks: int = 32,
+        diversity: float = 0.5,
+        name: str = "",
+        hit_rate: float = 0.0,
     ) -> float:
         """Turn an additive-model estimate (computed inside jit by the
         runtime) into a simulated measurement — same lift + jitter model as
-        ``measure_chunks`` without re-deriving the pattern."""
+        ``measure_chunks`` without re-deriving the pattern. The estimate
+        already charges only cache-miss bytes when the residency tier is
+        active; ``hit_rate`` records the tier's hit fraction on the event."""
         if est_s <= 0.0:
             return 0.0
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
         latency = est_s * lift * jitter
-        self.log.append(IOEvent(name=name, nbytes=0, n_chunks=n_chunks, latency_s=latency))
+        self.log.append(
+            IOEvent(name=name, nbytes=0, n_chunks=n_chunks, latency_s=latency,
+                    hit_rate=float(hit_rate))
+        )
         return latency
 
     def measure_from_estimate_batch(
@@ -105,12 +121,17 @@ class FlashOffloadSimulator:
         n_chunks: int = 32,
         diversity: float = 0.5,
         name: str = "",
+        hit_rates: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Vectorized ``measure_from_estimate`` for the scan-fused decode
         path: one call consumes the whole (n_steps,) on-device estimate
         array in a single host round-trip. Zero estimates (plan-reuse steps,
         dense_free) stay exactly zero and draw no jitter. Appends one IOEvent
-        per step, matching the per-token path's log granularity."""
+        per step, matching the per-token path's log granularity.
+
+        ``hit_rates`` (optional, (n_steps,)): per-step residency-cache hit
+        fraction to record on each logged IOEvent — the estimates themselves
+        already charge only cache-miss bytes."""
         est = np.asarray(est_s, dtype=np.float64).reshape(-1)
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         # consume the RNG stream and the event log exactly as the scalar
@@ -129,6 +150,7 @@ class FlashOffloadSimulator:
                         nbytes=0,
                         n_chunks=n_chunks,
                         latency_s=float(lat),
+                        hit_rate=float(hit_rates[i]) if hit_rates is not None else 0.0,
                     )
                 )
         return latency

@@ -13,8 +13,6 @@ The paper finds this simple scheme matches Ripple's co-activation clustering
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import jax.numpy as jnp
 import numpy as np
 

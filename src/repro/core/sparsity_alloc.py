@@ -16,7 +16,7 @@ budgets, exactly as in the paper's comparison setup.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

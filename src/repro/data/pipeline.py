@@ -15,7 +15,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from ..configs.base import InputShape, ModelConfig
+from ..configs.base import ModelConfig
 from .tokenizer import ByteTokenizer
 
 

@@ -9,7 +9,6 @@ gate/up HBM round-trip.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ and scalar-prefetch structure are identical).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -16,7 +15,6 @@ import numpy as np
 
 from .chunk_gather_matmul import align_chunk_table, chunk_gather_matmul
 from .chunk_gather_swiglu import chunk_gather_swiglu
-from .ref import chunk_gather_matmul_ref, chunk_gather_swiglu_ref
 
 
 def _on_tpu() -> bool:

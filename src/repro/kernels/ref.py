@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 
 def chunk_table_to_mask(starts, sizes, n: int) -> jnp.ndarray:

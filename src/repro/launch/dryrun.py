@@ -26,7 +26,7 @@ import argparse
 import json
 import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

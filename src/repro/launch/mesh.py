@@ -10,7 +10,7 @@ Production topology (assignment): TPU v5e, 256 chips/pod.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import Mesh

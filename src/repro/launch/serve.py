@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--plan-refresh-interval", type=int, default=1,
                     help="recompute chunk selection every k decode steps; "
                          "reuse the resident plan in between")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="DRAM budget (MB) of the dynamic chunk residency "
+                         "cache (paper §5); resident rows cost no flash I/O. "
+                         "Default: the device profile's dram_cache_mb (0 = off)")
     ap.add_argument("--per-token", action="store_true",
                     help="use the legacy one-jit-per-token decode loop "
                          "instead of the fused lax.scan loop")
@@ -66,7 +70,8 @@ def main():
     eng = ServeEngine(model, params, max_seq=args.max_seq, batch_size=args.batch,
                       device=args.device, sparsity=args.sparsity,
                       method=args.method,
-                      plan_refresh_interval=args.plan_refresh_interval)
+                      plan_refresh_interval=args.plan_refresh_interval,
+                      cache_mb=args.cache_mb)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -89,7 +94,7 @@ def main():
                   f"io_sim {st.io_sim_s*1e3:.2f} ms")
     tok0 = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
     decode = eng.decode_per_token if args.per_token else eng.decode
-    out = decode(tok0, args.decode_tokens)
+    decode(tok0, args.decode_tokens)
     dsteps = [s for s in eng.stats if s.kind == "decode"]
     mode = "per-token" if args.per_token else "fused-scan"
     print(f"[decode:{mode}] {args.decode_tokens} tokens  "
@@ -98,7 +103,9 @@ def main():
     s = eng.io_summary()
     print(f"[total] method={args.method} sparsity={args.sparsity} "
           f"refresh_interval={args.plan_refresh_interval} "
-          f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms")
+          f"cache_mb={eng.cache_mb:g} "
+          f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms  "
+          f"cache_hit_rate {s['cache_hit_rate']:.3f}")
 
 
 def _serve_streams(args, cfg, eng):
@@ -120,10 +127,12 @@ def _serve_streams(args, cfg, eng):
     sched.submit(driver.generate(args.streams))
     stats = sched.run()
     print(f"[serve] method={args.method} slots={args.batch} "
-          f"rate={args.arrival_rate}/s refresh={args.plan_refresh_interval}")
+          f"rate={args.arrival_rate}/s refresh={args.plan_refresh_interval} "
+          f"cache_mb={eng.cache_mb:g}")
     print(f"[serve] {stats.row()}")
     print(f"[serve] ttft p50 {stats.ttft_p50_s*1e3:.2f} ms  "
-          f"sim time {stats.sim_time_s*1e3:.1f} ms")
+          f"sim time {stats.sim_time_s*1e3:.1f} ms  "
+          f"cache_hit_rate {eng.io_summary()['cache_hit_rate']:.3f}")
 
 
 if __name__ == "__main__":

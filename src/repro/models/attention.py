@@ -9,7 +9,6 @@ scanned q blocks) — functionally identical to naive attention (tested).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

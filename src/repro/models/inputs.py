@@ -13,7 +13,7 @@ Geometry rules (DESIGN.md §4):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

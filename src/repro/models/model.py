@@ -19,17 +19,16 @@ tells the trainer where token-aligned hidden states start.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import InputShape, ModelConfig
+from ..configs.base import ModelConfig
 from ..sharding import shard_act
 from .attention import CacheSpec, init_kv_cache, multi_head_attention
 from .common import ParamDef, init_params, sinusoidal_positions, stack_layer_defs
-from .mlp import gelu_mlp, gelu_mlp_param_defs, mlp_param_defs, swiglu_mlp
+from .mlp import gelu_mlp
 from .ssm import (
     Mamba2Config,
     mamba2_decode_step,
@@ -199,7 +198,6 @@ class _DecoderLM:
         return axes
 
     def _embed_input(self, params, batch):
-        cfg = self.cfg
         tokens = batch["tokens"]
         x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
         if self.has_frontend:
@@ -838,7 +836,6 @@ class _Whisper:
         _, (enc_k, enc_v) = jax.lax.scan(kv_body, None, params["decoder"])
         cache["enc_k"], cache["enc_v"] = enc_k, enc_v
 
-        logits = None
         tokens = batch["tokens"]
         b, s = tokens.shape
         x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
@@ -874,7 +871,6 @@ class _Whisper:
     def decode_step(self, params, token, cache, sparse_ctx=None):
         cfg = self.cfg
         length = cache["length"]
-        b = token.shape[0]
         x = jnp.take(params["embed"], token, axis=0).astype(COMPUTE_DTYPE)
         pos_emb = jax.lax.dynamic_slice(
             params["pos_embed_dec"], (length % params["pos_embed_dec"].shape[0], 0), (1, cfg.d_model)

@@ -14,7 +14,7 @@ the O(1) recurrent update (→ long_500k capable).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +77,9 @@ def _mlstm_scan(q, k, v, log_i, log_f, state, chunk: int):
     b, s, h, dh = q.shape
     pad = (-s) % chunk
     if pad:
-        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        def zf(x):
+            return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
         q, k, v, log_i, log_f = map(zf, (q, k, v, log_i, log_f))
     nc = (s + pad) // chunk
     valid = jnp.arange(s + pad) < s  # padded steps must not touch the state

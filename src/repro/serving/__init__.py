@@ -1,4 +1,11 @@
 from .engine import ServeEngine, StepStats
 from .request import PoissonArrivalDriver, Request, RequestState
 from .scheduler import Scheduler, SchedulerStats
-from .sparse_exec import SERVE_METHODS, SPARSE_METHODS, SparseExecution, validate_method
+from .sparse_exec import (
+    SERVE_METHODS,
+    SPARSE_METHODS,
+    SparseExecution,
+    plan_hit_miss,
+    residency_from_score,
+    validate_method,
+)

@@ -12,7 +12,12 @@ A/B comparison (benchmarks/serve_throughput.py) and regression tests.
 Inside the scan, ``plan_refresh_interval`` enables temporal chunk-plan
 reuse: utility-guided selection reruns every k steps and the cached masks
 are reused (at zero I/O — their chunks are still resident) in between.
-See docs/serving.md for the full decode contract.
+``cache_mb`` adds the dynamic chunk residency cache (paper §5): a
+byte-budgeted DRAM tier whose per-(layer, site) score state rides the same
+plan carry — selection becomes marginal-cost aware, refresh steps insert /
+evict, and only cache-miss rows are charged (hit rate lands in
+``io_summary``). See docs/serving.md for the full decode contract and the
+residency-state lifecycle.
 
 Two operating modes share the engine:
 
@@ -33,18 +38,22 @@ decode_step only (their state is the cache).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
+from ..core.latency_model import MB
 from ..core.offload import ComputeModel, FlashOffloadSimulator
 from ..models.model import Model
-from .sparse_exec import SparseExecution, validate_method
+from .sparse_exec import (
+    SparseExecution,
+    plan_hit_miss,
+    reset_plan_counters,
+    validate_method,
+)
 
 
 @dataclasses.dataclass
@@ -55,6 +64,10 @@ class StepStats:
     io_sim_s: float
     select_overhead_s: float
     wall_s: float
+    # residency-tier accounting: selected rows served from the DRAM cache
+    # (free) vs streamed from flash this step; 0/0 when the tier is off
+    hit_rows: float = 0.0
+    miss_rows: float = 0.0
 
 
 class ServeEngine:
@@ -70,7 +83,11 @@ class ServeEngine:
         reorderings: Optional[dict] = None,
         seed: int = 0,
         plan_refresh_interval: int = 1,
+        cache_mb: Optional[float] = None,
     ):
+        """``cache_mb``: DRAM budget (MB) of the dynamic chunk residency
+        cache (paper §5). None → the device profile's ``dram_cache_mb``
+        default; 0 disables the tier."""
         validate_method(method, allow_dense_free=True)
         if plan_refresh_interval < 1:
             raise ValueError("plan_refresh_interval must be >= 1")
@@ -82,11 +99,14 @@ class ServeEngine:
         self.compute_model = ComputeModel()
         self.method = method
         self.plan_refresh_interval = plan_refresh_interval
+        # profile-default resolution + >= 0 validation live on the profile
+        self.cache_mb = self.simulator.profile.cache_capacity_bytes(cache_mb) / MB
         self.sparse_ctx = (
             None
             if method == "dense_free"
             else SparseExecution(model.cfg, device=device, sparsity=sparsity,
-                                 method=method, reorderings=reorderings)
+                                 method=method, reorderings=reorderings,
+                                 cache_mb=self.cache_mb)
         )
         self.cache = model.init_cache(batch_size, max_seq)
         self.stats: List[StepStats] = []
@@ -95,12 +115,16 @@ class ServeEngine:
         # per-token baseline shares the fused loop's step function (the
         # planned path), so the two decode modes differ ONLY in host-loop
         # structure — that's what makes their outputs byte-identical
-        self._decode_one = jax.jit(
-            lambda p, t, c, plan, i: model.decode_step_planned(
+        def _decode_one_impl(p, t, c, plan, i):
+            logits, cache, io, new_plan = model.decode_step_planned(
                 p, t, c, self.sparse_ctx, plan,
                 (i % self.plan_refresh_interval) == 0,
             )
-        )
+            h0, m0 = plan_hit_miss(plan)
+            h1, m1 = plan_hit_miss(new_plan)
+            return logits, cache, io, new_plan, h1 - h0, m1 - m0
+
+        self._decode_one = jax.jit(_decode_one_impl)
         self._append = jax.jit(
             lambda p, f, c: model.append_frame(p, f, c, self.sparse_ctx)
         )
@@ -118,24 +142,28 @@ class ServeEngine:
     def _decode_scan_impl(self, params, token, cache, n_tokens: int, plan):
         """One jit: scan ``decode_step_planned`` over n_tokens greedy steps.
 
-        Returns (tokens (b, n), final cache, final plan, io (n,)). All I/O
-        estimates stay on device until the caller syncs the whole array once.
+        Returns (tokens (b, n), final cache, final plan, io (n,),
+        hits (n,), misses (n,)) — per-step residency-cache row counts ride
+        along with the I/O estimates. Everything stays on device until the
+        caller syncs once.
         """
         k = self.plan_refresh_interval
 
         def step(carry, i):
             tok, cache, plan = carry
             refresh = (i % k) == 0
-            logits, cache, io, plan = self.model.decode_step_planned(
+            logits, cache, io, new_plan = self.model.decode_step_planned(
                 params, tok, cache, self.sparse_ctx, plan, refresh
             )
+            h0, m0 = plan_hit_miss(plan)
+            h1, m1 = plan_hit_miss(new_plan)
             nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            return (nxt, cache, plan), (nxt[:, 0], io)
+            return (nxt, cache, new_plan), (nxt[:, 0], io, h1 - h0, m1 - m0)
 
-        (_, cache, plan), (toks, ios) = jax.lax.scan(
+        (_, cache, plan), (toks, ios, hits, misses) = jax.lax.scan(
             step, (token, cache, plan), jnp.arange(n_tokens)
         )
-        return toks.T, cache, plan, ios  # toks: (n, b) -> (b, n)
+        return toks.T, cache, plan, ios, hits, misses  # toks: (n, b) -> (b, n)
 
     def _run_decode_scan(self, tokens: jnp.ndarray, n_tokens: int):
         """Shared fused-loop body: run the scan, sync the estimate array
@@ -143,25 +171,48 @@ class ServeEngine:
         Returns (new_tokens (b, n), per-step simulated io (n,))."""
         if self._plan is None:
             self._plan = self._init_plan()
+        self._plan = reset_plan_counters(self._plan)
         t0 = time.perf_counter()
-        toks, self.cache, self._plan, ios = self._decode_scan(
+        toks, self.cache, self._plan, ios, hits, misses = self._decode_scan(
             self.params, tokens, self.cache, n_tokens, self._plan
         )
-        ios = np.asarray(ios, np.float64)  # ONE host sync for the whole scan
+        # ONE host sync for the whole scan (estimates + residency counters)
+        packed = np.asarray(
+            jnp.stack([ios.astype(jnp.float32), hits, misses]), np.float64
+        )
+        ios, hits, misses = packed[0], packed[1], packed[2]
         wall = time.perf_counter() - t0
-        sims = self.simulator.measure_from_estimate_batch(ios, name="decode")
+        rows = hits + misses
+        hit_rates = np.where(rows > 0, hits / np.maximum(rows, 1.0), 0.0)
+        sims = self.simulator.measure_from_estimate_batch(
+            ios, name="decode", hit_rates=hit_rates
+        )
         per_step_wall = wall / max(n_tokens, 1)
-        for est, sim in zip(ios, sims):
+        for est, sim, h, m in zip(ios, sims, hits, misses):
             self.stats.append(
-                StepStats("decode", 1, float(est), float(sim), 0.0, per_step_wall)
+                StepStats("decode", 1, float(est), float(sim), 0.0, per_step_wall,
+                          hit_rows=float(h), miss_rows=float(m))
             )
         return toks, sims
+
+    @staticmethod
+    def _validate_greedy(greedy: bool) -> None:
+        """Both decode loops are argmax-only; the ``greedy`` kwarg used to
+        be silently ignored — now a ``greedy=False`` request fails loudly
+        instead of quietly returning greedy tokens."""
+        if not greedy:
+            raise NotImplementedError(
+                "sampled decoding is not implemented: ServeEngine.decode / "
+                "decode_per_token always take the argmax. Pass greedy=True "
+                "(the default) or implement a sampling step function."
+            )
 
     def decode(self, first_token: jnp.ndarray, n_tokens: int, greedy: bool = True):
         """Greedy-decode n_tokens with the fused scan loop. Returns
         (b, n_tokens+1) including ``first_token`` — same contract (and, at
         equal settings, byte-identical output) as the legacy
         ``decode_per_token`` loop."""
+        self._validate_greedy(greedy)
         toks, _ = self._run_decode_scan(first_token, n_tokens)
         return jnp.concatenate([first_token, toks], axis=1)
 
@@ -169,24 +220,32 @@ class ServeEngine:
                          greedy: bool = True):
         """The seed engine's decode loop: one jit call + one ``float(io)``
         host sync per python iteration. Runs the same step function as the
-        fused scan (including plan reuse), so at equal settings the two
-        modes produce byte-identical tokens — the only difference is the
-        per-token host round-trip the scan eliminates."""
+        fused scan (including plan reuse and residency-cache updates), so at
+        equal settings the two modes produce byte-identical tokens — the
+        only difference is the per-token host round-trip the scan
+        eliminates."""
+        self._validate_greedy(greedy)
         if self._plan is None:
             self._plan = self._init_plan()
+        self._plan = reset_plan_counters(self._plan)
         token = first_token
         out = [token]
         for i in range(n_tokens):
             t0 = time.perf_counter()
-            logits, self.cache, io, self._plan = self._decode_one(
+            logits, self.cache, io, self._plan, dh, dm = self._decode_one(
                 self.params, token, self.cache, self._plan, jnp.int32(i)
             )
             io = float(io)  # the per-token host sync the scan path avoids
+            hit, miss = float(dh), float(dm)
             wall = time.perf_counter() - t0
             token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out.append(token)
-            sim = self.simulator.measure_from_estimate(io, name="decode")
-            self.stats.append(StepStats("decode", 1, io, sim, 0.0, wall))
+            rate = hit / (hit + miss) if (hit + miss) > 0 else 0.0
+            sim = self.simulator.measure_from_estimate(
+                io, name="decode", hit_rate=rate
+            )
+            self.stats.append(StepStats("decode", 1, io, sim, 0.0, wall,
+                                        hit_rows=hit, miss_rows=miss))
         return jnp.concatenate(out, axis=1)
 
     # -- classic single-stream stages ----------------------------------------
@@ -261,8 +320,13 @@ class ServeEngine:
     def io_summary(self) -> Dict[str, float]:
         tot_est = sum(s.io_est_s for s in self.stats)
         tot_sim = sum(s.io_sim_s for s in self.stats)
+        hit = sum(s.hit_rows for s in self.stats)
+        miss = sum(s.miss_rows for s in self.stats)
         return {
             "io_est_s": tot_est,
             "io_sim_s": tot_sim,
             "steps": len(self.stats),
+            "hit_rows": hit,
+            "miss_rows": miss,
+            "cache_hit_rate": hit / (hit + miss) if (hit + miss) > 0 else 0.0,
         }

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, List, Optional
 
 import jax.numpy as jnp
 import numpy as np

@@ -12,11 +12,16 @@ gate+up for hidden_mlp) with per-matrix row sizes.
 
 Methods: "chunk" (ours), "topk" (TEAL/LLMFlash-style baseline),
 "dense" (no sparsification — full contiguous load).
+
+With ``cache_mb > 0`` a dynamic chunk residency cache (paper §5) rides the
+decode-plan carry: per-(layer, site) score state whose top-``cap_rows``
+entries are DRAM-resident, marginal-cost selection, miss-only I/O charging,
+and hit/miss accounting — see docs/serving.md for the lifecycle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +33,14 @@ from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profi
 from ..core.reorder import Reordering
 
 DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 (paper: fp16)
+
+# Dynamic residency-cache policy constants (paper §5, applied temporally):
+# scores decay by RESIDENCY_DECAY per refresh step (recency) and grow by the
+# row's importance when selected (frequency×magnitude) — a jit-friendly
+# LFU/LRU hybrid. Pinned (pre-warmed) rows get PIN_SCORE so rank-based
+# eviction never removes them.
+RESIDENCY_DECAY = 0.9
+PIN_SCORE = 1e30
 
 # The single source of truth for serving policy names (ServeEngine and
 # SparseExecution both validate against these):
@@ -43,6 +56,48 @@ def validate_method(method: str, allow_dense_free: bool = False) -> str:
     if method not in allowed:
         raise ValueError(f"unknown sparse method {method!r}; expected one of {allowed}")
     return method
+
+
+def residency_from_score(score: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Derive the resident set from a residency score vector: the top-``cap``
+    rows by score (``topk_mask``'s stable rank — never exceeds ``cap`` rows
+    even under score ties, so the byte budget holds by construction),
+    excluding never-inserted rows (score <= 0). jit-safe."""
+    return topk_mask(score, cap) & (score > 0.0)
+
+
+def plan_hit_miss(plan) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Total residency-cache (hit_rows, miss_rows) accumulated in a decode
+    plan/state pytree, summed over sites and layers. Counters accumulate
+    within one engine decode call (``reset_plan_counters`` zeroes them at
+    the start of each, bounding float32 round-off). Returns (0, 0) for the
+    legacy mask-only plan format and for empty plans. jit-safe."""
+    hit = jnp.float32(0.0)
+    miss = jnp.float32(0.0)
+    if not plan:
+        return hit, miss
+    for state in plan.values():
+        if isinstance(state, dict):
+            hit += jnp.sum(state["hit"])
+            miss += jnp.sum(state["miss"])
+    return hit, miss
+
+
+def reset_plan_counters(plan):
+    """Zero the hit/miss accumulators of a residency plan state (no-op for
+    the legacy mask-only format). Called by the engine at the start of each
+    decode invocation so the float32 counters only ever accumulate one
+    call's rows — exact far beyond any realistic n_tokens."""
+    if not plan:
+        return plan
+    out = {}
+    for kind, state in plan.items():
+        if isinstance(state, dict):
+            state = dict(state)
+            state["hit"] = jnp.zeros_like(state["hit"])
+            state["miss"] = jnp.zeros_like(state["miss"])
+        out[kind] = state
+    return out
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -91,18 +146,32 @@ class SparseExecution:
         method: str = "chunk",
         reorderings: Optional[Dict[str, Reordering]] = None,
         cached: Optional[Dict[str, "jnp.ndarray"]] = None,
+        cache_mb: float = 0.0,
     ):
-        """``cached``: per-site bool masks of neurons whose weights are
-        memory-resident (paper §5 "Leveraging Additional Memory Budget"):
-        they get ZERO importance for selection (never loaded from flash) but
-        always participate in compute. The paper notes remaining uncached
-        accesses become more scattered — making chunk selection *more*
-        valuable; `tests/test_serving.py` asserts exactly that."""
+        """``cache_mb``: DRAM byte budget of the dynamic chunk residency
+        cache (paper §5 "Leveraging Additional Memory Budget"). When > 0,
+        the decode plan carries a per-(layer, site) residency score vector;
+        selection becomes marginal-cost aware (resident rows are free),
+        refresh steps insert the selected chunks and evict by decayed
+        importance rank when over budget, and the I/O estimate charges only
+        cache-miss rows. Capacity is resolved per layer in ``init_plan``.
+
+        ``cached``: per-site bool masks of neurons whose weights are
+        memory-resident (the static §5 experiment). With ``cache_mb == 0``
+        this is the legacy static path: they get ZERO importance for
+        selection (never loaded from flash) but always participate in
+        compute. With ``cache_mb > 0`` the masks are re-expressed as
+        residency state that is pre-warmed and pinned (PIN_SCORE — never
+        evicted, clipped to the byte budget)."""
         validate_method(method)
+        if cache_mb < 0:
+            raise ValueError(f"cache_mb must be >= 0, got {cache_mb}")
         self.cfg = cfg
         self.method = method
         self.reorderings = reorderings or {}
         self.cached = cached or {}
+        self.cache_mb = float(cache_mb)
+        self.cache_caps: Optional[Dict[str, int]] = None  # set by init_plan
         sp = sparsity if isinstance(sparsity, dict) else {
             k: float(sparsity) for k in ("hidden_attn", "hidden_mlp", "ffn", "attn_out")
         }
@@ -117,6 +186,16 @@ class SparseExecution:
             # gate + up share the hidden mask; down has its own (ffn) mask
             self.sites["hidden_mlp"] = _site(d, (cfg.d_ff, cfg.d_ff), device, sp["hidden_mlp"])
             self.sites["ffn"] = _site(cfg.d_ff, (d,), device, sp["ffn"])
+        # static `cached` masks re-expressed in SELECTION (reordered) row
+        # order: the pre-warmed, pinned portion of the dynamic residency tier
+        self.pinned_sel: Dict[str, jnp.ndarray] = {}
+        for kind, cm in self.cached.items():
+            if kind not in self.sites:
+                continue
+            cv = cm.astype(jnp.float32)
+            if kind in self.reorderings:
+                cv = self.reorderings[kind].apply_to_acts(cv)
+            self.pinned_sel[kind] = cv > 0.0
 
     def mask(self, kind: str, acts: jnp.ndarray):
         """acts (..., N) → (mask (N,) float or None, est latency seconds)."""
@@ -127,34 +206,57 @@ class SparseExecution:
             return None, jnp.float32(site.dense_latency)
         return self._compute_mask(kind, site, acts)
 
-    def mask_planned(self, kind: str, acts: jnp.ndarray, cached_mask: jnp.ndarray,
-                     refresh: jnp.ndarray):
+    def mask_planned(self, kind: str, acts: jnp.ndarray, state, refresh: jnp.ndarray):
         """``mask`` with temporal chunk-plan reuse (scanned decode loop).
 
-        When ``refresh`` is true the selection runs as usual and its mask
-        becomes the new plan entry; otherwise the cached mask from the last
-        refresh step is reused at ZERO I/O cost — its chunks were loaded on
-        that step and stay resident until the next refresh (the residency
-        model benchmarks/disc5_caching.py gestures at, applied temporally).
-        ``lax.cond`` skips the selection compute entirely on reuse steps.
+        ``state`` is this (layer, site)'s slice of the decode plan carry —
+        either the legacy mask array (N,) or, with the residency cache
+        enabled, a dict {mask (N,), score (N,), hit (), miss ()} (see
+        ``init_plan``). When ``refresh`` is true the selection runs —
+        marginal-cost aware against the residency set derived from
+        ``score`` — its mask becomes the new plan entry, the selected
+        chunks are inserted into the residency tier (evicting by decayed
+        importance rank when over the byte budget) and only cache-miss rows
+        are charged; otherwise the cached mask from the last refresh step is
+        reused at ZERO I/O cost — its chunks were loaded on that step and
+        stay resident until the next refresh. ``lax.cond`` skips the
+        selection compute entirely on reuse steps.
 
-        Returns (mask (N,) float, est latency, new plan entry (N,) float).
+        Returns (mask (N,) float, est latency, new state).
         """
         site = self.sites.get(kind)
         if site is None:
-            return None, jnp.float32(0.0), cached_mask
+            return None, jnp.float32(0.0), state
         if self.method == "dense":
             # nothing resident to reuse: dense streams every matrix each step
-            return None, jnp.float32(site.dense_latency), cached_mask
+            return None, jnp.float32(site.dense_latency), state
+        if not isinstance(state, dict):  # legacy plan: mask-only carry
+            def _refresh(_):
+                return self._compute_mask(kind, site, acts)
 
-        def _refresh(_):
-            return self._compute_mask(kind, site, acts)
+            def _reuse(_):
+                return state, jnp.float32(0.0)
 
-        def _reuse(_):
-            return cached_mask, jnp.float32(0.0)
+            m, lat = jax.lax.cond(refresh, _refresh, _reuse, None)
+            return m, lat, m
 
-        m, lat = jax.lax.cond(refresh, _refresh, _reuse, None)
-        return m, lat, m
+        cap = self._cap(kind)
+
+        def _refresh_c(_):
+            return self._compute_mask_cached(kind, site, acts, state["score"], cap)
+
+        def _reuse_c(_):
+            return (state["mask"], jnp.float32(0.0), state["score"],
+                    jnp.float32(0.0), jnp.float32(0.0))
+
+        m, lat, score, hit, miss = jax.lax.cond(refresh, _refresh_c, _reuse_c, None)
+        new_state = {
+            "mask": m,
+            "score": score,
+            "hit": state["hit"] + hit,
+            "miss": state["miss"] + miss,
+        }
+        return m, lat, new_state
 
     def _compute_mask(self, kind: str, site: _Site, acts: jnp.ndarray):
         from ..core.importance import importance
@@ -186,17 +288,119 @@ class SparseExecution:
             m = m | cached  # cached neurons always compute, at zero I/O
         return m.astype(jnp.float32), lat
 
-    def init_plan(self, n_layers: int) -> Dict[str, jnp.ndarray]:
-        """Per-layer cached chunk masks for the scanned decode loop:
-        {site: (n_layers, N) float32}, zero-initialized (the first scan step
-        always refreshes, so the zeros are never applied). Empty for dense —
-        there is no selection to cache."""
+    def _compute_mask_cached(self, kind: str, site: _Site, acts: jnp.ndarray,
+                             score: jnp.ndarray, cap: int):
+        """One refresh step of the dynamic residency tier (selection order):
+        derive the resident set from the score state, select with marginal
+        cost (resident rows free), charge only cache-miss rows, then decay
+        scores and insert the selected rows' importances.
+
+        Returns (mask (N,) float [original order], miss-only latency,
+        new score (N,), hit_rows, miss_rows)."""
+        from ..core.importance import importance
+
+        v = importance(acts)
+        if kind in self.reorderings:
+            v = self.reorderings[kind].apply_to_acts(v)
+        resident = residency_from_score(score, cap)
+
+        if self.method == "topk":
+            # LLM-in-a-flash-style baseline: selection ignores residency
+            # (pure importance rank); only the I/O charge sees the cache.
+            m = topk_mask(v, site.budget())
+        else:
+            m, _, _ = site.selector.select(v, site.budget(), resident)
+        # one coalesced request per selected run, charged for miss rows only
+        # (LatencyTable.mask_latency_miss — resident rows never fragment it)
+        lat = jnp.float32(0.0)
+        for t in site.tables:
+            lat += t.mask_latency_miss(m, resident)
+        hit_rows = jnp.sum(m & resident).astype(jnp.float32)
+        miss_rows = jnp.sum(m & ~resident).astype(jnp.float32)
+
+        # recency/score eviction state: decay everything, reinforce selected
+        new_score = RESIDENCY_DECAY * score + jnp.where(m, v, 0.0)
+        pinned = self.pinned_sel.get(kind)
+        if pinned is not None:
+            new_score = jnp.where(pinned, PIN_SCORE, new_score)
+
+        if kind in self.reorderings:
+            inv = jnp.asarray(self.reorderings[kind].inverse)
+            m = jnp.take(m, inv, axis=0)
+        return m.astype(jnp.float32), lat, new_score, hit_rows, miss_rows
+
+    # -- residency-tier capacity ---------------------------------------------
+    @property
+    def cache_enabled(self) -> bool:
+        """The dynamic residency tier applies to the selecting methods only:
+        dense streams every matrix every step regardless of budget."""
+        return self.cache_mb > 0 and self.method in ("chunk", "topk")
+
+    def site_row_bytes(self, kind: str) -> int:
+        """Total bytes of one row across every matrix sharing the site."""
+        return int(sum(t.row_bytes for t in self.sites[kind].tables))
+
+    def sparsifiable_bytes(self, n_layers: int) -> int:
+        """Total offloaded-weight footprint governed by sparsification."""
+        return n_layers * sum(
+            site.n * self.site_row_bytes(kind) for kind, site in self.sites.items()
+        )
+
+    def _resolve_cache(self, n_layers: int) -> Dict[str, int]:
+        """Split the byte budget into per-(layer, site) row caps: the same
+        fraction of every matrix is cacheable, so cap_rows = frac * N."""
+        total = self.sparsifiable_bytes(n_layers)
+        frac = min(1.0, self.cache_mb * 1024.0 * 1024.0 / max(total, 1))
+        self.cache_caps = {
+            kind: int(frac * site.n) for kind, site in self.sites.items()
+        }
+        return self.cache_caps
+
+    def _cap(self, kind: str) -> int:
+        if self.cache_caps is None:
+            raise RuntimeError(
+                "residency capacity unresolved — call init_plan(n_layers) "
+                "before mask_planned with the residency cache enabled"
+            )
+        return self.cache_caps[kind]
+
+    def init_plan(self, n_layers: int) -> Dict[str, Any]:
+        """Per-layer decode-plan state for the scanned decode loop. Empty
+        for dense — there is no selection to cache.
+
+        Legacy format (``cache_mb == 0``): {site: (n_layers, N) float32}
+        cached chunk masks, zero-initialized (the first scan step always
+        refreshes, so the zeros are never applied).
+
+        Residency format (``cache_mb > 0``): {site: {"mask": (L, N),
+        "score": (L, N), "hit": (L,), "miss": (L,)}}. ``score`` is the
+        eviction state (decayed importance; the resident set is its top
+        cap_rows); pre-warmed ``cached`` rows start at PIN_SCORE. ``hit`` /
+        ``miss`` accumulate selected-row counts across the refresh steps of
+        one engine decode call (zeroed per call by ``reset_plan_counters``)
+        — ``ServeEngine.io_summary`` reads them back as the tier's hit rate.
+        """
         if self.method == "dense":
             return {}
-        return {
-            kind: jnp.zeros((n_layers, site.n), jnp.float32)
-            for kind, site in self.sites.items()
-        }
+        if not self.cache_enabled:
+            return {
+                kind: jnp.zeros((n_layers, site.n), jnp.float32)
+                for kind, site in self.sites.items()
+            }
+        self._resolve_cache(n_layers)
+        plan: Dict[str, Any] = {}
+        for kind, site in self.sites.items():
+            score0 = jnp.zeros((n_layers, site.n), jnp.float32)
+            pinned = self.pinned_sel.get(kind)
+            if pinned is not None:
+                score0 = jnp.where(pinned[None, :], PIN_SCORE, score0)
+            plan[kind] = {
+                "mask": jnp.zeros((n_layers, site.n), jnp.float32),
+                "score": score0,
+                "hit": jnp.zeros((n_layers,), jnp.float32),
+                "miss": jnp.zeros((n_layers,), jnp.float32),
+            }
+        return plan
 
     def dense_total_latency(self) -> float:
         """Full-load I/O latency per layer (all sites dense)."""

@@ -8,7 +8,7 @@ params they track (FSDP-friendly).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,9 @@ def init_opt_state(params: Any) -> OptState:
 
 def global_norm(tree: Any) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves)
+    )
 
 
 def _decay_mask(path: Tuple, leaf) -> bool:

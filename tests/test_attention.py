@@ -1,5 +1,4 @@
 """Attention mechanics: blockwise==direct, GQA, sliding window, append, RoPE."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

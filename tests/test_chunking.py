@@ -9,7 +9,6 @@ from repro.core import (
     ChunkSelector,
     chunk_stats_np,
     mask_to_chunks_np,
-    profile_table,
     retention,
     select_chunks_np,
     topk_mask_np,

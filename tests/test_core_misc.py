@@ -2,12 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
 from repro.core import (
     FlashOffloadSimulator,
     LayerProfile,
-    Reordering,
     activation_frequency,
     allocate_sparsity,
     budgets_from_sparsity,

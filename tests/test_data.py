@@ -1,6 +1,5 @@
 """Data pipeline: shapes, determinism, learnable structure, file streaming."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data import ByteTokenizer, DataConfig, lm_batches

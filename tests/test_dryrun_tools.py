@@ -1,5 +1,4 @@
 """Dry-run tooling: HLO collective parser + input geometry."""
-import jax
 import jax.numpy as jnp
 import pytest
 

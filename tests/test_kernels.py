@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps + property tests vs ref.py
 oracles, executed in interpret mode (CPU container; TPU is the target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,12 +4,10 @@ and runs one forward + one train step on CPU, asserting shapes and no NaNs.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import InputShape
-from repro.data import DataConfig, lm_batches
 from repro.models import build_model
 from repro.models.inputs import make_dummy_batch
 from repro.training import AdamWConfig, Trainer

@@ -1,19 +1,15 @@
 """MeshRules resolution logic + real sharded execution on a small host-device
 mesh (subprocess so the 512-device dry-run flag never leaks into this
 process's single-device tests)."""
-import json
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec as P
 
 
 def _rules(shape=(2, 2), axes=("data", "model"), fsdp=False):
-    import os
-
     # rules resolution is pure metadata — a 1-device mesh suffices via
     # jax.make_mesh only when sizes match; use Mesh over a numpy grid of
     # the single device replicated? Not possible. Test the logic with a

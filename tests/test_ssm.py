@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.common import init_params
 from repro.models.ssm import (
@@ -16,10 +15,8 @@ from repro.models.xlstm import (
     XLSTMConfig,
     mlstm_forward,
     mlstm_param_defs,
-    mlstm_state_init,
     slstm_forward,
     slstm_param_defs,
-    slstm_state_init,
 )
 
 

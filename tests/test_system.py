@@ -8,7 +8,6 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import InputShape
-from repro.core import FlashOffloadSimulator
 from repro.data import DataConfig, lm_batches
 from repro.models import build_model
 from repro.models.inputs import make_dummy_batch

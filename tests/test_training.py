@@ -1,6 +1,4 @@
 """Training substrate: chunked CE, AdamW, schedules, checkpointing."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

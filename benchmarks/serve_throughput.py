@@ -1,12 +1,19 @@
 """Serving throughput: fused-scan decode vs the legacy per-token loop, the
-chunk-plan reuse knob, the residency-cache budget sweep, and
-continuous-batching request latency per policy.
+overlapped I/O–compute pipeline vs the serial charge, the chunk-plan reuse
+knob, the residency-cache budget sweep, and continuous-batching request
+latency per policy.
 
-Four sections (reduced InternVL2 under the Nano flash simulator):
+Five sections (reduced InternVL2 under the flash simulator):
 
   * serve/fused_vs_loop — equal batch, equal policy: wall tokens/s of the
     one-jit ``lax.scan`` decode vs the seed's one-jit-call-per-token loop,
     asserting byte-identical greedy tokens (the acceptance criterion);
+  * serve/overlap_<device> — the two-stage prefetch pipeline on BOTH the
+    nano and agx profiles: asserts overlapped per-step decode latency
+    strictly below the serial charge for method=chunk, byte-identical
+    tokens between --overlap and --no-overlap engines, and that the
+    chunk-vs-topk latency advantage survives in both charging modes;
+    emits serial and overlapped simulated tokens/s + overlap_efficiency;
   * serve/plan_reuse — I/O per token as ``plan_refresh_interval`` grows
     (selection reruns every k steps, resident chunks are free in between);
   * serve/cache_sweep — steady-state decode I/O vs DRAM residency budget
@@ -21,10 +28,12 @@ Four sections (reduced InternVL2 under the Nano flash simulator):
 Standalone:  PYTHONPATH=src python -m benchmarks.serve_throughput
 CI artifact: PYTHONPATH=src python -m benchmarks.serve_throughput \
                  --smoke --out BENCH_serve.json
-(--smoke runs the first three sections shrunk to well under a minute on
-CPU — continuous batching is covered by tier-1 tests — and skips the
+(--smoke runs the first four sections shrunk to a minute or two on CPU —
+continuous batching is covered by tier-1 tests — and skips the
 wall-clock speedup assertion, which is noise-prone on shared CI runners;
-the byte-identity and I/O-ordering assertions always run.)
+the byte-identity, I/O-ordering and overlap assertions always run, and the
+smoke FAILS if overlap_efficiency drops below OVERLAP_EFFICIENCY_FLOOR —
+the perf-trajectory guard for the prefetch pipeline.)
 """
 from __future__ import annotations
 
@@ -55,6 +64,10 @@ BATCH = 2
 DECODE_TOKENS = 32
 PROMPT_LEN = 32
 MAX_SEQ = 128
+# conservative floor for the prefetch pipeline's overlap efficiency (the
+# fraction of hideable time actually hidden; ~0.92+ at current settings) —
+# the CI smoke fails below it to guard the perf trajectory
+OVERLAP_EFFICIENCY_FLOOR = 0.5
 
 
 def _setup():
@@ -65,10 +78,12 @@ def _setup():
     return cfg, model, params, batch
 
 
-def _engine(model, params, method="chunk", refresh=1, seed=5, cache_mb=0.0):
+def _engine(model, params, method="chunk", refresh=1, seed=5, cache_mb=0.0,
+            device="nano", overlap=True):
     return ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
-                       device="nano", sparsity=0.4, method=method, seed=seed,
-                       plan_refresh_interval=refresh, cache_mb=cache_mb)
+                       device=device, sparsity=0.4, method=method, seed=seed,
+                       plan_refresh_interval=refresh, cache_mb=cache_mb,
+                       overlap=overlap)
 
 
 def _timed_decode(eng, decode_fn, tok0, n, repeats=3):
@@ -117,6 +132,68 @@ def bench_fused_vs_loop(rows: Rows, model, params, batch,
              f"tokens_per_s={tps_l:.1f}")
     rows.add("serve/fused_vs_loop", 0.0,
              f"speedup={tps_f / tps_l:.2f}x identical_tokens={identical}")
+
+
+def bench_overlap_pipeline(rows: Rows, model, params, batch,
+                           devices=("nano", "agx"),
+                           decode_tokens=DECODE_TOKENS) -> None:
+    """The overlapped I/O–compute prefetch pipeline vs the serial charge.
+
+    Per device profile: (1) an --overlap and a --no-overlap chunk engine at
+    identical settings must emit byte-identical tokens (the pipeline only
+    re-times the same masks); (2) the overlapped per-step decode latency
+    must be STRICTLY below the serial Σio+Σcompute charge (deterministic
+    sim); (3) the chunk-vs-topk latency advantage must survive under BOTH
+    charging modes. Emits serial/overlapped simulated tokens/s and the
+    overlap efficiency, and enforces OVERLAP_EFFICIENCY_FLOOR."""
+    for device in devices:
+        eng_o = _engine(model, params, device=device, overlap=True)
+        eng_s = _engine(model, params, device=device, overlap=False)
+        eng_t = _engine(model, params, device=device, method="topk")
+        for eng in (eng_o, eng_s, eng_t):
+            eng.simulator.noise = 0.0  # deterministic for the assertions
+        tok0 = jnp.argmax(eng_o.prefill(batch), -1)[:, None].astype(jnp.int32)
+        eng_s.prefill(batch)
+        eng_t.prefill(batch)
+        out_o = eng_o.decode(tok0, decode_tokens)
+        out_s = eng_s.decode(tok0, decode_tokens)
+        assert bool(jnp.all(out_o == out_s)), (
+            f"[{device}] tokens must be byte-identical across --overlap modes"
+        )
+        eng_t.decode(tok0, decode_tokens)
+
+        so = eng_o.io_summary()
+        st = eng_t.io_summary()
+        serial, overlapped = so["decode_serial_s"], so["decode_overlap_s"]
+        assert overlapped < serial, (
+            f"[{device}] overlapped decode must be strictly below serial: "
+            f"{overlapped:.3e} vs {serial:.3e}"
+        )
+        # per-step too, not just in aggregate
+        steps = [s for s in eng_o.stats if s.kind == "decode"]
+        assert all(s.overlap_s <= s.serial_s + 1e-15 for s in steps)
+        # the chunk-vs-topk advantage survives both charging modes
+        assert st["decode_overlap_s"] > overlapped, (
+            f"[{device}] chunk must beat topk under the overlapped charge"
+        )
+        assert st["decode_serial_s"] > serial, (
+            f"[{device}] chunk must beat topk under the serial charge"
+        )
+        eff = so["overlap_efficiency"]
+        assert eff >= OVERLAP_EFFICIENCY_FLOOR, (
+            f"[{device}] overlap_efficiency {eff:.3f} fell below the "
+            f"{OVERLAP_EFFICIENCY_FLOOR} floor"
+        )
+        n_tok = decode_tokens * BATCH
+        rows.add(f"serve/overlap_{device}",
+                 overlapped / decode_tokens * 1e6,
+                 f"sim_tokens_per_s={n_tok / overlapped:.1f} "
+                 f"overlap_efficiency={eff:.3f} "
+                 f"stall_ms={so['decode_stall_s']*1e3:.2f}")
+        rows.add(f"serve/serial_{device}",
+                 serial / decode_tokens * 1e6,
+                 f"sim_tokens_per_s={n_tok / serial:.1f} "
+                 f"speedup={serial / overlapped:.3f}x")
 
 
 def bench_plan_reuse(rows: Rows, model, params, batch,
@@ -191,8 +268,9 @@ def bench_continuous_batching(rows: Rows, cfg, model, params,
         )
         prompts.append(p)
 
-    # first-order GEMV compute floor per token so the zero-I/O dense_free
-    # policy has a finite (compute-bound) latency on the simulated clock
+    # extra per-token host/dispatch constant on top of the engine's modeled
+    # compute lane (the pipeline already gives dense_free a finite
+    # compute-bound latency) — kept equal across policies
     compute_s = 1e-4
     for method in ("chunk", "topk", "dense", "dense_free"):
         eng = _engine(model, params, method=method, refresh=2)
@@ -216,17 +294,21 @@ def bench_continuous_batching(rows: Rows, cfg, model, params,
 def run(rows: Rows, smoke: bool = False) -> None:
     cfg, model, params, batch = _setup()
     if smoke:
-        # tiny everything: identity + I/O-ordering assertions still run,
-        # wall-clock speedup (noisy on shared CI runners) does not; the
-        # continuous-batching section is exercised by tier-1 tests instead
+        # tiny everything: identity + I/O-ordering + overlap assertions
+        # (incl. the efficiency floor) still run, wall-clock speedup (noisy
+        # on shared CI runners) does not; the continuous-batching section
+        # is exercised by tier-1 tests instead
         bench_fused_vs_loop(rows, model, params, batch, decode_tokens=8,
                             repeats=1, assert_speedup=False)
+        bench_overlap_pipeline(rows, model, params, batch, devices=("nano",),
+                               decode_tokens=8)
         bench_plan_reuse(rows, model, params, batch, intervals=(1, 4),
                          decode_tokens=8)
         bench_cache_sweep(rows, model, params, batch, cfg,
                           fractions=(0.0, 0.35), decode_tokens=8)
         return
     bench_fused_vs_loop(rows, model, params, batch)
+    bench_overlap_pipeline(rows, model, params, batch)
     bench_plan_reuse(rows, model, params, batch)
     bench_cache_sweep(rows, model, params, batch, cfg)
     bench_continuous_batching(rows, cfg, model, params)
@@ -250,7 +332,7 @@ def _emit_json(rows: Rows, path: str, smoke: bool) -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny config for CI: every section in <60 s on CPU")
+                    help="tiny config for CI: every section, a minute or two on CPU")
     ap.add_argument("--out", default=None,
                     help="also write the rows as JSON (the CI perf artifact, "
                          "e.g. BENCH_serve.json)")

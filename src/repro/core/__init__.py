@@ -8,7 +8,13 @@ from .baselines import (
     topk_mask_np,
     unbundled_latency,
 )
-from .chunking import ChunkConfig, ChunkSelector, chunk_table_from_mask, select_chunks_np
+from .chunking import (
+    BatchedChunkSelector,
+    ChunkConfig,
+    ChunkSelector,
+    chunk_table_from_mask,
+    select_chunks_np,
+)
 from .contiguity import (
     Chunk,
     average_chunk_size_jax,
@@ -31,6 +37,7 @@ from .latency_model import (
     table_from_measurements,
 )
 from .offload import ComputeModel, FlashOffloadSimulator, IOEvent
+from .pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from .reorder import (
     Reordering,
     activation_frequency,

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -171,6 +171,9 @@ class ChunkSelector:
     starts: jnp.ndarray  # (K,) int32, static candidate schedule
     sizes: jnp.ndarray  # (K,) int32
     max_size: int
+    # smallest candidate window (rows) — once the remaining budget is
+    # below it, nothing more can be selected (exact greedy early exit)
+    min_size: int = 1
 
     @staticmethod
     def build(
@@ -192,6 +195,7 @@ class ChunkSelector:
             starts=jnp.asarray(starts),
             sizes=jnp.asarray(sizes),
             max_size=int(sizes.max()),
+            min_size=int(sizes.min()),
         )
 
     @property
@@ -229,10 +233,14 @@ class ChunkSelector:
         k = starts_s.shape[0]
         pad = self.max_size
         window_iota = jnp.arange(pad, dtype=jnp.int32)
+        # exact early exit: once the remaining budget cannot fit even the
+        # smallest candidate, no further candidate is selectable — stop
+        # instead of scanning the (possibly huge) low-utility tail
+        min_size = self.min_size
 
         def cond(state):
             i, _, selected = state
-            return (i < k) & (selected < budget)
+            return (i < k) & (selected + min_size <= budget)
 
         def body(state):
             i, mask, selected = state
@@ -260,6 +268,182 @@ class ChunkSelector:
         """Convenience: budget = (1 - sparsity) * N rows."""
         budget = jnp.int32(round((1.0 - float(sparsity)) * self.n))
         return self.select(v, budget)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-site selector (one vmapped greedy per layer)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash for jit static self
+class BatchedChunkSelector:
+    """All of a layer's sparsification sites as ONE padded selection problem.
+
+    The serve stack evaluates four sites per layer (q / o / gate / down,
+    paper App. A); running each as its own ``lax.while_loop`` greedy costs
+    four sequential dispatches per layer per refresh step. This selector
+    pads the sites' candidate schedules to a single ``(n_sites, K)`` problem
+    and runs ONE vmapped greedy — semantically identical per site to
+    ``ChunkSelector.select`` / the ``select_chunks_np`` oracle (same
+    utility, same stable tie-breaking, same budget rule), EXACTLY, by
+    construction (pinned by tests/test_pipeline.py).
+
+    Two trip-count optimizations on the sequential greedy, both
+    parity-preserving:
+
+      * **unfillable-budget exit**: the loop stops once
+        ``budget - selected < min candidate size`` — no candidate can fit,
+        so the oracle selects nothing more either. This removes the
+        oracle's pathological tail phase (scanning tens of thousands of
+        low-utility candidates after the budget is effectively full);
+      * **top-C prefilter**: the greedy first runs over only the top
+        ``top_c`` candidates by utility (ties broken by candidate index,
+        identical to the oracle's stable sort); a second segment continues
+        over the remaining sorted candidates ONLY while some lane's budget
+        is still fillable — so truncation can never change the result, it
+        only bounds the common-case trip count at C.
+    """
+
+    n_sites: int
+    n_max: int  # padded neuron-axis length (max over sites)
+    pad: int  # largest candidate window across sites
+    top_c: int
+    starts: jnp.ndarray  # (S, K) int32, zero-padded
+    sizes: jnp.ndarray  # (S, K) int32, zero-padded
+    valid: jnp.ndarray  # (S, K) bool — real candidates
+    row_valid: jnp.ndarray  # (S, n_max) bool — real neuron rows
+    tables: jnp.ndarray  # (S, T+1) float32 per-lane latency tables
+    min_sizes: jnp.ndarray  # (S,) int32 smallest real candidate per lane
+    site_ns: Tuple[int, ...]
+
+    @staticmethod
+    def build(
+        selectors: Sequence[ChunkSelector], top_c: Optional[int] = None
+    ) -> "BatchedChunkSelector":
+        sels = list(selectors)
+        if not sels:
+            raise ValueError("need at least one ChunkSelector to batch")
+        n_sites = len(sels)
+        n_max = max(s.n for s in sels)
+        k_max = max(s.num_candidates for s in sels)
+        pad = max(s.max_size for s in sels)
+        t_max = max(max(s.table.max_rows, s.max_size) for s in sels)
+        starts = np.zeros((n_sites, k_max), np.int32)
+        sizes = np.zeros((n_sites, k_max), np.int32)
+        valid = np.zeros((n_sites, k_max), bool)
+        row_valid = np.zeros((n_sites, n_max), bool)
+        tables = np.zeros((n_sites, t_max + 1), np.float32)
+        for i, s in enumerate(sels):
+            k = s.num_candidates
+            starts[i, :k] = np.asarray(s.starts)
+            sizes[i, :k] = np.asarray(s.sizes)
+            valid[i, :k] = True
+            row_valid[i, : s.n] = True
+            tables[i] = s.table.padded_table(t_max)
+        if top_c is None:
+            top_c = min(k_max, max(256, 4 * n_max))
+        min_sizes = np.array(
+            [int(np.asarray(s.sizes).min()) for s in sels], np.int32
+        )
+        return BatchedChunkSelector(
+            n_sites=n_sites,
+            n_max=n_max,
+            pad=pad,
+            top_c=int(min(top_c, k_max)),
+            starts=jnp.asarray(starts),
+            sizes=jnp.asarray(sizes),
+            valid=jnp.asarray(valid),
+            row_valid=jnp.asarray(row_valid),
+            tables=jnp.asarray(tables),
+            min_sizes=jnp.asarray(min_sizes),
+            site_ns=tuple(s.n for s in sels),
+        )
+
+    def _greedy_lane(self, starts_s, sizes_s, budget, min_size):
+        """One lane's sorted-candidate greedy — identical selections to
+        ``ChunkSelector.select``; runs vmapped across sites (the batched
+        cond becomes one ``any``-combined while_loop).
+
+        Two segments over the SAME sorted order: [0, top_c) then
+        [top_c, K). Each stops as soon as the remaining budget cannot fit
+        the lane's smallest candidate (``min_size``) — at that point the
+        oracle selects nothing more either, so early exit is exact. Under
+        vmap, segment 2 costs max-over-lanes trips: zero extra when every
+        lane finished inside the prefilter (the common case)."""
+        k = starts_s.shape[0]
+        pad = self.pad
+        window_iota = jnp.arange(pad, dtype=jnp.int32)
+
+        def seg_cond(limit):
+            def cond(state):
+                i, _, selected = state
+                return (i < limit) & (selected + min_size <= budget)
+
+            return cond
+
+        def body(state):
+            i, mask, selected = state
+            start, size = starts_s[i], sizes_s[i]
+            window = jax.lax.dynamic_slice(mask, (start,), (pad,))
+            in_chunk = window_iota < size
+            overlap = jnp.sum(window * in_chunk)
+            fits = (overlap == 0) & (size > 0) & (size <= budget - selected)
+            new_window = jnp.where(in_chunk & fits, 1, window)
+            mask = jax.lax.dynamic_update_slice(mask, new_window, (start,))
+            return i + 1, mask, selected + jnp.where(fits, size, 0)
+
+        mask0 = jnp.zeros((self.n_max + pad,), jnp.int32)
+        state = (jnp.int32(0), mask0, jnp.int32(0))
+        state = jax.lax.while_loop(seg_cond(min(self.top_c, k)), body, state)
+        if self.top_c < k:  # completion segment: parity beyond the prefilter
+            state = jax.lax.while_loop(seg_cond(k), body, state)
+        _, mask, selected = state
+        return mask[: self.n_max].astype(bool), selected
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def select(self, v: jnp.ndarray, budgets: jnp.ndarray, resident=None):
+        """v: (n_sites, n_max) padded importances (selection order);
+        budgets: (n_sites,) int32 row budgets; resident: optional
+        (n_sites, n_max) bool DRAM-resident rows (marginal-cost selection,
+        exactly as in ``ChunkSelector.select``).
+
+        Returns (masks (n_sites, n_max) bool, selected (n_sites,) int32).
+        Per-site latency stays with the callers' own LatencyTables — the
+        utility's cost term here uses each lane's padded table row.
+        """
+        v = v.astype(jnp.float32) * self.row_valid
+        zero = jnp.zeros((self.n_sites, 1), jnp.float32)
+        cumsum = jnp.concatenate([zero, jnp.cumsum(v, axis=1)], axis=1)
+        ends = self.starts + self.sizes
+        benefit = jnp.take_along_axis(cumsum, ends, 1) - jnp.take_along_axis(
+            cumsum, self.starts, 1
+        )
+        if resident is None:
+            cost_rows = self.sizes
+        else:
+            res = (resident & self.row_valid).astype(jnp.float32)
+            rcum = jnp.concatenate([zero, jnp.cumsum(res, axis=1)], axis=1)
+            in_win = jnp.take_along_axis(rcum, ends, 1) - jnp.take_along_axis(
+                rcum, self.starts, 1
+            )
+            cost_rows = self.sizes - jnp.round(in_win).astype(jnp.int32)
+        cost_rows = jnp.clip(cost_rows, 0, self.tables.shape[1] - 1)
+        cost = jnp.maximum(jnp.take_along_axis(self.tables, cost_rows, 1), 1e-30)
+        score = jnp.where(self.valid, benefit / cost, -jnp.inf)
+        # full stable order (ties broken by candidate index, exactly like
+        # the oracle); the top_c prefilter is the first greedy segment's
+        # trip bound, see _greedy_lane
+        order = jnp.argsort(-score, axis=1, stable=True)
+        starts_s = jnp.take_along_axis(self.starts, order, 1)
+        sizes_s = jnp.where(
+            jnp.take_along_axis(self.valid, order, 1),
+            jnp.take_along_axis(self.sizes, order, 1),
+            0,
+        )
+        masks, selected = jax.vmap(self._greedy_lane)(
+            starts_s, sizes_s, budgets, self.min_sizes
+        )
+        return masks & self.row_valid, selected
 
 
 def chunk_table_from_mask(

@@ -160,6 +160,13 @@ class LatencyTable:
         miss = sizes - resident_rows_in_windows(starts, sizes, resident).astype(sizes.dtype)
         return jnp.sum(self.lookup(miss) * (miss > 0))
 
+    def padded_table(self, max_rows: int) -> np.ndarray:
+        """T[0..max_rows] as a dense host array, using ``lookup``'s linear
+        extrapolation past the table end — the per-lane cost row a
+        ``BatchedChunkSelector`` embeds when sites with different row widths
+        are padded into one (n_sites, max_rows+1) lookup matrix."""
+        return np.asarray(self.lookup(jnp.arange(max_rows + 1)), np.float64)
+
     def mask_latency_np(self, mask: np.ndarray) -> float:
         from .contiguity import mask_to_chunks_np
 

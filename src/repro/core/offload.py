@@ -23,15 +23,21 @@ import numpy as np
 
 from .contiguity import Chunk, mask_to_chunks_np
 from .latency_model import DeviceProfile, get_profile
+from .pipeline import PipelineModel
 
 
 @dataclasses.dataclass
 class IOEvent:
     """One simulated weight-matrix load.
 
-    ``hit_rate`` is the DRAM residency-cache hit fraction of the rows the
-    step *selected* (hit rows transfer nothing — the event's latency charges
-    only the cache-miss bytes). 0.0 when the residency tier is disabled.
+    ``nbytes`` is the estimated flash→DRAM transfer volume of the event —
+    for the estimate-driven decode paths it is the step's cache-miss rows ×
+    per-site row bytes, threaded from the decode-plan counters (it used to
+    be logged as 0 there, making ``total_bytes()`` meaningless for the scan
+    path). ``hit_rate`` is the DRAM residency-cache hit fraction of the rows
+    the step *selected* (hit rows transfer nothing — the event's latency
+    charges only the cache-miss bytes). 0.0 when the residency tier is
+    disabled.
     """
 
     name: str
@@ -50,11 +56,20 @@ class FlashOffloadSimulator:
     two reproduces Fig. 5's proportional bias.
     """
 
-    def __init__(self, device: str | DeviceProfile, seed: int = 0, noise: float = 0.04):
+    def __init__(
+        self,
+        device: str | DeviceProfile,
+        seed: int = 0,
+        noise: float = 0.04,
+        pipeline: Optional[PipelineModel] = None,
+    ):
         self.profile = device if isinstance(device, DeviceProfile) else get_profile(device)
         self.rng = np.random.default_rng(seed)
         self.noise = noise
         self.log: List[IOEvent] = []
+        # the I/O–compute overlap timeline model the serve engine runs its
+        # per-layer simulated latencies through (core/pipeline.py)
+        self.pipeline = pipeline or PipelineModel()
 
     # -- pure additive model (what the runtime uses) -------------------------
     def estimate_chunks(self, chunks: Sequence[Chunk], row_bytes: int) -> float:
@@ -98,20 +113,24 @@ class FlashOffloadSimulator:
         diversity: float = 0.5,
         name: str = "",
         hit_rate: float = 0.0,
+        nbytes: float = 0.0,
     ) -> float:
         """Turn an additive-model estimate (computed inside jit by the
         runtime) into a simulated measurement — same lift + jitter model as
         ``measure_chunks`` without re-deriving the pattern. The estimate
         already charges only cache-miss bytes when the residency tier is
-        active; ``hit_rate`` records the tier's hit fraction on the event."""
+        active; ``hit_rate`` records the tier's hit fraction on the event and
+        ``nbytes`` the step's estimated transfer volume (miss rows × row
+        bytes, from the decode-plan counters) so ``total_bytes()`` stays
+        meaningful on the estimate-driven paths."""
         if est_s <= 0.0:
             return 0.0
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
         latency = est_s * lift * jitter
         self.log.append(
-            IOEvent(name=name, nbytes=0, n_chunks=n_chunks, latency_s=latency,
-                    hit_rate=float(hit_rate))
+            IOEvent(name=name, nbytes=int(nbytes), n_chunks=n_chunks,
+                    latency_s=latency, hit_rate=float(hit_rate))
         )
         return latency
 
@@ -122,6 +141,7 @@ class FlashOffloadSimulator:
         diversity: float = 0.5,
         name: str = "",
         hit_rates: Optional[np.ndarray] = None,
+        nbytes: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Vectorized ``measure_from_estimate`` for the scan-fused decode
         path: one call consumes the whole (n_steps,) on-device estimate
@@ -131,7 +151,9 @@ class FlashOffloadSimulator:
 
         ``hit_rates`` (optional, (n_steps,)): per-step residency-cache hit
         fraction to record on each logged IOEvent — the estimates themselves
-        already charge only cache-miss bytes."""
+        already charge only cache-miss bytes. ``nbytes`` (optional,
+        (n_steps,)): per-step estimated transfer volume from the decode-plan
+        counters, recorded on the events for ``total_bytes()``."""
         est = np.asarray(est_s, dtype=np.float64).reshape(-1)
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         # consume the RNG stream and the event log exactly as the scalar
@@ -147,7 +169,7 @@ class FlashOffloadSimulator:
                 self.log.append(
                     IOEvent(
                         name=f"{name}[{i}]" if name else name,
-                        nbytes=0,
+                        nbytes=int(nbytes[i]) if nbytes is not None else 0,
                         n_chunks=n_chunks,
                         latency_s=float(lat),
                         hit_rate=float(hit_rates[i]) if hit_rates is not None else 0.0,
@@ -170,6 +192,39 @@ class FlashOffloadSimulator:
         self.log.clear()
 
 
+SITE_KINDS = ("hidden_attn", "hidden_mlp", "ffn", "attn_out")
+
+
+def normalize_site_sparsity(sparsity) -> dict:
+    """A scalar sparsity → the per-site dict form ({kind: fraction} over
+    SITE_KINDS); dicts pass through. Shared by SparseExecution and
+    ``ComputeModel.decode_layer_seconds`` so the two can't drift."""
+    if isinstance(sparsity, dict):
+        return sparsity
+    return {k: float(sparsity) for k in SITE_KINDS}
+
+
+def decode_site_shapes(cfg):
+    """[(site kind, input rows, output cols per sharing matrix)] for every
+    sparsification site of one decoder layer (paper App. A: q/k/v share the
+    hidden mask, gate/up share theirs; MoE FFNs have no dense MLP sites).
+    The single source of truth for the site geometry, shared by
+    SparseExecution (selection sites + latency tables) and
+    ``ComputeModel.decode_layer_seconds`` (the overlap pipeline's compute
+    lane) — the two must never drift apart."""
+    d = cfg.d_model
+    hd_all = cfg.n_heads * cfg.resolved_head_dim
+    kv_all = cfg.n_kv_heads * cfg.resolved_head_dim
+    sites = [
+        ("hidden_attn", d, (hd_all, kv_all, kv_all)),
+        ("attn_out", hd_all, (d,)),
+    ]
+    if cfg.d_ff and not cfg.has_moe:
+        sites.append(("hidden_mlp", d, (cfg.d_ff, cfg.d_ff)))
+        sites.append(("ffn", cfg.d_ff, (d,)))
+    return sites
+
+
 @dataclasses.dataclass
 class ComputeModel:
     """First-order compute-time model for the latency breakdown (Fig. 8).
@@ -182,3 +237,23 @@ class ComputeModel:
 
     def matmul_seconds(self, rows_loaded: int, cols: int, tokens: int = 1) -> float:
         return 2.0 * rows_loaded * cols * tokens / self.flops_per_s
+
+    def decode_layer_seconds(self, cfg, sparsity=0.0, tokens: int = 1) -> np.ndarray:
+        """Per-layer decode-step compute seconds, (n_layers,), for the
+        active model config — the compute lane of the overlapped I/O–compute
+        pipeline (core/pipeline.py).
+
+        Uses the serve stack's sparsification-site geometry
+        (``decode_site_shapes`` — the same table SparseExecution builds its
+        sites from): each site's GEMV runs over its kept rows
+        ``(1 - sparsity) * N``. ``sparsity`` is a float or the same
+        per-site dict SparseExecution takes; pass 0.0 for the dense /
+        dense_free policies. First-order GEMV-only (like ``matmul_seconds``
+        — attention-score FLOPs are negligible at decode batch sizes);
+        uniform across layers, hence a constant vector."""
+        sp = normalize_site_sparsity(sparsity)
+        sec = sum(
+            self.matmul_seconds((1.0 - sp.get(kind, 0.0)) * n, sum(cols), tokens)
+            for kind, n, cols in decode_site_shapes(cfg)
+        )
+        return np.full((cfg.n_layers,), sec, np.float64)

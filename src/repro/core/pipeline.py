@@ -1,0 +1,183 @@
+"""Overlapped I/O–compute decode pipeline timeline (two-stage prefetch).
+
+The serve stack used to charge a decode step serially:
+
+    step latency = Σ_layers io_l + Σ_layers compute_l
+
+but the whole premise of the paper is that flash I/O dominates sparse decode
+latency — and a real runtime hides it: while layer *l* computes, the I/O
+engine prefetches layer *l+1*'s selected chunks (classic double buffering).
+``PipelineModel`` turns per-layer ``(io_s, compute_s)`` vectors into that
+two-resource timeline and accounts, per decode step, for the critical-path
+latency, the compute stalls (compute waiting on an unfinished fetch) and the
+I/O bubbles (fetch engine idle waiting for a buffer).
+
+Model
+-----
+Tasks are layers in decode order, cyclic across steps (layer 0 of step t+1
+follows layer L-1 of step t — cross-step prefetch falls out naturally, which
+is what hides the first layer's fetch in steady state). Two serial engines:
+
+  * the **fetch engine** loads task k's chunks; it may run at most
+    ``prefetch_depth`` tasks ahead of compute (depth 1 = double buffering:
+    one buffer computing, one filling — fetch of task k waits for task
+    k-1-depth's compute to release its buffer);
+  * the **compute engine** runs task k once its fetch AND task k-1's
+    compute are done.
+
+Recurrence (f = fetch completion, c = compute completion):
+
+    f[k] = max(f[k-1], c[k-1-depth]) + io[k]
+    c[k] = max(c[k-1], f[k]) + compute[k]
+
+``prefetch_depth=0`` degenerates to the serial schedule exactly (fetch k
+waits for compute k-1), which is the retained baseline mode.
+
+Invariants (tests/test_pipeline.py):
+  * zero compute  ⇒ overlapped == serial per step (I/O engine is the chain);
+  * compute-dominant ⇒ I/O fully hidden: every steady-state step's
+    overlapped latency == Σ compute (step 0 additionally pays the cold
+    first fetch — nothing earlier to hide it under);
+  * overlapped ≤ serial, always, per step.
+
+``overlap_efficiency`` is the fraction of the *hideable* time actually
+hidden: per step the serial latency is io+compute and a perfect overlap
+achieves max(io, compute), so hideable = Σ_steps min(io_t, compute_t) and
+
+    efficiency = (Σ serial − Σ overlapped) / Σ min(io_t, compute_t)
+
+clipped to [0, 1]; defined as 1.0 when nothing is hideable (e.g. zero
+compute, or the zero-I/O ``dense_free`` policy). The CI smoke benchmark
+gates on a conservative floor of this number.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTimeline:
+    """Per-step accounting of one decode call's I/O–compute pipeline.
+
+    All arrays are (n_steps,) seconds except ``io_s``/``compute_s`` which
+    keep the (n_steps, n_layers) inputs for downstream inspection.
+    """
+
+    io_s: np.ndarray  # (n, L) per-layer I/O per step
+    compute_s: np.ndarray  # (n, L) per-layer compute per step
+    serial_s: np.ndarray  # (n,) Σ_l (io + compute) — the baseline charge
+    overlap_s: np.ndarray  # (n,) critical-path latency with prefetch
+    stall_s: np.ndarray  # (n,) compute idle waiting on an unfinished fetch
+    bubble_s: np.ndarray  # (n,) fetch engine idle waiting for a free buffer
+
+    @property
+    def serial_total_s(self) -> float:
+        return float(self.serial_s.sum())
+
+    @property
+    def overlap_total_s(self) -> float:
+        return float(self.overlap_s.sum())
+
+    @property
+    def hidden_s(self) -> float:
+        """Total latency removed by overlapping (≥ 0 by construction)."""
+        return self.serial_total_s - self.overlap_total_s
+
+    @property
+    def hideable_s(self) -> float:
+        """Upper bound on hidden_s: per step a perfect two-stage overlap
+        reaches max(io, compute), hiding min(io, compute)."""
+        return float(
+            np.minimum(self.io_s.sum(axis=1), self.compute_s.sum(axis=1)).sum()
+        )
+
+    def overlap_efficiency(self) -> float:
+        return overlap_efficiency(
+            self.serial_s, self.overlap_s,
+            self.io_s.sum(axis=1), self.compute_s.sum(axis=1),
+        )
+
+
+def overlap_efficiency(serial_s, overlap_s, io_s, compute_s) -> float:
+    """Efficiency from pre-aggregated per-step (n,) arrays — the form the
+    engine uses when rebuilding the metric from logged StepStats."""
+    serial_s = np.asarray(serial_s, np.float64)
+    overlap_s = np.asarray(overlap_s, np.float64)
+    hideable = float(
+        np.minimum(np.asarray(io_s, np.float64), np.asarray(compute_s, np.float64)).sum()
+    )
+    if hideable <= 0.0:
+        return 1.0
+    return float(np.clip((serial_s.sum() - overlap_s.sum()) / hideable, 0.0, 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineModel:
+    """Two-stage prefetch timeline over per-layer (io, compute) vectors.
+
+    ``prefetch_depth``: how many tasks the fetch engine may run ahead of
+    compute. 1 = double buffering (the default and the paper-realistic
+    setting), 0 = fully serial (the baseline the overlapped mode is
+    benchmarked against).
+    """
+
+    prefetch_depth: int = 1
+
+    def __post_init__(self):
+        if self.prefetch_depth < 0:
+            raise ValueError(
+                f"prefetch_depth must be >= 0, got {self.prefetch_depth}"
+            )
+
+    def timeline(self, io_s, compute_s) -> PipelineTimeline:
+        """io_s: (n_steps, n_layers) or (n_layers,) per-layer I/O seconds;
+        compute_s: (n_layers,) or (n_steps, n_layers) per-layer compute.
+        Returns the per-step PipelineTimeline (host-side numpy — this runs
+        once per decode call on the already-synced estimate arrays)."""
+        io = np.asarray(io_s, np.float64)
+        if io.ndim == 1:
+            io = io[None, :]
+        if io.ndim != 2:
+            raise ValueError(f"io_s must be (n, L) or (L,), got {io.shape}")
+        n, n_layers = io.shape
+        comp = np.asarray(compute_s, np.float64)
+        comp = np.broadcast_to(comp, (n, n_layers)).copy()
+        if np.any(io < 0) or np.any(comp < 0):
+            raise ValueError("io_s and compute_s must be non-negative")
+
+        f = io.reshape(-1)
+        c = comp.reshape(-1)
+        k_total = n * n_layers
+        compute_done = np.zeros(k_total)
+        stall = np.zeros(k_total)
+        bubble = np.zeros(k_total)
+        fetch_done_prev = 0.0
+        compute_done_prev = 0.0
+        for k in range(k_total):
+            gate_idx = k - 1 - self.prefetch_depth
+            buffer_free = compute_done[gate_idx] if gate_idx >= 0 else 0.0
+            fetch_start = max(fetch_done_prev, buffer_free)
+            bubble[k] = fetch_start - fetch_done_prev
+            fetch_done_prev = fetch_start + f[k]
+            stall[k] = max(0.0, fetch_done_prev - compute_done_prev)
+            compute_done_prev = max(compute_done_prev, fetch_done_prev) + c[k]
+            compute_done[k] = compute_done_prev
+
+        ends = compute_done.reshape(n, n_layers)[:, -1]
+        overlap = np.diff(ends, prepend=0.0)
+        serial = io.sum(axis=1) + comp.sum(axis=1)
+        return PipelineTimeline(
+            io_s=io,
+            compute_s=comp,
+            serial_s=serial,
+            overlap_s=overlap,
+            stall_s=stall.reshape(n, n_layers).sum(axis=1),
+            bubble_s=bubble.reshape(n, n_layers).sum(axis=1),
+        )
+
+    def serial_timeline(self, io_s, compute_s) -> PipelineTimeline:
+        """The retained baseline: same inputs, prefetch_depth=0 — per-step
+        overlap_s equals serial_s exactly."""
+        return dataclasses.replace(self, prefetch_depth=0).timeline(io_s, compute_s)

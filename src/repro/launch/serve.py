@@ -54,6 +54,13 @@ def main():
     ap.add_argument("--per-token", action="store_true",
                     help="use the legacy one-jit-per-token decode loop "
                          "instead of the fused lax.scan loop")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="charge decode steps through the overlapped "
+                         "I/O–compute prefetch pipeline (layer l+1's chunks "
+                         "stream while layer l computes); --no-overlap "
+                         "retains the serial Σio+Σcompute baseline charge. "
+                         "Tokens are identical either way.")
     ap.add_argument("--streams", type=int, default=0,
                     help=">0: continuous-batching mode — serve this many "
                          "Poisson-arriving requests through --batch slots")
@@ -71,7 +78,7 @@ def main():
                       device=args.device, sparsity=args.sparsity,
                       method=args.method,
                       plan_refresh_interval=args.plan_refresh_interval,
-                      cache_mb=args.cache_mb)
+                      cache_mb=args.cache_mb, overlap=args.overlap)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -101,10 +108,18 @@ def main():
           f"mean io_sim {np.mean([s.io_sim_s for s in dsteps])*1e3:.2f} ms/token  "
           f"wall {sum(s.wall_s for s in dsteps)*1e3:.1f} ms")
     s = eng.io_summary()
+    charged = "overlap" if args.overlap else "serial"
+    print(f"[pipeline] charged={charged}  "
+          f"serial {s['decode_serial_s']*1e3:.2f} ms  "
+          f"overlapped {s['decode_overlap_s']*1e3:.2f} ms  "
+          f"stall {s['decode_stall_s']*1e3:.2f} ms  "
+          f"overlap_efficiency {s['overlap_efficiency']:.3f}  "
+          f"select_overhead {s['select_overhead_s']*1e3:.2f} ms")
     print(f"[total] method={args.method} sparsity={args.sparsity} "
           f"refresh_interval={args.plan_refresh_interval} "
           f"cache_mb={eng.cache_mb:g} "
           f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms  "
+          f"io_bytes {s['io_bytes']/1e6:.1f} MB  "
           f"cache_hit_rate {s['cache_hit_rate']:.3f}")
 
 
@@ -130,9 +145,11 @@ def _serve_streams(args, cfg, eng):
           f"rate={args.arrival_rate}/s refresh={args.plan_refresh_interval} "
           f"cache_mb={eng.cache_mb:g}")
     print(f"[serve] {stats.row()}")
+    s = eng.io_summary()
     print(f"[serve] ttft p50 {stats.ttft_p50_s*1e3:.2f} ms  "
           f"sim time {stats.sim_time_s*1e3:.1f} ms  "
-          f"cache_hit_rate {eng.io_summary()['cache_hit_rate']:.3f}")
+          f"overlap_efficiency {s['overlap_efficiency']:.3f}  "
+          f"cache_hit_rate {s['cache_hit_rate']:.3f}")
 
 
 if __name__ == "__main__":

@@ -139,14 +139,19 @@ class Model:
         self, params, token, cache, sparse_ctx=None, plan=None, refresh=None
     ):
         """decode_step threading chunk-plan reuse state through the layer
-        stack (dense/moe/vlm). Families without sparsification sites run a
-        plain decode_step and pass ``plan`` through unchanged."""
+        stack (dense/moe/vlm). Returns (logits, cache, io, plan) with ``io``
+        a PER-LAYER (n_layers,) I/O-estimate vector — the serve engine feeds
+        it to the overlapped prefetch timeline. Families without
+        sparsification sites run a plain decode_step, spread its scalar io
+        uniformly over layers, and pass ``plan`` through unchanged."""
         if hasattr(self._impl, "decode_step_planned"):
             return self._impl.decode_step_planned(
                 params, token, cache, sparse_ctx, plan, refresh
             )
         logits, cache, io = self._impl.decode_step(params, token, cache, sparse_ctx)
-        return logits, cache, io, plan
+        n_layers = self.cfg.n_layers
+        io_vec = jnp.broadcast_to(io / n_layers, (n_layers,)).astype(jnp.float32)
+        return logits, cache, io_vec, plan
 
     def append_frame(self, params, frame_embeds, cache, sparse_ctx=None):
         """VLM frame-append stage (paper §2.1): project one frame's patch
@@ -260,14 +265,15 @@ class _DecoderLM:
 
     def decode_step(self, params, token, cache, sparse_ctx=None):
         logits, cache, io, _ = self.decode_step_planned(params, token, cache, sparse_ctx)
-        return logits, cache, io
+        return logits, cache, jnp.sum(io)
 
     def decode_step_planned(
         self, params, token, cache, sparse_ctx=None, plan=None, refresh=None
     ):
-        """decode_step + chunk-plan state: ``plan`` is {site: (L, N)} cached
-        masks (see SparseExecution.init_plan), ``refresh`` a scalar bool
-        selecting recompute-vs-reuse. Returns (logits, cache, io, plan)."""
+        """decode_step + chunk-plan state: ``plan`` is the per-(layer, site)
+        decode-plan carry (see SparseExecution.init_plan), ``refresh`` a
+        scalar bool selecting recompute-vs-reuse. Returns (logits, cache,
+        io (n_layers,) per-layer estimate vector, plan)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], token, axis=0).astype(COMPUTE_DTYPE)  # (b,1,d)
         # window semantics are baked into the cache's physical length

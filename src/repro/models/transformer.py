@@ -129,7 +129,7 @@ def block_forward(
     return x, aux, io
 
 
-def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx, plan=None, refresh=None):
+def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx, plan=None):
     """Gated/plain MLP with the paper's gate(+up-shared) and down masks.
 
     Returns (y, io_latency, new_plan); plan is passed through untouched on
@@ -137,17 +137,17 @@ def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx, plan=None, refres
     if sparse_ctx is None:
         y = gelu_mlp(h, params) if cfg.mlp == "gelu" else swiglu_mlp(h, params)
         return y, jnp.float32(0.0), plan
-    mask_g, io1, plan = _site_mask(sparse_ctx, "hidden_mlp", h, plan, refresh)
+    mask_g, io1, plan = _site_mask(sparse_ctx, "hidden_mlp", h, plan)
     hm = _apply_mask(h, mask_g)
     if cfg.mlp == "gelu":
         mid = jax.nn.gelu(hm @ params["w_fc"] + params["b_fc"])
-        mask_f, io2, plan = _site_mask(sparse_ctx, "ffn", mid, plan, refresh)
+        mask_f, io2, plan = _site_mask(sparse_ctx, "ffn", mid, plan)
         y = _apply_mask(mid, mask_f) @ params["w_proj"] + params["b_proj"]
     else:
         from .common import swish
 
         mid = swish(hm @ params["w_gate"]) * (hm @ params["w_up"])
-        mask_f, io2, plan = _site_mask(sparse_ctx, "ffn", mid, plan, refresh)
+        mask_f, io2, plan = _site_mask(sparse_ctx, "ffn", mid, plan)
         y = _apply_mask(mid, mask_f) @ params["w_down"]
     return y, io1 + io2, plan
 
@@ -177,14 +177,16 @@ def stack_forward(
 # ---------------------------------------------------------------------------
 
 
-def _site_mask(sparse_ctx, kind: str, acts, plan, refresh):
+def _site_mask(sparse_ctx, kind: str, acts, plan):
     """One sparsification site, optionally through a reusable chunk plan.
 
     Without a plan (``plan is None`` or the site has none) this is exactly
-    ``sparse_ctx.mask``. With a plan, selection is recomputed only when
-    ``refresh`` is true; otherwise the cached mask is reused at zero I/O
-    cost (its chunks are still resident from the step that selected them —
-    the temporal-reuse mechanism, see docs/serving.md).
+    ``sparse_ctx.mask`` — in-step per-site selection. With a plan, the
+    layer's masks were already refreshed in ONE batched dispatch at the top
+    of the block (``sparse_ctx.refresh_layer`` in ``block_decode``, which
+    also charged the I/O); here we only read the current mask and record
+    this step's importance as the input to the NEXT refresh (the
+    prefetch-compatible deferred-selection contract, see docs/serving.md).
 
     Returns (mask, io_latency, new_plan).
     """
@@ -193,10 +195,8 @@ def _site_mask(sparse_ctx, kind: str, acts, plan, refresh):
     if plan is None or kind not in plan:
         m, lat = sparse_ctx.mask(kind, acts)
         return m, lat, plan
-    m, lat, entry = sparse_ctx.mask_planned(kind, acts, plan[kind], refresh)
-    new_plan = dict(plan)
-    new_plan[kind] = entry
-    return m, lat, new_plan
+    new_plan = sparse_ctx.record_importance(kind, acts, plan)
+    return new_plan[kind]["mask"], jnp.float32(0.0), new_plan
 
 
 def block_decode(
@@ -213,9 +213,14 @@ def block_decode(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, Any]:
     """Returns (x_out, new_k, new_v, io_latency, new_plan)."""
     io = jnp.float32(0.0)
+    if sparse_ctx is not None and plan:
+        # planned path: ONE batched selection dispatch refreshes every
+        # site's mask for this layer (or reuses them at zero I/O)
+        plan, sel_lat = sparse_ctx.refresh_layer(plan, refresh)
+        io += sel_lat
     h = apply_norm(x, params, cfg, "ln1")
 
-    mask_q, lat, plan = _site_mask(sparse_ctx, "hidden_attn", h, plan, refresh)
+    mask_q, lat, plan = _site_mask(sparse_ctx, "hidden_attn", h, plan)
     io += lat
     attn_in = _apply_mask(h, mask_q)
     new_k, new_v = project_kv_for_decode(
@@ -243,7 +248,7 @@ def block_decode(
         project_out=sparse_ctx is None,
     )
     if sparse_ctx is not None:
-        mask_o, lat, plan = _site_mask(sparse_ctx, "attn_out", attn_raw, plan, refresh)
+        mask_o, lat, plan = _site_mask(sparse_ctx, "attn_out", attn_raw, plan)
         io += lat
         attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
     x = x + attn_raw
@@ -252,7 +257,7 @@ def block_decode(
     if cfg.has_moe:
         y, _ = moe_ffn(h, params, moe_cfg_of(cfg))
     else:
-        y, lat, plan = _mlp_maybe_sparse(h, params, cfg, sparse_ctx, plan, refresh)
+        y, lat, plan = _mlp_maybe_sparse(h, params, cfg, sparse_ctx, plan)
         io += lat
     x = x + y
     return x, layer_k, layer_v, io, plan
@@ -271,12 +276,14 @@ def stack_decode(
     """Scan the decode block over layers. ``plan`` (when not None) carries
     each layer's cached chunk masks as scan inputs and the refreshed masks
     come back as scan outputs — so a fused multi-token decode loop can reuse
-    selection across steps. Returns (x, new_cache, io, new_plan)."""
+    selection across steps. Returns (x, new_cache, io, new_plan) where
+    ``io`` is the PER-LAYER I/O-estimate vector (n_layers,) — the input the
+    engine's overlapped prefetch timeline (core/pipeline.py) needs; sum it
+    for the legacy scalar total."""
     length = cache["length"]
     planned = plan is not None and len(plan) > 0
 
-    def body(carry, layer):
-        h, io = carry
+    def body(h, layer):
         if planned:
             layer_params, lk, lv, layer_plan = layer
         else:
@@ -286,19 +293,19 @@ def stack_decode(
             layer_params, h, lk, lv, length, cfg, window, sparse_ctx,
             plan=layer_plan, refresh=refresh,
         )
-        ys = (lk2, lv2, plan2) if planned else (lk2, lv2)
-        return (h2, io + io2), ys
+        ys = (lk2, lv2, io2, plan2) if planned else (lk2, lv2, io2)
+        return h2, ys
 
     xs = (
         (stacked, cache["k"], cache["v"], plan)
         if planned
         else (stacked, cache["k"], cache["v"])
     )
-    (x, io), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    x, ys = jax.lax.scan(body, x, xs)
     if planned:
-        ks, vs, new_plan = ys
+        ks, vs, io, new_plan = ys
     else:
-        (ks, vs), new_plan = ys, plan
+        (ks, vs, io), new_plan = ys, plan
     new_cache = {"k": ks, "v": vs, "length": length + 1}
     return x, new_cache, io, new_plan
 

@@ -6,6 +6,7 @@ from .sparse_exec import (
     SPARSE_METHODS,
     SparseExecution,
     plan_hit_miss,
+    plan_transfer_bytes,
     residency_from_score,
     validate_method,
 )

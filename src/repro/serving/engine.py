@@ -3,21 +3,33 @@
 Pipeline per the paper (§2.1): prefill(prompt) → append_frame(frame)* →
 decode(n)*. Prefill and frame-append run as one jit-compiled step each; the
 decode path is a **fused ``lax.scan`` multi-token loop** — the whole n-token
-generation is one jit call that accumulates per-step additive-model I/O
-estimates on device and returns (tokens, io_estimates) once, eliminating the
-per-token ``float(io)`` host round-trip the seed engine paid. The legacy
+generation is one jit call that accumulates per-step PER-LAYER additive-model
+I/O estimates on device and returns (tokens, io_estimates) once, eliminating
+the per-token ``float(io)`` host round-trip the seed engine paid. The legacy
 one-python-iteration-per-token loop survives as ``decode_per_token`` for
 A/B comparison (benchmarks/serve_throughput.py) and regression tests.
 
+Step latency is charged through the **overlapped I/O–compute pipeline**
+(core/pipeline.py): per-layer simulated I/O and the ComputeModel's per-layer
+compute seconds run through a two-stage prefetch timeline (layer l+1's
+chunks stream while layer l computes — double buffering), so the default
+per-step latency is the pipeline's critical path, not Σ io + Σ compute.
+``overlap=False`` retains the serial charge as the baseline; token outputs
+are byte-identical across the two modes (the pipeline only re-times the same
+masks). ``StepStats`` carries both charges plus stall/bubble accounting and
+``io_summary()`` reports ``overlap_efficiency``.
+
 Inside the scan, ``plan_refresh_interval`` enables temporal chunk-plan
-reuse: utility-guided selection reruns every k steps and the cached masks
-are reused (at zero I/O — their chunks are still resident) in between.
-``cache_mb`` adds the dynamic chunk residency cache (paper §5): a
-byte-budgeted DRAM tier whose per-(layer, site) score state rides the same
-plan carry — selection becomes marginal-cost aware, refresh steps insert /
-evict, and only cache-miss rows are charged (hit rate lands in
-``io_summary``). See docs/serving.md for the full decode contract and the
-residency-state lifecycle.
+reuse: utility-guided selection reruns every k steps — ONE batched dispatch
+per layer over all sites (SparseExecution.refresh_layer), consuming the
+importances recorded on the previous step — and the cached masks are reused
+(at zero I/O — their chunks are still resident) in between. ``cache_mb``
+adds the dynamic chunk residency cache (paper §5): a byte-budgeted DRAM tier
+whose per-(layer, site) score state rides the same plan carry — selection
+becomes marginal-cost aware, refresh steps insert / evict, and only
+cache-miss rows are charged (hit rate lands in ``io_summary``). See
+docs/serving.md for the full decode contract and the residency-state
+lifecycle.
 
 Two operating modes share the engine:
 
@@ -38,6 +50,7 @@ decode_step only (their state is the cache).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -47,10 +60,12 @@ import numpy as np
 
 from ..core.latency_model import MB
 from ..core.offload import ComputeModel, FlashOffloadSimulator
+from ..core.pipeline import overlap_efficiency
 from ..models.model import Model
 from .sparse_exec import (
     SparseExecution,
     plan_hit_miss,
+    plan_transfer_bytes,
     reset_plan_counters,
     validate_method,
 )
@@ -68,6 +83,16 @@ class StepStats:
     # (free) vs streamed from flash this step; 0/0 when the tier is off
     hit_rows: float = 0.0
     miss_rows: float = 0.0
+    # estimated flash→DRAM transfer volume of the step (miss rows × row
+    # bytes from the plan counters; also stamped on the IOEvent)
+    nbytes: float = 0.0
+    # overlapped-pipeline accounting (decode steps; core/pipeline.py):
+    # serial charge Σ(io+compute), critical-path charge with prefetch,
+    # compute lane total, and compute-waiting-on-fetch stall
+    compute_s: float = 0.0
+    serial_s: float = 0.0
+    overlap_s: float = 0.0
+    stall_s: float = 0.0
 
 
 class ServeEngine:
@@ -84,10 +109,16 @@ class ServeEngine:
         seed: int = 0,
         plan_refresh_interval: int = 1,
         cache_mb: Optional[float] = None,
+        overlap: bool = True,
     ):
         """``cache_mb``: DRAM budget (MB) of the dynamic chunk residency
         cache (paper §5). None → the device profile's ``dram_cache_mb``
-        default; 0 disables the tier."""
+        default; 0 disables the tier.
+
+        ``overlap``: charge decode steps through the two-stage prefetch
+        pipeline (default) instead of the serial Σ io + Σ compute baseline.
+        Token outputs are identical either way — the flag only selects
+        which timeline prices the step (StepStats keeps both)."""
         validate_method(method, allow_dense_free=True)
         if plan_refresh_interval < 1:
             raise ValueError("plan_refresh_interval must be >= 1")
@@ -99,6 +130,7 @@ class ServeEngine:
         self.compute_model = ComputeModel()
         self.method = method
         self.plan_refresh_interval = plan_refresh_interval
+        self.overlap = overlap
         # profile-default resolution + >= 0 validation live on the profile
         self.cache_mb = self.simulator.profile.cache_capacity_bytes(cache_mb) / MB
         self.sparse_ctx = (
@@ -108,9 +140,16 @@ class ServeEngine:
                                  method=method, reorderings=reorderings,
                                  cache_mb=self.cache_mb)
         )
+        # per-layer compute lane of the overlap pipeline: selecting methods
+        # compute over their kept rows, dense/dense_free over everything
+        eff_sparsity = sparsity if method in ("chunk", "topk") else 0.0
+        self.compute_layer_s = self.compute_model.decode_layer_seconds(
+            model.cfg, sparsity=eff_sparsity, tokens=batch_size
+        )
         self.cache = model.init_cache(batch_size, max_seq)
         self.stats: List[StepStats] = []
         self._plan = None  # chunk-plan carry, persists across decode calls
+        self._select_s_per_refresh: Optional[float] = None  # lazy, wall-timed
 
         # per-token baseline shares the fused loop's step function (the
         # planned path), so the two decode modes differ ONLY in host-loop
@@ -122,7 +161,8 @@ class ServeEngine:
             )
             h0, m0 = plan_hit_miss(plan)
             h1, m1 = plan_hit_miss(new_plan)
-            return logits, cache, io, new_plan, h1 - h0, m1 - m0
+            db = plan_transfer_bytes(new_plan) - plan_transfer_bytes(plan)
+            return logits, cache, io, new_plan, h1 - h0, m1 - m0, db
 
         self._decode_one = jax.jit(_decode_one_impl)
         self._append = jax.jit(
@@ -142,10 +182,10 @@ class ServeEngine:
     def _decode_scan_impl(self, params, token, cache, n_tokens: int, plan):
         """One jit: scan ``decode_step_planned`` over n_tokens greedy steps.
 
-        Returns (tokens (b, n), final cache, final plan, io (n,),
-        hits (n,), misses (n,)) — per-step residency-cache row counts ride
-        along with the I/O estimates. Everything stays on device until the
-        caller syncs once.
+        Returns (tokens (b, n), final cache, final plan, io (n, n_layers),
+        hits (n,), misses (n,), bytes (n,)) — per-step per-layer I/O
+        estimates plus residency-cache row/byte counters ride along.
+        Everything stays on device until the caller syncs once.
         """
         k = self.plan_refresh_interval
 
@@ -157,43 +197,84 @@ class ServeEngine:
             )
             h0, m0 = plan_hit_miss(plan)
             h1, m1 = plan_hit_miss(new_plan)
+            db = plan_transfer_bytes(new_plan) - plan_transfer_bytes(plan)
             nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            return (nxt, cache, new_plan), (nxt[:, 0], io, h1 - h0, m1 - m0)
+            return (nxt, cache, new_plan), (nxt[:, 0], io, h1 - h0, m1 - m0, db)
 
-        (_, cache, plan), (toks, ios, hits, misses) = jax.lax.scan(
+        (_, cache, plan), (toks, ios, hits, misses, byts) = jax.lax.scan(
             step, (token, cache, plan), jnp.arange(n_tokens)
         )
-        return toks.T, cache, plan, ios, hits, misses  # toks: (n, b) -> (b, n)
+        return toks.T, cache, plan, ios, hits, misses, byts  # toks: (n, b) -> (b, n)
+
+    def _selection_seconds_per_refresh(self) -> float:
+        """Wall seconds one refresh step spends on chunk selection: the
+        batched per-layer dispatch (SparseExecution.time_selection — the
+        same quantity benchmarks/fig13_overhead.py reports per matrix)
+        × n_layers. Measured lazily once per engine, on the compiled path."""
+        if self.sparse_ctx is None or self.method == "dense":
+            return 0.0
+        if self._select_s_per_refresh is None:
+            self._select_s_per_refresh = (
+                self.sparse_ctx.time_selection() * self.model.cfg.n_layers
+            )
+        return self._select_s_per_refresh
+
+    def _dense_step_bytes(self) -> float:
+        """Per-decode-step transfer volume of the dense streaming policy
+        (everything re-streams every step; the plan carries no counters)."""
+        if self.sparse_ctx is None or self.method != "dense":
+            return 0.0
+        return float(self.sparse_ctx.sparsifiable_bytes(self.model.cfg.n_layers))
 
     def _run_decode_scan(self, tokens: jnp.ndarray, n_tokens: int):
-        """Shared fused-loop body: run the scan, sync the estimate array
-        once, convert it to simulated measurements, log per-step stats.
-        Returns (new_tokens (b, n), per-step simulated io (n,))."""
+        """Shared fused-loop body: run the scan, sync the estimate arrays
+        once, convert them to simulated measurements, run the overlap
+        pipeline, log per-step stats. Returns (new_tokens (b, n), per-step
+        charged latency (n,) — overlapped or serial per ``self.overlap``)."""
         if self._plan is None:
             self._plan = self._init_plan()
         self._plan = reset_plan_counters(self._plan)
         t0 = time.perf_counter()
-        toks, self.cache, self._plan, ios, hits, misses = self._decode_scan(
+        toks, self.cache, self._plan, ios, hits, misses, byts = self._decode_scan(
             self.params, tokens, self.cache, n_tokens, self._plan
         )
-        # ONE host sync for the whole scan (estimates + residency counters)
-        packed = np.asarray(
-            jnp.stack([ios.astype(jnp.float32), hits, misses]), np.float64
-        )
-        ios, hits, misses = packed[0], packed[1], packed[2]
+        # ONE blocking host transfer for the whole scan (per-layer estimates
+        # + residency counters)
+        ios, hits, misses, byts = jax.device_get((ios, hits, misses, byts))
+        ios = np.asarray(ios, np.float64)  # (n, n_layers)
+        hits, misses = np.asarray(hits, np.float64), np.asarray(misses, np.float64)
+        byts = np.asarray(byts, np.float64)
+        if self.method == "dense":
+            byts = np.full_like(byts, self._dense_step_bytes())
         wall = time.perf_counter() - t0
+        io_steps = ios.sum(axis=1)
         rows = hits + misses
         hit_rates = np.where(rows > 0, hits / np.maximum(rows, 1.0), 0.0)
         sims = self.simulator.measure_from_estimate_batch(
-            ios, name="decode", hit_rates=hit_rates
+            io_steps, name="decode", hit_rates=hit_rates, nbytes=byts
+        )
+        # the simulator's lift+jitter applies per step; spread it over the
+        # step's layers proportionally so the pipeline sees simulated time
+        scale = np.where(io_steps > 0, sims / np.maximum(io_steps, 1e-30), 1.0)
+        tl = self.simulator.pipeline.timeline(ios * scale[:, None], self.compute_layer_s)
+        n_refresh = math.ceil(n_tokens / self.plan_refresh_interval)
+        select_amortized = (
+            self._selection_seconds_per_refresh() * n_refresh / max(n_tokens, 1)
         )
         per_step_wall = wall / max(n_tokens, 1)
-        for est, sim, h, m in zip(ios, sims, hits, misses):
+        compute_step = float(np.asarray(self.compute_layer_s).sum())
+        for i, (est, sim, h, m) in enumerate(zip(io_steps, sims, hits, misses)):
             self.stats.append(
-                StepStats("decode", 1, float(est), float(sim), 0.0, per_step_wall,
-                          hit_rows=float(h), miss_rows=float(m))
+                StepStats("decode", 1, float(est), float(sim),
+                          select_amortized, per_step_wall,
+                          hit_rows=float(h), miss_rows=float(m),
+                          nbytes=float(byts[i]), compute_s=compute_step,
+                          serial_s=float(tl.serial_s[i]),
+                          overlap_s=float(tl.overlap_s[i]),
+                          stall_s=float(tl.stall_s[i]))
             )
-        return toks, sims
+        charged = tl.overlap_s if self.overlap else tl.serial_s
+        return toks, charged
 
     @staticmethod
     def _validate_greedy(greedy: bool) -> None:
@@ -223,29 +304,50 @@ class ServeEngine:
         fused scan (including plan reuse and residency-cache updates), so at
         equal settings the two modes produce byte-identical tokens — the
         only difference is the per-token host round-trip the scan
-        eliminates."""
+        eliminates. Pipeline accounting is backfilled once the loop ends
+        (the overlap timeline needs every step's per-layer I/O)."""
         self._validate_greedy(greedy)
         if self._plan is None:
             self._plan = self._init_plan()
         self._plan = reset_plan_counters(self._plan)
         token = first_token
         out = [token]
+        start_idx = len(self.stats)
+        io_rows = []
+        select_per_refresh = self._selection_seconds_per_refresh()
         for i in range(n_tokens):
             t0 = time.perf_counter()
-            logits, self.cache, io, self._plan, dh, dm = self._decode_one(
+            logits, self.cache, io_vec, self._plan, dh, dm, db = self._decode_one(
                 self.params, token, self.cache, self._plan, jnp.int32(i)
             )
-            io = float(io)  # the per-token host sync the scan path avoids
+            io_vec = np.asarray(io_vec, np.float64)  # the per-token host sync
+            io = float(io_vec.sum())
             hit, miss = float(dh), float(dm)
+            nbytes = self._dense_step_bytes() if self.method == "dense" else float(db)
             wall = time.perf_counter() - t0
             token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out.append(token)
             rate = hit / (hit + miss) if (hit + miss) > 0 else 0.0
             sim = self.simulator.measure_from_estimate(
-                io, name="decode", hit_rate=rate
+                io, name="decode", hit_rate=rate, nbytes=nbytes
             )
-            self.stats.append(StepStats("decode", 1, io, sim, 0.0, wall,
-                                        hit_rows=hit, miss_rows=miss))
+            io_rows.append(io_vec * (sim / io if io > 0 else 1.0))
+            sel = select_per_refresh if (i % self.plan_refresh_interval) == 0 else 0.0
+            self.stats.append(StepStats("decode", 1, io, sim, sel, wall,
+                                        hit_rows=hit, miss_rows=miss,
+                                        nbytes=nbytes))
+        if not io_rows:  # n_tokens == 0: nothing to time
+            return jnp.concatenate(out, axis=1)
+        # backfill the overlap-pipeline accounting for the whole loop
+        tl = self.simulator.pipeline.timeline(
+            np.asarray(io_rows), self.compute_layer_s
+        )
+        compute_step = float(np.asarray(self.compute_layer_s).sum())
+        for j, st in enumerate(self.stats[start_idx:]):
+            st.compute_s = compute_step
+            st.serial_s = float(tl.serial_s[j])
+            st.overlap_s = float(tl.overlap_s[j])
+            st.stall_s = float(tl.stall_s[j])
         return jnp.concatenate(out, axis=1)
 
     # -- classic single-stream stages ----------------------------------------
@@ -256,8 +358,13 @@ class ServeEngine:
         n = int(batch["tokens"].shape[1])
         # prefill loads every matrix once, contiguously (weights streamed)
         est = self._dense_io() if self.sparse_ctx else 0.0
-        sim = self.simulator.measure_from_estimate(est, name="prefill")
-        self.stats.append(StepStats("prefill", n, est, sim, 0.0, wall))
+        nbytes = (
+            self.sparse_ctx.sparsifiable_bytes(self.model.cfg.n_layers)
+            if self.sparse_ctx else 0.0
+        )
+        sim = self.simulator.measure_from_estimate(est, name="prefill", nbytes=nbytes)
+        self.stats.append(StepStats("prefill", n, est, sim, 0.0, wall,
+                                    nbytes=float(nbytes)))
         self._plan = None  # new sequence → stale plan
         return last
 
@@ -297,16 +404,25 @@ class ServeEngine:
             self.cache["length"].at[slot].set(cache1["length"].astype(jnp.int32))
         )
         est = self._dense_io() if self.sparse_ctx else 0.0
-        sim = self.simulator.measure_from_estimate(est, name=f"admit[{slot}]")
+        nbytes = (
+            self.sparse_ctx.sparsifiable_bytes(self.model.cfg.n_layers)
+            if self.sparse_ctx else 0.0
+        )
+        sim = self.simulator.measure_from_estimate(
+            est, name=f"admit[{slot}]", nbytes=nbytes
+        )
         self.stats.append(
-            StepStats("prefill", int(batch["tokens"].shape[1]), est, sim, 0.0, 0.0)
+            StepStats("prefill", int(batch["tokens"].shape[1]), est, sim, 0.0, 0.0,
+                      nbytes=float(nbytes))
         )
         return last, sim
 
     def decode_slots(self, tokens: jnp.ndarray, n_tokens: int):
         """Fused decode round over all slots. ``tokens``: (batch, 1) current
         input token per slot (free slots decode garbage that callers drop).
-        Returns (new_tokens (batch, n), per-step simulated io (n,))."""
+        Returns (new_tokens (batch, n), per-step charged latency (n,) —
+        the overlapped-pipeline critical path by default, the serial
+        Σ io + Σ compute charge with ``overlap=False``)."""
         return self._run_decode_scan(tokens, n_tokens)
 
     def slot_lengths(self) -> np.ndarray:
@@ -322,6 +438,9 @@ class ServeEngine:
         tot_sim = sum(s.io_sim_s for s in self.stats)
         hit = sum(s.hit_rows for s in self.stats)
         miss = sum(s.miss_rows for s in self.stats)
+        dec = [s for s in self.stats if s.kind == "decode"]
+        serial = sum(s.serial_s for s in dec)
+        overlap = sum(s.overlap_s for s in dec)
         return {
             "io_est_s": tot_est,
             "io_sim_s": tot_sim,
@@ -329,4 +448,17 @@ class ServeEngine:
             "hit_rows": hit,
             "miss_rows": miss,
             "cache_hit_rate": hit / (hit + miss) if (hit + miss) > 0 else 0.0,
+            "io_bytes": sum(s.nbytes for s in self.stats),
+            "select_overhead_s": sum(s.select_overhead_s for s in self.stats),
+            # overlapped-pipeline rollup (decode steps)
+            "decode_compute_s": sum(s.compute_s for s in dec),
+            "decode_serial_s": serial,
+            "decode_overlap_s": overlap,
+            "decode_stall_s": sum(s.stall_s for s in dec),
+            "overlap_efficiency": overlap_efficiency(
+                [s.serial_s for s in dec],
+                [s.overlap_s for s in dec],
+                [s.io_sim_s for s in dec],
+                [s.compute_s for s in dec],
+            ),
         }

@@ -7,11 +7,13 @@ the shared cache), every decode round runs the engine's fused ``lax.scan``
 loop across ALL slots at once, and slots are recycled the moment their
 request hits its token budget — no waiting for the rest of the batch.
 
-Time is simulated: the clock advances by the simulator's per-step I/O
-latency (the quantity the paper's policies change) plus a first-order
-compute term, so tokens/s and request-latency percentiles reflect the
-policy under test rather than host-python speed. Wall time is tracked
-separately by the engine's StepStats.
+Time is simulated: the clock advances by the engine's charged per-step
+latency — the overlapped I/O–compute pipeline's critical path by default
+(serial Σ io + Σ compute with ``overlap=False``; the quantities the paper's
+policies change) plus an optional extra per-token compute constant — so
+tokens/s and request-latency percentiles reflect the policy under test
+rather than host-python speed. Wall time is tracked separately by the
+engine's StepStats.
 """
 from __future__ import annotations
 
@@ -131,10 +133,10 @@ class Scheduler:
         if self.num_running() == 0:
             return bool(self.waiting)
 
-        toks, sims = self.engine.decode_slots(self._slot_tokens, self.round_tokens)
+        toks, step_lat = self.engine.decode_slots(self._slot_tokens, self.round_tokens)
         toks_np = np.asarray(toks)  # (slots, round_tokens)
         active = [r for r in self.running if r is not None]
-        for i, sim in enumerate(sims):
+        for i, sim in enumerate(step_lat):
             # the batch shares each model step; clock advances once per step
             self.now_s += float(sim) + self.compute_s_per_token
             for req in active:

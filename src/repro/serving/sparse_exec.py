@@ -13,6 +13,18 @@ gate+up for hidden_mlp) with per-matrix row sizes.
 Methods: "chunk" (ours), "topk" (TEAL/LLMFlash-style baseline),
 "dense" (no sparsification — full contiguous load).
 
+The planned decode path (the engine's scan/per-token loops) batches all of
+a layer's sites into ONE selection dispatch per refresh step
+(``refresh_layer`` → core.chunking.BatchedChunkSelector, a single vmapped
+greedy instead of four sequential while_loops). To make that possible —
+and to make the overlapped prefetch pipeline physically realizable, since
+layer l+1's chunks must be known while layer l computes — refresh-step
+selection consumes the importance vectors *recorded on the previous decode
+step* (``record_importance`` stashes each site's importance into the plan
+carry as the step runs; the first refresh bootstraps from uniform
+importance). The unplanned paths (prefill / frame append / plain
+``decode_step``) keep the original in-step per-site selection.
+
 With ``cache_mb > 0`` a dynamic chunk residency cache (paper §5) rides the
 decode-plan carry: per-(layer, site) score state whose top-``cap_rows``
 entries are DRAM-resident, marginal-cost selection, miss-only I/O charging,
@@ -21,15 +33,18 @@ and hit/miss accounting — see docs/serving.md for the lifecycle.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.baselines import topk_mask
-from ..core.chunking import ChunkConfig, ChunkSelector
+from ..core.chunking import BatchedChunkSelector, ChunkConfig, ChunkSelector
 from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profile_table
+from ..core.offload import decode_site_shapes, normalize_site_sparsity
 from ..core.reorder import Reordering
 
 DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 (paper: fp16)
@@ -70,32 +85,49 @@ def plan_hit_miss(plan) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Total residency-cache (hit_rows, miss_rows) accumulated in a decode
     plan/state pytree, summed over sites and layers. Counters accumulate
     within one engine decode call (``reset_plan_counters`` zeroes them at
-    the start of each, bounding float32 round-off). Returns (0, 0) for the
-    legacy mask-only plan format and for empty plans. jit-safe."""
+    the start of each, bounding float32 round-off). Returns (0, 0) for
+    empty plans. Without the residency tier ``hit`` is always 0 and
+    ``miss`` counts every selected (streamed) row. jit-safe."""
     hit = jnp.float32(0.0)
     miss = jnp.float32(0.0)
     if not plan:
         return hit, miss
     for state in plan.values():
-        if isinstance(state, dict):
+        if isinstance(state, dict) and "hit" in state:
             hit += jnp.sum(state["hit"])
             miss += jnp.sum(state["miss"])
     return hit, miss
 
 
+def plan_transfer_bytes(plan) -> jnp.ndarray:
+    """Total estimated flash→DRAM transfer volume accumulated in a decode
+    plan pytree (cache-miss rows × per-site row bytes, summed over sites
+    and layers) — the quantity the engine threads into ``IOEvent.nbytes``
+    so ``FlashOffloadSimulator.total_bytes()`` is meaningful on the
+    estimate-driven decode paths. jit-safe."""
+    total = jnp.float32(0.0)
+    if not plan:
+        return total
+    for state in plan.values():
+        if isinstance(state, dict) and "bytes" in state:
+            total += jnp.sum(state["bytes"])
+    return total
+
+
 def reset_plan_counters(plan):
-    """Zero the hit/miss accumulators of a residency plan state (no-op for
-    the legacy mask-only format). Called by the engine at the start of each
-    decode invocation so the float32 counters only ever accumulate one
-    call's rows — exact far beyond any realistic n_tokens."""
+    """Zero the hit/miss/bytes accumulators of a decode plan state. Called
+    by the engine at the start of each decode invocation so the float32
+    counters only ever accumulate one call's rows — exact far beyond any
+    realistic n_tokens."""
     if not plan:
         return plan
     out = {}
     for kind, state in plan.items():
         if isinstance(state, dict):
             state = dict(state)
-            state["hit"] = jnp.zeros_like(state["hit"])
-            state["miss"] = jnp.zeros_like(state["miss"])
+            for key in ("hit", "miss", "bytes"):
+                if key in state:
+                    state[key] = jnp.zeros_like(state[key])
         out[kind] = state
     return out
 
@@ -172,20 +204,14 @@ class SparseExecution:
         self.cached = cached or {}
         self.cache_mb = float(cache_mb)
         self.cache_caps: Optional[Dict[str, int]] = None  # set by init_plan
-        sp = sparsity if isinstance(sparsity, dict) else {
-            k: float(sparsity) for k in ("hidden_attn", "hidden_mlp", "ffn", "attn_out")
-        }
-        d, hd_all = cfg.d_model, cfg.n_heads * cfg.resolved_head_dim
-        kv_all = cfg.n_kv_heads * cfg.resolved_head_dim
+        sp = normalize_site_sparsity(sparsity)
+        # site geometry (which matrices share which mask) comes from the
+        # shared table in core.offload so the overlap pipeline's compute
+        # lane (ComputeModel.decode_layer_seconds) can never drift from it
         self.sites: Dict[str, _Site] = {
-            # q + k + v share the hidden-state mask
-            "hidden_attn": _site(d, (hd_all, kv_all, kv_all), device, sp["hidden_attn"]),
-            "attn_out": _site(hd_all, (d,), device, sp["attn_out"]),
+            kind: _site(n, cols, device, sp[kind])
+            for kind, n, cols in decode_site_shapes(cfg)
         }
-        if cfg.d_ff and not cfg.has_moe:
-            # gate + up share the hidden mask; down has its own (ffn) mask
-            self.sites["hidden_mlp"] = _site(d, (cfg.d_ff, cfg.d_ff), device, sp["hidden_mlp"])
-            self.sites["ffn"] = _site(cfg.d_ff, (d,), device, sp["ffn"])
         # static `cached` masks re-expressed in SELECTION (reordered) row
         # order: the pre-warmed, pinned portion of the dynamic residency tier
         self.pinned_sel: Dict[str, jnp.ndarray] = {}
@@ -196,6 +222,15 @@ class SparseExecution:
             if kind in self.reorderings:
                 cv = self.reorderings[kind].apply_to_acts(cv)
             self.pinned_sel[kind] = cv > 0.0
+        # the planned decode path batches all sites of a layer into one
+        # selection dispatch (one vmapped greedy instead of one per site)
+        self.site_order: Tuple[str, ...] = tuple(self.sites)
+        self.batched = BatchedChunkSelector.build(
+            [self.sites[k].selector for k in self.site_order]
+        )
+        self._budgets = jnp.asarray(
+            [int(self.sites[k].budget()) for k in self.site_order], jnp.int32
+        )
 
     def mask(self, kind: str, acts: jnp.ndarray):
         """acts (..., N) → (mask (N,) float or None, est latency seconds)."""
@@ -206,57 +241,173 @@ class SparseExecution:
             return None, jnp.float32(site.dense_latency)
         return self._compute_mask(kind, site, acts)
 
-    def mask_planned(self, kind: str, acts: jnp.ndarray, state, refresh: jnp.ndarray):
-        """``mask`` with temporal chunk-plan reuse (scanned decode loop).
+    def record_importance(self, kind: str, acts: jnp.ndarray, plan):
+        """Stash this site's current-step importance (selection row order)
+        into the plan carry as the ``pending`` vector the NEXT refresh
+        step's batched selection will consume. Runs every planned decode
+        step (cheap — one |·| reduction + optional gather; no selection)."""
+        if kind not in plan:
+            return plan
+        from ..core.importance import importance
 
-        ``state`` is this (layer, site)'s slice of the decode plan carry —
-        either the legacy mask array (N,) or, with the residency cache
-        enabled, a dict {mask (N,), score (N,), hit (), miss ()} (see
-        ``init_plan``). When ``refresh`` is true the selection runs —
-        marginal-cost aware against the residency set derived from
-        ``score`` — its mask becomes the new plan entry, the selected
-        chunks are inserted into the residency tier (evicting by decayed
-        importance rank when over the byte budget) and only cache-miss rows
-        are charged; otherwise the cached mask from the last refresh step is
-        reused at ZERO I/O cost — its chunks were loaded on that step and
-        stay resident until the next refresh. ``lax.cond`` skips the
-        selection compute entirely on reuse steps.
+        v = importance(acts)
+        if kind in self.reorderings:
+            v = self.reorderings[kind].apply_to_acts(v)
+        entry = dict(plan[kind])
+        entry["pending"] = v
+        new_plan = dict(plan)
+        new_plan[kind] = entry
+        return new_plan
 
-        Returns (mask (N,) float, est latency, new state).
+    def refresh_layer(self, plan, refresh: jnp.ndarray):
+        """One batched refresh for ALL of a layer's sites — the planned
+        decode path's replacement for per-site selection calls.
+
+        ``plan`` is one layer's slice of the decode-plan carry
+        ({site: {mask, pending, hit, miss, bytes[, score]}}, see
+        ``init_plan``). When ``refresh`` is true, the sites' ``pending``
+        importance vectors (recorded on the previous step) are padded into
+        one (n_sites, N_max) problem and solved by a single vmapped greedy
+        (``BatchedChunkSelector.select``; vmapped ``topk_mask`` for the
+        topk baseline) — with the residency tier enabled the selection is
+        marginal-cost aware and only cache-miss rows are charged. The new
+        masks (original row order) land in the plan together with the
+        updated residency scores and hit/miss/bytes counters. On reuse
+        steps ``lax.cond`` skips everything and the cached masks cost ZERO
+        I/O — their chunks are still resident from the refresh that
+        selected them.
+
+        Returns (new_plan, est_io_latency_seconds for this layer).
         """
-        site = self.sites.get(kind)
-        if site is None:
-            return None, jnp.float32(0.0), state
+        if not plan:
+            return plan, jnp.float32(0.0)
+        # lanes of the batched problem are indexed by site_order position —
+        # a partial plan would silently misalign budgets/schedules/tables,
+        # so require exactly the full site set (init_plan always builds it)
+        if set(plan) != set(self.site_order):
+            raise ValueError(
+                f"refresh_layer needs a plan entry per site {self.site_order}, "
+                f"got {tuple(plan)}"
+            )
+        order = self.site_order
+        cache = self.cache_enabled
+
+        def _refresh(_):
+            vs = jnp.zeros((self.batched.n_sites, self.batched.n_max), jnp.float32)
+            residents = []
+            for i, kind in enumerate(order):
+                site = self.sites[kind]
+                v = plan[kind]["pending"]
+                pinned = self.pinned_sel.get(kind)
+                if pinned is not None and not cache:
+                    # legacy static §5 path (cache_mb == 0): memory-resident
+                    # neurons get ZERO importance — never streamed — and are
+                    # OR'd into the compute mask below, exactly like the
+                    # unplanned _compute_mask path
+                    v = jnp.where(pinned, 0.0, v)
+                vs = vs.at[i, : site.n].set(v)
+                if cache:
+                    residents.append(
+                        residency_from_score(plan[kind]["score"], self._cap(kind))
+                    )
+            if cache:
+                res_pad = jnp.zeros(
+                    (self.batched.n_sites, self.batched.n_max), bool
+                )
+                for i, kind in enumerate(order):
+                    res_pad = res_pad.at[i, : self.sites[kind].n].set(residents[i])
+            else:
+                res_pad = None
+            if self.method == "topk":
+                # LLM-in-a-flash-style baseline: selection ignores residency
+                # (pure importance rank); only the I/O charge sees the cache.
+                masks = jax.vmap(topk_mask)(vs, self._budgets)
+                masks = masks & self.batched.row_valid
+            else:
+                masks, _ = self.batched.select(vs, self._budgets, res_pad)
+
+            lat = jnp.float32(0.0)
+            outs = {}
+            for i, kind in enumerate(order):
+                site = self.sites[kind]
+                m = masks[i, : site.n]
+                res = residents[i] if cache else jnp.zeros((site.n,), bool)
+                for t in site.tables:
+                    # one coalesced request per selected run, charged for
+                    # miss rows only (resident rows never fragment it)
+                    lat += t.mask_latency_miss(m, res) if cache else t.mask_latency(m)
+                hit = jnp.sum(m & res).astype(jnp.float32)
+                miss = jnp.sum(m & ~res).astype(jnp.float32)
+                nbytes = miss * jnp.float32(self.site_row_bytes(kind))
+                if cache:
+                    # recency/score eviction state: decay all, reinforce selected
+                    score = RESIDENCY_DECAY * plan[kind]["score"] + jnp.where(
+                        m, plan[kind]["pending"], 0.0
+                    )
+                    pinned = self.pinned_sel.get(kind)
+                    if pinned is not None:
+                        score = jnp.where(pinned, PIN_SCORE, score)
+                else:
+                    score = None
+                if kind in self.reorderings:
+                    inv = jnp.asarray(self.reorderings[kind].inverse)
+                    m = jnp.take(m, inv, axis=0)
+                cached_orig = self.cached.get(kind)
+                if cached_orig is not None and not cache:
+                    m = m | cached_orig  # cached neurons always compute, free
+                entry = {"mask": m.astype(jnp.float32), "hit": hit,
+                         "miss": miss, "bytes": nbytes}
+                if cache:
+                    entry["score"] = score
+                outs[kind] = entry
+            return outs, lat
+
+        def _reuse(_):
+            zero = jnp.float32(0.0)
+            outs = {}
+            for kind in order:
+                entry = {"mask": plan[kind]["mask"], "hit": zero,
+                         "miss": zero, "bytes": zero}
+                if cache:
+                    entry["score"] = plan[kind]["score"]
+                outs[kind] = entry
+            return outs, jnp.float32(0.0)
+
+        results, lat = jax.lax.cond(refresh, _refresh, _reuse, None)
+        new_plan = dict(plan)
+        for kind in order:
+            entry = dict(plan[kind])
+            entry["mask"] = results[kind]["mask"]
+            entry["hit"] = plan[kind]["hit"] + results[kind]["hit"]
+            entry["miss"] = plan[kind]["miss"] + results[kind]["miss"]
+            entry["bytes"] = plan[kind]["bytes"] + results[kind]["bytes"]
+            if cache:
+                entry["score"] = results[kind]["score"]
+            new_plan[kind] = entry
+        return new_plan, lat
+
+    def time_selection(self, repeats: int = 5) -> float:
+        """Median wall-seconds of ONE layer's refresh-step selection
+        dispatch (compiled & warmed) — the same quantity
+        ``benchmarks/fig13_overhead.py`` measures per matrix, measured here
+        for the batched per-layer dispatch the serve engine actually runs.
+        The engine amortizes it into ``StepStats.select_overhead_s``."""
         if self.method == "dense":
-            # nothing resident to reuse: dense streams every matrix each step
-            return None, jnp.float32(site.dense_latency), state
-        if not isinstance(state, dict):  # legacy plan: mask-only carry
-            def _refresh(_):
-                return self._compute_mask(kind, site, acts)
-
-            def _reuse(_):
-                return state, jnp.float32(0.0)
-
-            m, lat = jax.lax.cond(refresh, _refresh, _reuse, None)
-            return m, lat, m
-
-        cap = self._cap(kind)
-
-        def _refresh_c(_):
-            return self._compute_mask_cached(kind, site, acts, state["score"], cap)
-
-        def _reuse_c(_):
-            return (state["mask"], jnp.float32(0.0), state["score"],
-                    jnp.float32(0.0), jnp.float32(0.0))
-
-        m, lat, score, hit, miss = jax.lax.cond(refresh, _refresh_c, _reuse_c, None)
-        new_state = {
-            "mask": m,
-            "score": score,
-            "hit": state["hit"] + hit,
-            "miss": state["miss"] + miss,
-        }
-        return m, lat, new_state
+            return 0.0
+        n_max = self.batched.n_max
+        v = jnp.abs(jnp.sin(jnp.arange(self.batched.n_sites * n_max, dtype=jnp.float32)))
+        vs = v.reshape(self.batched.n_sites, n_max)
+        if self.method == "topk":
+            fn = jax.jit(lambda x: jax.vmap(topk_mask)(x, self._budgets))
+        else:
+            fn = jax.jit(lambda x: self.batched.select(x, self._budgets)[0])
+        fn(vs).block_until_ready()  # compile + warm
+        walls = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(vs).block_until_ready()
+            walls.append(time.perf_counter() - t0)
+        return float(np.median(walls))
 
     def _compute_mask(self, kind: str, site: _Site, acts: jnp.ndarray):
         from ..core.importance import importance
@@ -287,47 +438,6 @@ class SparseExecution:
         if cached is not None:
             m = m | cached  # cached neurons always compute, at zero I/O
         return m.astype(jnp.float32), lat
-
-    def _compute_mask_cached(self, kind: str, site: _Site, acts: jnp.ndarray,
-                             score: jnp.ndarray, cap: int):
-        """One refresh step of the dynamic residency tier (selection order):
-        derive the resident set from the score state, select with marginal
-        cost (resident rows free), charge only cache-miss rows, then decay
-        scores and insert the selected rows' importances.
-
-        Returns (mask (N,) float [original order], miss-only latency,
-        new score (N,), hit_rows, miss_rows)."""
-        from ..core.importance import importance
-
-        v = importance(acts)
-        if kind in self.reorderings:
-            v = self.reorderings[kind].apply_to_acts(v)
-        resident = residency_from_score(score, cap)
-
-        if self.method == "topk":
-            # LLM-in-a-flash-style baseline: selection ignores residency
-            # (pure importance rank); only the I/O charge sees the cache.
-            m = topk_mask(v, site.budget())
-        else:
-            m, _, _ = site.selector.select(v, site.budget(), resident)
-        # one coalesced request per selected run, charged for miss rows only
-        # (LatencyTable.mask_latency_miss — resident rows never fragment it)
-        lat = jnp.float32(0.0)
-        for t in site.tables:
-            lat += t.mask_latency_miss(m, resident)
-        hit_rows = jnp.sum(m & resident).astype(jnp.float32)
-        miss_rows = jnp.sum(m & ~resident).astype(jnp.float32)
-
-        # recency/score eviction state: decay everything, reinforce selected
-        new_score = RESIDENCY_DECAY * score + jnp.where(m, v, 0.0)
-        pinned = self.pinned_sel.get(kind)
-        if pinned is not None:
-            new_score = jnp.where(pinned, PIN_SCORE, new_score)
-
-        if kind in self.reorderings:
-            inv = jnp.asarray(self.reorderings[kind].inverse)
-            m = jnp.take(m, inv, axis=0)
-        return m.astype(jnp.float32), lat, new_score, hit_rows, miss_rows
 
     # -- residency-tier capacity ---------------------------------------------
     @property
@@ -360,46 +470,49 @@ class SparseExecution:
         if self.cache_caps is None:
             raise RuntimeError(
                 "residency capacity unresolved — call init_plan(n_layers) "
-                "before mask_planned with the residency cache enabled"
+                "before refresh_layer with the residency cache enabled"
             )
         return self.cache_caps[kind]
 
     def init_plan(self, n_layers: int) -> Dict[str, Any]:
-        """Per-layer decode-plan state for the scanned decode loop. Empty
+        """Per-layer decode-plan state for the planned decode loops. Empty
         for dense — there is no selection to cache.
 
-        Legacy format (``cache_mb == 0``): {site: (n_layers, N) float32}
-        cached chunk masks, zero-initialized (the first scan step always
-        refreshes, so the zeros are never applied).
+        Per site: {"mask": (L, N) float32 [original row order, applied to
+        acts], "pending": (L, N) float32 [selection row order — the
+        importance recorded last step that the next refresh's batched
+        selection consumes; initialized to ones so the first refresh
+        bootstraps from uniform importance], "hit"/"miss"/"bytes": (L,)
+        float32 counters accumulated across the refresh steps of one engine
+        decode call (zeroed per call by ``reset_plan_counters``;
+        ``ServeEngine.io_summary`` reads hit/miss back as the residency
+        tier's hit rate and ``bytes`` feeds ``IOEvent.nbytes``)}.
 
-        Residency format (``cache_mb > 0``): {site: {"mask": (L, N),
-        "score": (L, N), "hit": (L,), "miss": (L,)}}. ``score`` is the
-        eviction state (decayed importance; the resident set is its top
-        cap_rows); pre-warmed ``cached`` rows start at PIN_SCORE. ``hit`` /
-        ``miss`` accumulate selected-row counts across the refresh steps of
-        one engine decode call (zeroed per call by ``reset_plan_counters``)
-        — ``ServeEngine.io_summary`` reads them back as the tier's hit rate.
+        With the residency cache enabled (``cache_mb > 0``) a "score"
+        (L, N) eviction state rides along (decayed importance; the resident
+        set is its top cap_rows); pre-warmed ``cached`` rows start at
+        PIN_SCORE.
         """
         if self.method == "dense":
             return {}
-        if not self.cache_enabled:
-            return {
-                kind: jnp.zeros((n_layers, site.n), jnp.float32)
-                for kind, site in self.sites.items()
-            }
-        self._resolve_cache(n_layers)
+        if self.cache_enabled:
+            self._resolve_cache(n_layers)
         plan: Dict[str, Any] = {}
         for kind, site in self.sites.items():
-            score0 = jnp.zeros((n_layers, site.n), jnp.float32)
-            pinned = self.pinned_sel.get(kind)
-            if pinned is not None:
-                score0 = jnp.where(pinned[None, :], PIN_SCORE, score0)
-            plan[kind] = {
+            entry = {
                 "mask": jnp.zeros((n_layers, site.n), jnp.float32),
-                "score": score0,
+                "pending": jnp.ones((n_layers, site.n), jnp.float32),
                 "hit": jnp.zeros((n_layers,), jnp.float32),
                 "miss": jnp.zeros((n_layers,), jnp.float32),
+                "bytes": jnp.zeros((n_layers,), jnp.float32),
             }
+            if self.cache_enabled:
+                score0 = jnp.zeros((n_layers, site.n), jnp.float32)
+                pinned = self.pinned_sel.get(kind)
+                if pinned is not None:
+                    score0 = jnp.where(pinned[None, :], PIN_SCORE, score0)
+                entry["score"] = score0
+            plan[kind] = entry
         return plan
 
     def dense_total_latency(self) -> float:

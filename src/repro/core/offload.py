@@ -238,7 +238,9 @@ class ComputeModel:
     def matmul_seconds(self, rows_loaded: int, cols: int, tokens: int = 1) -> float:
         return 2.0 * rows_loaded * cols * tokens / self.flops_per_s
 
-    def decode_layer_seconds(self, cfg, sparsity=0.0, tokens: int = 1) -> np.ndarray:
+    def decode_layer_seconds(
+        self, cfg, sparsity=0.0, tokens: int = 1, layer_scale=None
+    ) -> np.ndarray:
         """Per-layer decode-step compute seconds, (n_layers,), for the
         active model config — the compute lane of the overlapped I/O–compute
         pipeline (core/pipeline.py).
@@ -249,11 +251,44 @@ class ComputeModel:
         ``(1 - sparsity) * N``. ``sparsity`` is a float or the same
         per-site dict SparseExecution takes; pass 0.0 for the dense /
         dense_free policies. First-order GEMV-only (like ``matmul_seconds``
-        — attention-score FLOPs are negligible at decode batch sizes);
-        uniform across layers, hence a constant vector."""
+        — attention-score FLOPs are negligible at decode batch sizes).
+
+        ``layer_scale`` (optional, (n_layers,)): per-layer calibration
+        multipliers — real stacks are NOT uniform (first/last layers carry
+        embedding/head spill, attention cost grows with cache length, MoE
+        layers alternate), and the prefetch timeline's hidden-I/O accounting
+        is only as good as its compute lane. Pass measured per-layer
+        multipliers (e.g. ``calibrate_layer_scale`` over profiled walls) to
+        make the model's notion of "hidden" match the kernel's; None keeps
+        the uniform first-order vector."""
         sp = normalize_site_sparsity(sparsity)
         sec = sum(
             self.matmul_seconds((1.0 - sp.get(kind, 0.0)) * n, sum(cols), tokens)
             for kind, n, cols in decode_site_shapes(cfg)
         )
-        return np.full((cfg.n_layers,), sec, np.float64)
+        out = np.full((cfg.n_layers,), sec, np.float64)
+        if layer_scale is not None:
+            scale = np.asarray(layer_scale, np.float64).reshape(-1)
+            if scale.shape != (cfg.n_layers,):
+                raise ValueError(
+                    f"layer_scale must have shape ({cfg.n_layers},), "
+                    f"got {scale.shape}"
+                )
+            if np.any(scale < 0):
+                raise ValueError("layer_scale must be non-negative")
+            out = out * scale
+        return out
+
+    @staticmethod
+    def calibrate_layer_scale(layer_walls_s) -> np.ndarray:
+        """Measured per-layer decode walls → mean-1 calibration multipliers
+        for ``decode_layer_seconds(layer_scale=...)``: the profile keeps the
+        model's per-step compute total while redistributing it across layers
+        the way the hardware actually spends it."""
+        walls = np.asarray(layer_walls_s, np.float64).reshape(-1)
+        if walls.size == 0 or np.any(walls < 0):
+            raise ValueError("layer walls must be a non-empty, non-negative vector")
+        mean = walls.mean()
+        if mean <= 0.0:
+            return np.ones_like(walls)
+        return walls / mean

@@ -88,7 +88,10 @@ class PipelineTimeline:
     @property
     def hideable_s(self) -> float:
         """Upper bound on hidden_s: per step a perfect two-stage overlap
-        reaches max(io, compute), hiding min(io, compute)."""
+        reaches max(io, compute), hiding min(io, compute). (A deep prefetch
+        pipeline can do slightly better across step boundaries by smoothing
+        I/O spikes into earlier steps' compute; ``overlap_efficiency`` clips
+        at 1.0 so the metric stays a fraction.)"""
         return float(
             np.minimum(self.io_s.sum(axis=1), self.compute_s.sum(axis=1)).sum()
         )
@@ -118,9 +121,15 @@ class PipelineModel:
     """Two-stage prefetch timeline over per-layer (io, compute) vectors.
 
     ``prefetch_depth``: how many tasks the fetch engine may run ahead of
-    compute. 1 = double buffering (the default and the paper-realistic
-    setting), 0 = fully serial (the baseline the overlapped mode is
-    benchmarked against).
+    compute — the SAME knob (and the same hidden-fetch discipline) as the
+    DMA gather kernels' slot count (kernels/chunk_gather_dma.py uses
+    ``prefetch_depth + 1`` VMEM slots), so the host model and the kernel
+    agree on what is hidden. 1 = double buffering (the default and the
+    paper-realistic setting); 0 = fully serial (the baseline the overlapped
+    mode is benchmarked against); > 1 lets a fetch start while ``depth``
+    earlier buffers are still unconsumed, which hides I/O spikes a single
+    spare buffer cannot (latency is monotone non-increasing in depth: a
+    deeper pipeline only relaxes the buffer-free gate in the recurrence).
     """
 
     prefetch_depth: int = 1
@@ -130,6 +139,10 @@ class PipelineModel:
             raise ValueError(
                 f"prefetch_depth must be >= 0, got {self.prefetch_depth}"
             )
+
+    def with_depth(self, prefetch_depth: int) -> "PipelineModel":
+        """Same model at a different prefetch depth (depth sweeps)."""
+        return dataclasses.replace(self, prefetch_depth=prefetch_depth)
 
     def timeline(self, io_s, compute_s) -> PipelineTimeline:
         """io_s: (n_steps, n_layers) or (n_layers,) per-layer I/O seconds;

@@ -1,0 +1,499 @@
+"""Explicitly double-buffered DMA chunk-gather kernels.
+
+The BlockSpec-driven kernels (chunk_gather_matmul.py / chunk_gather_swiglu.py)
+let the Pallas pipeline emitter fetch one HBM block per grid step — which the
+compiler overlaps, but only one block deep and only in the schedule it picks.
+These kernels drive the fetches themselves with ``pltpu.make_async_copy``:
+``prefetch_depth + 1`` VMEM slots per streamed operand rotate through a
+classic in-kernel pipeline —
+
+    warm-up:  start copies for steps 0 .. depth-1
+    step k:   start copy k+depth  →  wait copy k  →  MXU on slot k % (depth+1)
+
+so chunk-block k+1's HBM→VMEM transfer is in flight while the MXU contracts
+block k (depth 1 = double buffering; depth 0 degenerates to fetch-then-compute
+serial, the baseline the overlap is benchmarked against). This is the kernel
+realization of the host-side prefetch timeline in core/pipeline.py: the same
+``prefetch_depth`` knob, the same hidden-fetch discipline, so the model and
+the kernel agree on what is hidden.
+
+Two entry points:
+
+  * ``chunk_gather_matmul_dma`` — drop-in for ``chunk_gather_matmul``: one
+    weight matrix, one chunk table, same alignment contract
+    (starts/sizes multiples of ``block_rows``, size 0 = padded entry).
+  * ``chunk_gather_mlp_dma`` — the **fused multi-site** path: ONE
+    ``pallas_call`` gathers gate, up AND down off the two MLP lanes of a
+    ``BatchedChunkSelector`` ``(n_sites, K)`` plan. A hidden-lane chunk
+    block is fetched once and contracted against both W_gate and W_up
+    while resident, and the SwiGLU intermediate h stays in VMEM for the
+    down-lane gather — no per-site re-dispatch, no h HBM round-trip.
+
+Interpret-mode note: this container is CPU-only; ``interpret=True`` executes
+the same slot rotation (make_async_copy is emulated as a synchronous copy),
+which validates the schedule's *numerics* — padded steps fetch nothing,
+rotation never overwrites a live slot — while the overlap itself only exists
+on real TPU hardware.
+
+``masks_to_block_tables`` is the jit-safe bridge from the batched selector's
+``(n_sites, N)`` masks straight to these kernels' padded chunk tables (block
+alignment + max_chunk_rows splitting), replacing the host-side per-site
+numpy re-splitting of ``plan_to_kernel_table``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# JAX renamed TPUCompilerParams -> CompilerParams (jax>=0.5); support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+_ANY = pltpu.TPUMemorySpace.ANY
+
+
+# ---------------------------------------------------------------------------
+# jit-safe mask -> block-aligned chunk table (the batched-plan bridge)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "max_chunk_rows"))
+def masks_to_block_tables(
+    masks: jnp.ndarray,  # (S, N) bool selection masks (selection row order)
+    block_rows: int = 8,
+    max_chunk_rows: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched selection masks → padded kernel chunk tables, inside jit.
+
+    Semantics match the numpy path ``plan_to_kernel_table`` exactly: each
+    mask is rounded outward to the ``block_rows`` grid (any selected row
+    claims its whole block — runs that merge after rounding merge here too),
+    then maximal block runs are split at ``max_chunk_rows`` so every entry
+    fits the kernel grid. Returns (starts, sizes) of shape (S, K) with
+    K = ceil(N / block_rows) (the worst case: every block its own chunk);
+    entries are row units, multiples of ``block_rows``, size 0 = padding.
+    """
+    if masks.ndim != 2:
+        raise ValueError(f"masks must be (n_sites, N), got {masks.shape}")
+    if max_chunk_rows % block_rows:
+        raise ValueError("max_chunk_rows must be a multiple of block_rows")
+    n = masks.shape[1]
+    nb = -(-n // block_rows)  # ceil: tail partial block participates
+    pad = nb * block_rows - n
+    masks = jnp.pad(masks.astype(bool), ((0, 0), (0, pad)))
+    maxb = max_chunk_rows // block_rows
+
+    def one(mask):
+        bm = mask.reshape(nb, block_rows).any(axis=1)
+        idx = jnp.arange(nb, dtype=jnp.int32)
+        prev = jnp.concatenate([jnp.zeros((1,), bool), bm[:-1]])
+        run_start = bm & ~prev
+        # index of the enclosing run's first block (cumulative max of starts)
+        start_idx = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(run_start, idx, -1)
+        )
+        pos = idx - start_idx  # block position within the run (where bm)
+        chunk_start = bm & (pos % maxb == 0)
+        cid = jnp.cumsum(chunk_start.astype(jnp.int32)) - 1
+        dump = jnp.where(bm, cid, nb)  # pad blocks scatter to a dropped slot
+        sizes_b = (
+            jnp.zeros((nb + 1,), jnp.int32).at[dump].add(bm.astype(jnp.int32))[:nb]
+        )
+        starts_b = (
+            jnp.zeros((nb + 1,), jnp.int32)
+            .at[jnp.where(chunk_start, cid, nb)]
+            .max(idx)[:nb]
+        )
+        return starts_b * block_rows, sizes_b * block_rows
+
+    starts, sizes = jax.vmap(one)(masks)
+    return starts, sizes
+
+
+# ---------------------------------------------------------------------------
+# the slot-rotation pipeline (shared by both kernels)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_step_offset(starts_ref, sizes_ref, step, blocks_per_chunk, block_rows,
+                       lane=None):
+    """Flat (chunk, block) step → (row offset, active). Padded chunks
+    (size 0) and blocks past a chunk's size are inactive: no DMA is issued
+    for them and their slot is simply skipped by the rotation."""
+    ci = step // blocks_per_chunk
+    bk = step - ci * blocks_per_chunk
+    if lane is None:
+        start, size = starts_ref[ci], sizes_ref[ci]
+    else:
+        start, size = starts_ref[lane, ci], sizes_ref[lane, ci]
+    return start + bk * block_rows, bk * block_rows < size
+
+
+def _pipelined_steps(total, n_slots, start_copy, wait_and_compute):
+    """Run the slot-rotation schedule: start copies ``n_slots - 1`` steps
+    ahead (prefetch_depth = n_slots - 1), wait + compute in order. With
+    n_slots == 1 (depth 0) each step starts its own copy then immediately
+    waits on it — the serial baseline schedule."""
+    depth = n_slots - 1
+    for s in range(depth):  # warm-up (static: depth is a python int)
+        if s < total:
+            start_copy(jnp.int32(s), s % n_slots)
+
+    def body(step, _):
+        nxt = step + depth
+
+        @pl.when(nxt < total)
+        def _():
+            start_copy(nxt, nxt % n_slots)
+
+        wait_and_compute(step, step % n_slots)
+        return _
+
+    jax.lax.fori_loop(0, total, body, None)
+
+
+# ---------------------------------------------------------------------------
+# single-site DMA matmul
+# ---------------------------------------------------------------------------
+
+
+def _matmul_dma_kernel(
+    starts_ref,  # scalar prefetch (K,)
+    sizes_ref,  # scalar prefetch (K,)
+    x_ref,  # (B, N) VMEM
+    w_hbm,  # (N, D) ANY/HBM — fetched by explicit DMA only
+    out_ref,  # (B, tile_d) VMEM f32
+    wslots,  # (n_slots, block_rows, tile_d) VMEM
+    sems,  # DMA semaphores (n_slots,)
+    *,
+    block_rows: int,
+    tile_d: int,
+    blocks_per_chunk: int,
+    n_slots: int,
+):
+    dj = pl.program_id(0)
+    k = starts_ref.shape[0]
+    total = k * blocks_per_chunk
+
+    def offset(step):
+        return _chunk_step_offset(
+            starts_ref, sizes_ref, step, blocks_per_chunk, block_rows
+        )
+
+    def start_copy(step, slot):
+        off, active = offset(step)
+
+        @pl.when(active)
+        def _():
+            pltpu.make_async_copy(
+                w_hbm.at[pl.ds(off, block_rows), pl.ds(dj * tile_d, tile_d)],
+                wslots.at[slot],
+                sems.at[slot],
+            ).start()
+
+    def wait_and_compute(step, slot):
+        off, active = offset(step)
+
+        @pl.when(active)
+        def _():
+            pltpu.make_async_copy(
+                w_hbm.at[pl.ds(off, block_rows), pl.ds(dj * tile_d, tile_d)],
+                wslots.at[slot],
+                sems.at[slot],
+            ).wait()
+            xb = pl.load(x_ref, (slice(None), pl.ds(off, block_rows)))
+            out_ref[...] += jnp.dot(
+                xb.astype(jnp.float32),
+                wslots[slot].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+
+    out_ref[...] = jnp.zeros_like(out_ref)
+    _pipelined_steps(total, n_slots, start_copy, wait_and_compute)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_rows", "tile_d", "max_chunk_rows", "prefetch_depth", "interpret"
+    ),
+)
+def chunk_gather_matmul_dma(
+    w: jnp.ndarray,  # (N, D)
+    x: jnp.ndarray,  # (B, N)
+    starts: jnp.ndarray,  # (K,) int32, multiples of block_rows
+    sizes: jnp.ndarray,  # (K,) int32, multiples of block_rows (0 = padded)
+    *,
+    block_rows: int = 8,
+    tile_d: int = 128,
+    max_chunk_rows: int = 512,
+    prefetch_depth: int = 1,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y (B, D) f32 = Σ_chunks x_chunk @ W_chunk, fetched by an explicitly
+    ``prefetch_depth``-deep double-buffered DMA pipeline. Numerically
+    identical at every depth (the schedule only re-times the same fetches) —
+    matches ``chunk_gather_matmul_ref`` exactly like the BlockSpec kernel."""
+    n, d = w.shape
+    b = x.shape[0]
+    if prefetch_depth < 0:
+        raise ValueError(f"prefetch_depth must be >= 0, got {prefetch_depth}")
+    if d % tile_d:
+        raise ValueError(f"D={d} must be a multiple of tile_d={tile_d}")
+    if n % block_rows:
+        raise ValueError(f"N={n} must be a multiple of block_rows={block_rows}")
+    if max_chunk_rows % block_rows:
+        raise ValueError("max_chunk_rows must be a multiple of block_rows")
+    n_slots = prefetch_depth + 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(d // tile_d,),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda dj, *_: (0, 0)),  # x resident in VMEM
+            pl.BlockSpec(memory_space=_ANY),  # w stays in HBM; DMA'd manually
+        ],
+        out_specs=pl.BlockSpec((b, tile_d), lambda dj, *_: (0, dj)),
+        scratch_shapes=[
+            pltpu.VMEM((n_slots, block_rows, tile_d), w.dtype),
+            pltpu.SemaphoreType.DMA((n_slots,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _matmul_dma_kernel,
+            block_rows=block_rows,
+            tile_d=tile_d,
+            blocks_per_chunk=max_chunk_rows // block_rows,
+            n_slots=n_slots,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(starts, sizes, x, w)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-site MLP (gate/up off the hidden lane, down off the ffn lane)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_dma_kernel(
+    starts_ref,  # scalar prefetch (2, K): lane 0 = hidden_mlp, lane 1 = ffn
+    sizes_ref,  # scalar prefetch (2, K)
+    x_ref,  # (B, N) VMEM
+    wg_hbm,  # (N, F) ANY
+    wu_hbm,  # (N, F) ANY
+    wd_hbm,  # (F, D) ANY
+    out_ref,  # (B, D) VMEM f32
+    h_ref,  # scratch (B, F) VMEM f32 — the SwiGLU intermediate, never HBM
+    gslots,  # (n_slots, block_rows, tile_f)
+    uslots,  # (n_slots, block_rows, tile_f)
+    dslots,  # (n_slots, block_rows, tile_d)
+    acc_g,  # (B, tile_f) f32
+    acc_u,  # (B, tile_f) f32
+    sems_g,
+    sems_u,
+    sems_d,
+    *,
+    block_rows: int,
+    tile_f: int,
+    tile_d: int,
+    blocks_per_chunk: int,
+    n_slots: int,
+    n_f_tiles: int,
+    n_d_tiles: int,
+):
+    k = starts_ref.shape[1]
+    total = k * blocks_per_chunk
+
+    def offset(lane, step):
+        return _chunk_step_offset(
+            starts_ref, sizes_ref, step, blocks_per_chunk, block_rows, lane=lane
+        )
+
+    # -- phase 1: gate/up over the hidden lane, one f-tile at a time --------
+    def gate_up_tile(fj):
+        def start_copy(step, slot):
+            off, active = offset(0, step)
+
+            @pl.when(active)
+            def _():
+                # one chunk block, fetched once, feeds BOTH gate and up
+                pltpu.make_async_copy(
+                    wg_hbm.at[pl.ds(off, block_rows), pl.ds(fj * tile_f, tile_f)],
+                    gslots.at[slot],
+                    sems_g.at[slot],
+                ).start()
+                pltpu.make_async_copy(
+                    wu_hbm.at[pl.ds(off, block_rows), pl.ds(fj * tile_f, tile_f)],
+                    uslots.at[slot],
+                    sems_u.at[slot],
+                ).start()
+
+        def wait_and_compute(step, slot):
+            off, active = offset(0, step)
+
+            @pl.when(active)
+            def _():
+                pltpu.make_async_copy(
+                    wg_hbm.at[pl.ds(off, block_rows), pl.ds(fj * tile_f, tile_f)],
+                    gslots.at[slot],
+                    sems_g.at[slot],
+                ).wait()
+                pltpu.make_async_copy(
+                    wu_hbm.at[pl.ds(off, block_rows), pl.ds(fj * tile_f, tile_f)],
+                    uslots.at[slot],
+                    sems_u.at[slot],
+                ).wait()
+                xb = pl.load(x_ref, (slice(None), pl.ds(off, block_rows)))
+                xb = xb.astype(jnp.float32)
+                acc_g[...] += jnp.dot(xb, gslots[slot].astype(jnp.float32),
+                                      preferred_element_type=jnp.float32)
+                acc_u[...] += jnp.dot(xb, uslots[slot].astype(jnp.float32),
+                                      preferred_element_type=jnp.float32)
+
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+        _pipelined_steps(total, n_slots, start_copy, wait_and_compute)
+        g = acc_g[...]
+        pl.store(
+            h_ref,
+            (slice(None), pl.ds(fj * tile_f, tile_f)),
+            g * (1.0 / (1.0 + jnp.exp(-g))) * acc_u[...],
+        )
+
+    def f_body(fj, _):
+        gate_up_tile(fj)
+        return _
+
+    jax.lax.fori_loop(0, n_f_tiles, f_body, None)
+
+    # -- phase 2: down over the ffn lane, consuming h straight from VMEM ----
+    def down_tile(dj):
+        def start_copy(step, slot):
+            off, active = offset(1, step)
+
+            @pl.when(active)
+            def _():
+                pltpu.make_async_copy(
+                    wd_hbm.at[pl.ds(off, block_rows), pl.ds(dj * tile_d, tile_d)],
+                    dslots.at[slot],
+                    sems_d.at[slot],
+                ).start()
+
+        def wait_and_compute(step, slot):
+            off, active = offset(1, step)
+
+            @pl.when(active)
+            def _():
+                pltpu.make_async_copy(
+                    wd_hbm.at[pl.ds(off, block_rows), pl.ds(dj * tile_d, tile_d)],
+                    dslots.at[slot],
+                    sems_d.at[slot],
+                ).wait()
+                hb = pl.load(h_ref, (slice(None), pl.ds(off, block_rows)))
+                cur = pl.load(out_ref, (slice(None), pl.ds(dj * tile_d, tile_d)))
+                pl.store(
+                    out_ref,
+                    (slice(None), pl.ds(dj * tile_d, tile_d)),
+                    cur + jnp.dot(hb, dslots[slot].astype(jnp.float32),
+                                  preferred_element_type=jnp.float32),
+                )
+
+        _pipelined_steps(total, n_slots, start_copy, wait_and_compute)
+
+    out_ref[...] = jnp.zeros_like(out_ref)
+
+    def d_body(dj, _):
+        down_tile(dj)
+        return _
+
+    jax.lax.fori_loop(0, n_d_tiles, d_body, None)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_rows", "tile_f", "tile_d", "max_chunk_rows", "prefetch_depth",
+        "interpret",
+    ),
+)
+def chunk_gather_mlp_dma(
+    w_gate: jnp.ndarray,  # (N, F)
+    w_up: jnp.ndarray,  # (N, F)
+    w_down: jnp.ndarray,  # (F, D)
+    x: jnp.ndarray,  # (B, N)
+    starts: jnp.ndarray,  # (2, K): lane 0 = hidden_mlp plan, lane 1 = ffn plan
+    sizes: jnp.ndarray,  # (2, K)
+    *,
+    block_rows: int = 8,
+    tile_f: int = 128,
+    tile_d: int = 128,
+    max_chunk_rows: int = 512,
+    prefetch_depth: int = 1,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused sparse MLP: y (B, D) f32 = SwiGLU-masked down projection where
+    gate/up gather off ``starts[0]`` (the hidden_mlp lane of the batched
+    plan) and down gathers off ``starts[1]`` (the ffn lane) — one
+    ``pallas_call`` for what the per-site path dispatches as three. Matches
+    ``chunk_gather_mlp_ref`` exactly."""
+    n, f = w_gate.shape
+    fd, d = w_down.shape
+    b = x.shape[0]
+    if w_up.shape != (n, f):
+        raise ValueError("w_gate/w_up shape mismatch")
+    if fd != f:
+        raise ValueError(f"w_down rows {fd} must equal d_ff {f}")
+    if starts.shape[0] != 2 or starts.shape != sizes.shape:
+        raise ValueError(
+            f"starts/sizes must be (2, K) plan lanes, got {starts.shape}/{sizes.shape}"
+        )
+    if prefetch_depth < 0:
+        raise ValueError(f"prefetch_depth must be >= 0, got {prefetch_depth}")
+    if f % tile_f or d % tile_d or n % block_rows or f % block_rows:
+        raise ValueError("alignment violation")
+    if max_chunk_rows % block_rows:
+        raise ValueError("max_chunk_rows must be a multiple of block_rows")
+    n_slots = prefetch_depth + 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),  # x
+            pl.BlockSpec(memory_space=_ANY),  # w_gate
+            pl.BlockSpec(memory_space=_ANY),  # w_up
+            pl.BlockSpec(memory_space=_ANY),  # w_down
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((b, f), jnp.float32),  # h — never round-trips HBM
+            pltpu.VMEM((n_slots, block_rows, tile_f), w_gate.dtype),
+            pltpu.VMEM((n_slots, block_rows, tile_f), w_up.dtype),
+            pltpu.VMEM((n_slots, block_rows, tile_d), w_down.dtype),
+            pltpu.VMEM((b, tile_f), jnp.float32),
+            pltpu.VMEM((b, tile_f), jnp.float32),
+            pltpu.SemaphoreType.DMA((n_slots,)),
+            pltpu.SemaphoreType.DMA((n_slots,)),
+            pltpu.SemaphoreType.DMA((n_slots,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _mlp_dma_kernel,
+            block_rows=block_rows,
+            tile_f=tile_f,
+            tile_d=tile_d,
+            blocks_per_chunk=max_chunk_rows // block_rows,
+            n_slots=n_slots,
+            n_f_tiles=f // tile_f,
+            n_d_tiles=d // tile_d,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(starts, sizes, x, w_gate, w_up, w_down)

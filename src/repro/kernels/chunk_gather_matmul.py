@@ -29,6 +29,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.contiguity import mask_to_chunks_np
+
 # JAX renamed TPUCompilerParams -> CompilerParams (jax>=0.5); support both
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
@@ -49,16 +51,16 @@ def _kernel(
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    # Blocks past this chunk's size contribute nothing (padded chunks: size 0).
+    # Blocks past this chunk's size contribute nothing (padded chunks: size 0)
+    # — and DO nothing: the accumulate is predicated off entirely, instead of
+    # the old lax.cond that still paid a zeros add into out_ref per pad step.
     active = bk * block_rows < sizes_ref[ci]
-    x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)
-    contrib = jax.lax.cond(
-        active,
-        lambda: jnp.dot(x, w, preferred_element_type=jnp.float32),
-        lambda: jnp.zeros_like(out_ref),
-    )
-    out_ref[...] += contrib
+
+    @pl.when(active)
+    def _acc():
+        x = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
 @functools.partial(
@@ -130,6 +132,27 @@ def align_chunk_table(
     merged, then runs longer than ``max_chunk_rows`` are split so every entry
     fits the kernel grid (splitting a contiguous run costs nothing: the
     fetches stay back-to-back)."""
+    def _as_rows(name, arr):
+        """Validate/cast ONCE up front: row counts must be integral — a
+        float table that survived by accident used to floor silently in the
+        index arithmetic below."""
+        arr = np.asarray(arr)
+        if arr.ndim != 1:
+            raise ValueError(f"{name} must be 1-D, got shape {arr.shape}")
+        cast = arr.astype(np.int64)
+        if not np.issubdtype(arr.dtype, np.integer) and not np.array_equal(cast, arr):
+            raise TypeError(
+                f"{name} must hold integral row values, got dtype {arr.dtype} "
+                "with non-integer entries"
+            )
+        return cast
+
+    starts = _as_rows("starts", starts)
+    sizes = _as_rows("sizes", sizes)
+    if starts.shape != sizes.shape:
+        raise ValueError(
+            f"starts/sizes length mismatch: {starts.shape} vs {sizes.shape}"
+        )
     mask = np.zeros(n, bool)
     for s, z in zip(starts, sizes):
         if z <= 0:
@@ -137,7 +160,6 @@ def align_chunk_table(
         lo = (s // block_rows) * block_rows
         hi = min(n, ((s + z + block_rows - 1) // block_rows) * block_rows)
         mask[lo:hi] = True
-    from ..core.contiguity import mask_to_chunks_np
 
     out_s, out_z = [], []
     for c in mask_to_chunks_np(mask):

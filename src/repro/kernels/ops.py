@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.contiguity import mask_to_chunks_np
+from .chunk_gather_dma import chunk_gather_matmul_dma, chunk_gather_mlp_dma
 from .chunk_gather_matmul import align_chunk_table, chunk_gather_matmul
 from .chunk_gather_swiglu import chunk_gather_swiglu
 
@@ -68,6 +70,67 @@ def sparse_swiglu(
     )
 
 
+def sparse_matmul_dma(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    starts: jnp.ndarray,
+    sizes: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+    tile_d: int = 128,
+    max_chunk_rows: int = 512,
+    prefetch_depth: int = 1,
+) -> jnp.ndarray:
+    """``sparse_matmul`` through the explicitly double-buffered DMA kernel:
+    ``prefetch_depth + 1`` VMEM slots rotate so chunk-block k+1 streams from
+    HBM while the MXU contracts block k. Interpret mode off-TPU validates
+    the identical slot-rotation schedule synchronously."""
+    return chunk_gather_matmul_dma(
+        w,
+        x,
+        starts,
+        sizes,
+        block_rows=block_rows,
+        tile_d=tile_d,
+        max_chunk_rows=max_chunk_rows,
+        prefetch_depth=prefetch_depth,
+        interpret=not _on_tpu(),
+    )
+
+
+def sparse_mlp_fused(
+    w_gate: jnp.ndarray,
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,
+    x: jnp.ndarray,
+    starts: jnp.ndarray,  # (2, K): hidden_mlp and ffn lanes of a batched plan
+    sizes: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+    tile_f: int = 128,
+    tile_d: int = 128,
+    max_chunk_rows: int = 512,
+    prefetch_depth: int = 1,
+) -> jnp.ndarray:
+    """The fused multi-site MLP: ONE dispatch gathers gate/up off the
+    hidden_mlp plan lane and down off the ffn lane, with the SwiGLU
+    intermediate kept in VMEM (no per-site re-dispatch, no h round-trip)."""
+    return chunk_gather_mlp_dma(
+        w_gate,
+        w_up,
+        w_down,
+        x,
+        starts,
+        sizes,
+        block_rows=block_rows,
+        tile_f=tile_f,
+        tile_d=tile_d,
+        max_chunk_rows=max_chunk_rows,
+        prefetch_depth=prefetch_depth,
+        interpret=not _on_tpu(),
+    )
+
+
 def plan_to_kernel_table(
     mask: np.ndarray,
     block_rows: int = 8,
@@ -75,8 +138,6 @@ def plan_to_kernel_table(
     max_chunk_rows: int = 512,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Selection mask → block-aligned padded chunk table for the kernels."""
-    from ..core.contiguity import mask_to_chunks_np
-
     chunks = mask_to_chunks_np(np.asarray(mask))
     starts = np.asarray([c.start for c in chunks], np.int32)
     sizes = np.asarray([c.size for c in chunks], np.int32)

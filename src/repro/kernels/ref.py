@@ -38,3 +38,19 @@ def chunk_gather_swiglu_ref(
     g = chunk_gather_matmul_ref(w_gate, x, starts, sizes)
     u = chunk_gather_matmul_ref(w_up, x, starts, sizes)
     return (g * (1.0 / (1.0 + jnp.exp(-g)))) * u
+
+
+def chunk_gather_mlp_ref(
+    w_gate: jnp.ndarray,  # (N, F)
+    w_up: jnp.ndarray,  # (N, F)
+    w_down: jnp.ndarray,  # (F, D)
+    x: jnp.ndarray,  # (B, N)
+    starts: jnp.ndarray,  # (2, K): lane 0 = hidden_mlp plan, lane 1 = ffn plan
+    sizes: jnp.ndarray,  # (2, K)
+) -> jnp.ndarray:
+    """Fused multi-site MLP oracle: gate/up gather off the hidden lane of a
+    batched (n_sites, K) plan, down off the ffn lane — the target for
+    ``chunk_gather_mlp_dma``."""
+    h = chunk_gather_swiglu_ref(w_gate, w_up, x, starts[0], sizes[0])
+    mask_f = chunk_table_to_mask(starts[1], sizes[1], w_down.shape[0])
+    return (h * mask_f.astype(jnp.float32)[None, :]) @ w_down.astype(jnp.float32)

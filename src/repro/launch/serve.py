@@ -61,6 +61,12 @@ def main():
                          "stream while layer l computes); --no-overlap "
                          "retains the serial Σio+Σcompute baseline charge. "
                          "Tokens are identical either way.")
+    ap.add_argument("--prefetch-depth", type=int, default=1,
+                    help="how many layers the prefetch pipeline's fetch "
+                         "engine may run ahead of compute (the DMA kernels' "
+                         "slot count - 1): 1 = double buffering, 0 = serial "
+                         "schedule, >1 = deeper pipeline. Tokens are "
+                         "byte-identical at every depth.")
     ap.add_argument("--streams", type=int, default=0,
                     help=">0: continuous-batching mode — serve this many "
                          "Poisson-arriving requests through --batch slots")
@@ -78,7 +84,8 @@ def main():
                       device=args.device, sparsity=args.sparsity,
                       method=args.method,
                       plan_refresh_interval=args.plan_refresh_interval,
-                      cache_mb=args.cache_mb, overlap=args.overlap)
+                      cache_mb=args.cache_mb, overlap=args.overlap,
+                      prefetch_depth=args.prefetch_depth)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -109,7 +116,7 @@ def main():
           f"wall {sum(s.wall_s for s in dsteps)*1e3:.1f} ms")
     s = eng.io_summary()
     charged = "overlap" if args.overlap else "serial"
-    print(f"[pipeline] charged={charged}  "
+    print(f"[pipeline] charged={charged} depth={args.prefetch_depth}  "
           f"serial {s['decode_serial_s']*1e3:.2f} ms  "
           f"overlapped {s['decode_overlap_s']*1e3:.2f} ms  "
           f"stall {s['decode_stall_s']*1e3:.2f} ms  "
@@ -150,6 +157,9 @@ def _serve_streams(args, cfg, eng):
           f"sim time {stats.sim_time_s*1e3:.1f} ms  "
           f"overlap_efficiency {s['overlap_efficiency']:.3f}  "
           f"cache_hit_rate {s['cache_hit_rate']:.3f}")
+    print(f"[serve] admitted_during_stall {s['admitted_during_stall']}  "
+          f"stall_hidden {s['stall_hidden_s']*1e3:.2f} ms  "
+          f"bubble_utilization {s['bubble_utilization']:.3f}")
 
 
 if __name__ == "__main__":

@@ -60,7 +60,7 @@ import numpy as np
 
 from ..core.latency_model import MB
 from ..core.offload import ComputeModel, FlashOffloadSimulator
-from ..core.pipeline import overlap_efficiency
+from ..core.pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from ..models.model import Model
 from .sparse_exec import (
     SparseExecution,
@@ -88,14 +88,19 @@ class StepStats:
     nbytes: float = 0.0
     # overlapped-pipeline accounting (decode steps; core/pipeline.py):
     # serial charge Σ(io+compute), critical-path charge with prefetch,
-    # compute lane total, and compute-waiting-on-fetch stall
+    # compute lane total, compute-waiting-on-fetch stall, and
+    # fetch-engine-idle bubble (the window scheduler admission hides in)
     compute_s: float = 0.0
     serial_s: float = 0.0
     overlap_s: float = 0.0
     stall_s: float = 0.0
+    bubble_s: float = 0.0
 
 
 class ServeEngine:
+    # retention bound of the per-layer I/O log behind reprice_timeline
+    _LAYER_IO_LOG_MAX_STEPS = 4096
+
     def __init__(
         self,
         model: Model,
@@ -110,6 +115,8 @@ class ServeEngine:
         plan_refresh_interval: int = 1,
         cache_mb: Optional[float] = None,
         overlap: bool = True,
+        prefetch_depth: int = 1,
+        compute_layer_scale=None,
     ):
         """``cache_mb``: DRAM budget (MB) of the dynamic chunk residency
         cache (paper §5). None → the device profile's ``dram_cache_mb``
@@ -118,7 +125,17 @@ class ServeEngine:
         ``overlap``: charge decode steps through the two-stage prefetch
         pipeline (default) instead of the serial Σ io + Σ compute baseline.
         Token outputs are identical either way — the flag only selects
-        which timeline prices the step (StepStats keeps both)."""
+        which timeline prices the step (StepStats keeps both).
+
+        ``prefetch_depth``: how many layers the pipeline's fetch engine may
+        run ahead of compute — the same knob as the DMA gather kernels' slot
+        count (kernels/chunk_gather_dma.py). 1 = double buffering; 0
+        degenerates the timeline to the serial schedule. Tokens are
+        byte-identical at every depth.
+
+        ``compute_layer_scale``: optional (n_layers,) per-layer calibration
+        multipliers for the pipeline's compute lane
+        (``ComputeModel.decode_layer_seconds``); None = uniform."""
         validate_method(method, allow_dense_free=True)
         if plan_refresh_interval < 1:
             raise ValueError("plan_refresh_interval must be >= 1")
@@ -126,11 +143,19 @@ class ServeEngine:
         self.params = params
         self.max_seq = max_seq
         self.batch_size = batch_size
-        self.simulator = FlashOffloadSimulator(device, seed=seed)
+        # PipelineModel validates prefetch_depth >= 0
+        self.prefetch_depth = prefetch_depth
+        self.simulator = FlashOffloadSimulator(
+            device, seed=seed, pipeline=PipelineModel(prefetch_depth=prefetch_depth)
+        )
         self.compute_model = ComputeModel()
         self.method = method
         self.plan_refresh_interval = plan_refresh_interval
         self.overlap = overlap
+        # scheduler-admission-during-stall accounting (Scheduler reports
+        # hidden prefill time back through note_stall_admission)
+        self.admitted_during_stall = 0
+        self.stall_hidden_s = 0.0
         # profile-default resolution + >= 0 validation live on the profile
         self.cache_mb = self.simulator.profile.cache_capacity_bytes(cache_mb) / MB
         self.sparse_ctx = (
@@ -144,12 +169,18 @@ class ServeEngine:
         # compute over their kept rows, dense/dense_free over everything
         eff_sparsity = sparsity if method in ("chunk", "topk") else 0.0
         self.compute_layer_s = self.compute_model.decode_layer_seconds(
-            model.cfg, sparsity=eff_sparsity, tokens=batch_size
+            model.cfg, sparsity=eff_sparsity, tokens=batch_size,
+            layer_scale=compute_layer_scale,
         )
         self.cache = model.init_cache(batch_size, max_seq)
         self.stats: List[StepStats] = []
         self._plan = None  # chunk-plan carry, persists across decode calls
         self._select_s_per_refresh: Optional[float] = None  # lazy, wall-timed
+        # per-decode-call (n_steps, n_layers) simulated-I/O matrices, kept so
+        # the host-side timeline can be repriced at other prefetch depths;
+        # bounded to the most recent _LAYER_IO_LOG_MAX_STEPS decode steps so
+        # a long-lived serving engine doesn't grow without bound
+        self._layer_io_log: List[np.ndarray] = []
 
         # per-token baseline shares the fused loop's step function (the
         # planned path), so the two decode modes differ ONLY in host-loop
@@ -256,7 +287,9 @@ class ServeEngine:
         # the simulator's lift+jitter applies per step; spread it over the
         # step's layers proportionally so the pipeline sees simulated time
         scale = np.where(io_steps > 0, sims / np.maximum(io_steps, 1e-30), 1.0)
-        tl = self.simulator.pipeline.timeline(ios * scale[:, None], self.compute_layer_s)
+        layer_io = ios * scale[:, None]
+        self._log_layer_io(layer_io)
+        tl = self.simulator.pipeline.timeline(layer_io, self.compute_layer_s)
         n_refresh = math.ceil(n_tokens / self.plan_refresh_interval)
         select_amortized = (
             self._selection_seconds_per_refresh() * n_refresh / max(n_tokens, 1)
@@ -271,7 +304,8 @@ class ServeEngine:
                           nbytes=float(byts[i]), compute_s=compute_step,
                           serial_s=float(tl.serial_s[i]),
                           overlap_s=float(tl.overlap_s[i]),
-                          stall_s=float(tl.stall_s[i]))
+                          stall_s=float(tl.stall_s[i]),
+                          bubble_s=float(tl.bubble_s[i]))
             )
         charged = tl.overlap_s if self.overlap else tl.serial_s
         return toks, charged
@@ -339,6 +373,7 @@ class ServeEngine:
         if not io_rows:  # n_tokens == 0: nothing to time
             return jnp.concatenate(out, axis=1)
         # backfill the overlap-pipeline accounting for the whole loop
+        self._log_layer_io(np.asarray(io_rows))
         tl = self.simulator.pipeline.timeline(
             np.asarray(io_rows), self.compute_layer_s
         )
@@ -348,6 +383,7 @@ class ServeEngine:
             st.serial_s = float(tl.serial_s[j])
             st.overlap_s = float(tl.overlap_s[j])
             st.stall_s = float(tl.stall_s[j])
+            st.bubble_s = float(tl.bubble_s[j])
         return jnp.concatenate(out, axis=1)
 
     # -- classic single-stream stages ----------------------------------------
@@ -433,6 +469,52 @@ class ServeEngine:
         per_layer = self.sparse_ctx.dense_total_latency()
         return per_layer * self.model.cfg.n_layers
 
+    def _log_layer_io(self, layer_io: np.ndarray) -> None:
+        """Append one decode call's (n_steps, n_layers) simulated-I/O matrix
+        and trim the oldest WHOLE calls past the retention bound (whole
+        calls, because each logged call is repriced as its own cold
+        pipeline)."""
+        self._layer_io_log.append(layer_io)
+        total = sum(m.shape[0] for m in self._layer_io_log)
+        while len(self._layer_io_log) > 1 and total > self._LAYER_IO_LOG_MAX_STEPS:
+            total -= self._layer_io_log.pop(0).shape[0]
+
+    def reprice_timeline(self, prefetch_depth: int):
+        """Re-run the prefetch timeline over the retained decode calls'
+        recorded per-layer simulated I/O at a different depth. Each logged
+        call is priced as its own cold pipeline — exactly how the engine
+        charges a decode call — so the result matches what an
+        identically-seeded engine constructed with
+        ``prefetch_depth=depth`` would log for those calls: a free depth
+        sweep without re-decoding (benchmarks use it to assert depth
+        monotonicity). Covers the most recent ``_LAYER_IO_LOG_MAX_STEPS``
+        decode steps (whole calls). Returns a combined ``PipelineTimeline``
+        whose per-step arrays are the per-call timelines concatenated."""
+        if not self._layer_io_log:
+            raise RuntimeError("no decode steps logged yet — nothing to reprice")
+        model = self.simulator.pipeline.with_depth(prefetch_depth)
+        tls = [model.timeline(ios, self.compute_layer_s) for ios in self._layer_io_log]
+        if len(tls) == 1:
+            return tls[0]
+        return PipelineTimeline(
+            io_s=np.concatenate([t.io_s for t in tls]),
+            compute_s=np.concatenate([t.compute_s for t in tls]),
+            serial_s=np.concatenate([t.serial_s for t in tls]),
+            overlap_s=np.concatenate([t.overlap_s for t in tls]),
+            stall_s=np.concatenate([t.stall_s for t in tls]),
+            bubble_s=np.concatenate([t.bubble_s for t in tls]),
+        )
+
+    def note_stall_admission(self, hidden_s: float) -> None:
+        """Record one scheduler admission whose prefill was (partially)
+        hidden inside measured decode stall windows — the Scheduler reports
+        it here so ``io_summary`` can expose realized bubble utilization
+        next to the stall totals the windows came from."""
+        if hidden_s < 0:
+            raise ValueError(f"hidden_s must be >= 0, got {hidden_s}")
+        self.admitted_during_stall += 1
+        self.stall_hidden_s += float(hidden_s)
+
     def io_summary(self) -> Dict[str, float]:
         tot_est = sum(s.io_est_s for s in self.stats)
         tot_sim = sum(s.io_sim_s for s in self.stats)
@@ -441,6 +523,8 @@ class ServeEngine:
         dec = [s for s in self.stats if s.kind == "decode"]
         serial = sum(s.serial_s for s in dec)
         overlap = sum(s.overlap_s for s in dec)
+        stall = sum(s.stall_s for s in dec)
+        bubble = sum(s.bubble_s for s in dec)
         return {
             "io_est_s": tot_est,
             "io_sim_s": tot_sim,
@@ -454,11 +538,21 @@ class ServeEngine:
             "decode_compute_s": sum(s.compute_s for s in dec),
             "decode_serial_s": serial,
             "decode_overlap_s": overlap,
-            "decode_stall_s": sum(s.stall_s for s in dec),
+            "decode_stall_s": stall,
+            "decode_bubble_s": bubble,
             "overlap_efficiency": overlap_efficiency(
                 [s.serial_s for s in dec],
                 [s.overlap_s for s in dec],
                 [s.io_sim_s for s in dec],
                 [s.compute_s for s in dec],
+            ),
+            # scheduler admissions landed inside measured idle windows
+            # (stall + bubble) and the fraction of those windows their
+            # hidden prefill time realized
+            "admitted_during_stall": self.admitted_during_stall,
+            "stall_hidden_s": self.stall_hidden_s,
+            "bubble_utilization": (
+                min(self.stall_hidden_s / (stall + bubble), 1.0)
+                if (stall + bubble) > 0 else 0.0
             ),
         }

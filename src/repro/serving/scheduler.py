@@ -14,6 +14,25 @@ policies change) plus an optional extra per-token compute constant — so
 tokens/s and request-latency percentiles reflect the policy under test
 rather than host-python speed. Wall time is tracked separately by the
 engine's StepStats.
+
+**Bubble-aware admission** (``admit_in_bubbles``, default on): the
+overlapped pipeline's per-step ``StepStats.stall`` measures time the
+compute engine spent idle waiting on an unfinished fetch, and
+``StepStats.bubble_s`` time the fetch engine spent idle waiting for a free
+buffer. Both are idle engine windows inside an already-charged round —
+schedulable capacity: a waiting request's admission work (prefill compute
+in the stall windows, its weight streaming in the fetch-idle bubbles; a
+first-order model that does not distinguish which lane absorbs which part)
+can ride inside them instead of extending the clock after the round. The
+scheduler banks each decode round's measured stall + bubble seconds as
+credit and discounts subsequent admissions' prefill charge against it, so
+admission effectively happens *during* the round rather than serially at
+the boundary. ``admitted_during_stall`` / ``stall_hidden_s`` count the
+realized hiding (also surfaced via the engine's ``io_summary`` as
+``bubble_utilization`` = hidden ÷ (stall + bubble)). Credit only accrues
+when the engine actually charges the overlapped timeline (``overlap=True``
+and a positive prefetch depth) — under the serial charge there is no
+pipeline and no idle windows.
 """
 from __future__ import annotations
 
@@ -39,6 +58,10 @@ class SchedulerStats:
     latency_p50_s: float
     latency_p95_s: float
     ttft_p50_s: float
+    # bubble-aware admission: requests admitted inside measured decode
+    # stall windows, and the prefill seconds those windows absorbed
+    admitted_during_stall: int = 0
+    stall_hidden_s: float = 0.0
 
     def row(self) -> str:
         return (
@@ -65,6 +88,7 @@ class Scheduler:
         engine: ServeEngine,
         round_tokens: int = 4,
         compute_s_per_token: float = 0.0,
+        admit_in_bubbles: bool = True,
     ):
         if round_tokens < 1:
             raise ValueError("round_tokens must be >= 1")
@@ -72,6 +96,14 @@ class Scheduler:
         self.n_slots = engine.batch_size
         self.round_tokens = round_tokens
         self.compute_s_per_token = compute_s_per_token
+        # bubble-aware admission only has windows to use when the engine
+        # actually charges the overlapped timeline
+        self.admit_in_bubbles = (
+            admit_in_bubbles and engine.overlap and engine.prefetch_depth > 0
+        )
+        self.stall_credit_s = 0.0  # banked decode-stall seconds (see module doc)
+        self.admitted_during_stall = 0
+        self.stall_hidden_s = 0.0
         self.waiting: Deque[Request] = deque()
         self.running: List[Optional[Request]] = [None] * self.n_slots
         self.finished: List[Request] = []
@@ -95,14 +127,24 @@ class Scheduler:
     def _admit_ready(self) -> int:
         """Admit WAITING requests that have arrived into free slots (FCFS).
         Prefill advances the clock by the request's simulated weight-stream
-        time. Returns the number admitted."""
+        time, minus whatever fits into banked decode-stall credit (the
+        admission rode an earlier round's I/O bubbles — see module doc).
+        Returns the number admitted."""
         admitted = 0
         for slot in self.free_slots():
             if not self.waiting or self.waiting[0].arrival_s > self.now_s:
                 break
             req = self.waiting.popleft()
             last, prefill_sim = self.engine.admit_slot(slot, req.prompt)
-            self.now_s += float(prefill_sim)
+            prefill_sim = float(prefill_sim)
+            if self.admit_in_bubbles and self.stall_credit_s > 0.0:
+                hidden = min(self.stall_credit_s, prefill_sim)
+                self.stall_credit_s -= hidden
+                prefill_sim -= hidden
+                self.admitted_during_stall += 1
+                self.stall_hidden_s += hidden
+                self.engine.note_stall_admission(hidden)
+            self.now_s += prefill_sim
             req.state = RequestState.RUNNING
             req.slot = slot
             req.admitted_s = self.now_s
@@ -133,7 +175,15 @@ class Scheduler:
         if self.num_running() == 0:
             return bool(self.waiting)
 
+        n_stats0 = len(self.engine.stats)
         toks, step_lat = self.engine.decode_slots(self._slot_tokens, self.round_tokens)
+        if self.admit_in_bubbles:
+            # bank this round's measured idle windows (compute stalls +
+            # fetch-engine bubbles) as admission credit
+            self.stall_credit_s += sum(
+                s.stall_s + s.bubble_s
+                for s in self.engine.stats[n_stats0:] if s.kind == "decode"
+            )
         toks_np = np.asarray(toks)  # (slots, round_tokens)
         active = [r for r in self.running if r is not None]
         for i, sim in enumerate(step_lat):
@@ -176,4 +226,6 @@ class Scheduler:
             latency_p50_s=float(np.percentile(lats, 50)),
             latency_p95_s=float(np.percentile(lats, 95)),
             ttft_p50_s=float(np.percentile(ttfts, 50)),
+            admitted_during_stall=self.admitted_during_stall,
+            stall_hidden_s=self.stall_hidden_s,
         )

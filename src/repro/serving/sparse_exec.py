@@ -43,11 +43,21 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.baselines import topk_mask
 from ..core.chunking import BatchedChunkSelector, ChunkConfig, ChunkSelector
+from ..kernels.chunk_gather_dma import masks_to_block_tables
 from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profile_table
 from ..core.offload import decode_site_shapes, normalize_site_sparsity
 from ..core.reorder import Reordering
 
 DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 (paper: fp16)
+
+# Kernel chunk-table geometry for the DMA gather kernels
+# (kernels/chunk_gather_dma.py): refresh steps convert each site's selected
+# mask into a block-aligned padded (starts, sizes) table INSIDE jit
+# (masks_to_block_tables — one vmapped call per layer over all sites, no
+# per-site host re-splitting), so the plan carry always holds tables the
+# kernels can consume directly.
+KERNEL_BLOCK_ROWS = 8
+KERNEL_MAX_CHUNK_ROWS = 512
 
 # Dynamic residency-cache policy constants (paper §5, applied temporally):
 # scores decay by RESIDENCY_DECAY per refresh step (recency) and grow by the
@@ -231,6 +241,9 @@ class SparseExecution:
         self._budgets = jnp.asarray(
             [int(self.sites[k].budget()) for k in self.site_order], jnp.int32
         )
+        # padded kernel chunk-table length: worst case every block its own
+        # chunk (masks_to_block_tables pads every site's table to this)
+        self.kernel_k = -(-self.batched.n_max // KERNEL_BLOCK_ROWS)
 
     def mask(self, kind: str, acts: jnp.ndarray):
         """acts (..., N) → (mask (N,) float or None, est latency seconds)."""
@@ -326,6 +339,22 @@ class SparseExecution:
             else:
                 masks, _ = self.batched.select(vs, self._budgets, res_pad)
 
+            # the kernel gather plan: every site's COMPUTE mask (selection /
+            # storage row order; legacy static-resident rows participate in
+            # compute, so they join the gather) → block-aligned chunk tables
+            # in ONE vmapped dispatch — no per-site host re-splitting
+            tbl_masks = masks
+            for i, kind in enumerate(order):
+                pinned = self.pinned_sel.get(kind)
+                if pinned is not None and not cache:
+                    site_n = self.sites[kind].n
+                    tbl_masks = tbl_masks.at[i, :site_n].set(
+                        tbl_masks[i, :site_n] | pinned
+                    )
+            kstarts, ksizes = masks_to_block_tables(
+                tbl_masks, KERNEL_BLOCK_ROWS, KERNEL_MAX_CHUNK_ROWS
+            )
+
             lat = jnp.float32(0.0)
             outs = {}
             for i, kind in enumerate(order):
@@ -356,7 +385,8 @@ class SparseExecution:
                 if cached_orig is not None and not cache:
                     m = m | cached_orig  # cached neurons always compute, free
                 entry = {"mask": m.astype(jnp.float32), "hit": hit,
-                         "miss": miss, "bytes": nbytes}
+                         "miss": miss, "bytes": nbytes,
+                         "kstarts": kstarts[i], "ksizes": ksizes[i]}
                 if cache:
                     entry["score"] = score
                 outs[kind] = entry
@@ -367,7 +397,9 @@ class SparseExecution:
             outs = {}
             for kind in order:
                 entry = {"mask": plan[kind]["mask"], "hit": zero,
-                         "miss": zero, "bytes": zero}
+                         "miss": zero, "bytes": zero,
+                         "kstarts": plan[kind]["kstarts"],
+                         "ksizes": plan[kind]["ksizes"]}
                 if cache:
                     entry["score"] = plan[kind]["score"]
                 outs[kind] = entry
@@ -381,6 +413,8 @@ class SparseExecution:
             entry["hit"] = plan[kind]["hit"] + results[kind]["hit"]
             entry["miss"] = plan[kind]["miss"] + results[kind]["miss"]
             entry["bytes"] = plan[kind]["bytes"] + results[kind]["bytes"]
+            entry["kstarts"] = results[kind]["kstarts"]
+            entry["ksizes"] = results[kind]["ksizes"]
             if cache:
                 entry["score"] = results[kind]["score"]
             new_plan[kind] = entry
@@ -438,6 +472,34 @@ class SparseExecution:
         if cached is not None:
             m = m | cached  # cached neurons always compute, at zero I/O
         return m.astype(jnp.float32), lat
+
+    # -- kernel chunk-table plumbing -----------------------------------------
+    def kernel_tables(self, plan, kind: str):
+        """One site's kernel chunk tables from a decode-plan pytree:
+        (starts, sizes), each (n_layers, kernel_k) — or (kernel_k,) for a
+        single layer's slice — in selection (storage) row order, block
+        aligned, directly consumable by the DMA gather kernels."""
+        if kind not in plan:
+            raise KeyError(f"no plan entry for site {kind!r}")
+        return plan[kind]["kstarts"], plan[kind]["ksizes"]
+
+    def mlp_kernel_plan(self, plan, layer: Optional[int] = None):
+        """The fused multi-site MLP kernel's (2, kernel_k) plan lanes —
+        lane 0 = hidden_mlp (gate/up), lane 1 = ffn (down) — stacked
+        straight from the batched refresh's tables, no re-splitting.
+        ``layer`` selects one layer of an (L, K) plan; None expects a
+        single-layer slice."""
+        for kind in ("hidden_mlp", "ffn"):
+            if kind not in plan:
+                raise KeyError(
+                    f"plan has no {kind!r} site (MoE FFNs have no dense MLP "
+                    "sites — the fused MLP kernel does not apply)"
+                )
+        hs, hz = self.kernel_tables(plan, "hidden_mlp")
+        fs, fz = self.kernel_tables(plan, "ffn")
+        if layer is not None:
+            hs, hz, fs, fz = hs[layer], hz[layer], fs[layer], fz[layer]
+        return jnp.stack([hs, fs]), jnp.stack([hz, fz])
 
     # -- residency-tier capacity ---------------------------------------------
     @property
@@ -505,6 +567,11 @@ class SparseExecution:
                 "hit": jnp.zeros((n_layers,), jnp.float32),
                 "miss": jnp.zeros((n_layers,), jnp.float32),
                 "bytes": jnp.zeros((n_layers,), jnp.float32),
+                # block-aligned kernel chunk tables (selection row order),
+                # refreshed alongside the masks — the DMA gather kernels'
+                # direct input (all-zero until the first refresh = no chunks)
+                "kstarts": jnp.zeros((n_layers, self.kernel_k), jnp.int32),
+                "ksizes": jnp.zeros((n_layers, self.kernel_k), jnp.int32),
             }
             if self.cache_enabled:
                 score0 = jnp.zeros((n_layers, site.n), jnp.float32)

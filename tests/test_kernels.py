@@ -77,6 +77,35 @@ def test_full_plan_equals_dense(rng):
     assert _rel_err(y, dense) < 1e-5
 
 
+def test_align_chunk_table_merge_then_resplit():
+    """Regression: two unaligned runs whose rounded-out blocks become
+    adjacent must MERGE, and the merged run must re-split at
+    max_chunk_rows — the boundary lands mid-way through what was the
+    second input run."""
+    starts = np.asarray([2, 9], np.int64)
+    sizes = np.asarray([5, 13], np.int64)  # rounds to [0,8) and [8,24)
+    s, z = align_chunk_table(starts, sizes, block_rows=8, n=64,
+                             max_chunk_rows=16)
+    assert s.tolist() == [0, 16]
+    assert z.tolist() == [16, 8]
+    # the split is coverage-preserving
+    covered = np.asarray(chunk_table_to_mask(s, z, 64))
+    assert covered[:24].all() and not covered[24:].any()
+
+
+def test_align_chunk_table_dtype_validation():
+    """float tables used to be accepted silently (and floored in the index
+    arithmetic); exact float values cast, fractional ones raise."""
+    s, z = align_chunk_table(np.asarray([8.0]), np.asarray([8.0]),
+                             block_rows=8, n=32)
+    assert s.dtype == np.int32 and z.dtype == np.int32
+    assert s.tolist() == [8] and z.tolist() == [8]
+    with pytest.raises(TypeError):
+        align_chunk_table(np.asarray([8.5]), np.asarray([8.0]), 8, 32)
+    with pytest.raises(ValueError):
+        align_chunk_table(np.asarray([8]), np.asarray([8, 16]), 8, 32)
+
+
 @given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.95))
 @settings(max_examples=25, deadline=None)
 def test_align_chunk_table_properties(seed, density):

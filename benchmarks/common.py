@@ -88,6 +88,49 @@ def time_call(fn: Callable, *args, repeats: int = 5) -> float:
     return float(np.median(ts))
 
 
+def decode_backend_pair(model, params, batch, *, max_seq: int, batch_size: int,
+                        n_tokens: int, seed: int, repeats: int = 1,
+                        warm: bool = True):
+    """Run the SAME greedy decode through both execution backends
+    (kernels/backend.py) and assert byte-identical tokens — the PR-5
+    invariant both benchmark artifacts pin. Returns
+    {backend: (engine, tokens, median_wall_s)}.
+
+    Shared by ``serve_throughput.bench_backend_parity`` (BENCH_serve rows)
+    and ``kernel_gather.bench_decode_backends`` (BENCH_kernel rows) so the
+    two smokes cannot drift apart on what "parity" means."""
+    import jax.numpy as jnp
+
+    from repro.serving import ServeEngine
+
+    results = {}
+    outs = {}
+    for backend in ("reference", "kernel"):
+        eng = ServeEngine(model, params, max_seq=max_seq,
+                          batch_size=batch_size, device="nano", sparsity=0.4,
+                          method="chunk", seed=seed, backend=backend)
+        eng.simulator.noise = 0.0
+        tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
+        if warm:
+            eng.decode(tok0, n_tokens)  # compile + warm
+            eng.prefill(batch)
+        out = None
+        walls = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            o = eng.decode(tok0, n_tokens)
+            jax.block_until_ready(o)
+            walls.append(time.perf_counter() - t0)
+            out = o if out is None else out
+        outs[backend] = out
+        results[backend] = (eng, out, float(np.median(walls)))
+    assert bool(jax.numpy.all(outs["reference"] == outs["kernel"])), (
+        "backend='kernel' decode must produce byte-identical tokens to "
+        "backend='reference' (interpret mode)"
+    )
+    return results
+
+
 class Rows:
     """Collects (name, us_per_call, derived) CSV rows."""
 

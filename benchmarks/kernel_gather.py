@@ -20,6 +20,12 @@ that matter for the perf trajectory are structural and deterministic:
     the ``chunk_gather_mlp_ref`` oracle on the plan actually produced by
     ``SparseExecution``'s batched refresh (tables routed straight from the
     plan carry, no host re-splitting).
+  * ``kernel/tile_d*`` — the single-site DMA matmul swept over the output
+    tile width (grid-step count vs VMEM slot budget; the ROADMAP's first
+    real-TPU perf knob), parity asserted at every width.
+  * ``kernel/decode_backend_*`` — end-to-end serve-engine decode through
+    ``backend='kernel'`` vs ``backend='reference'``: byte-identical tokens
+    asserted, wall tokens/s recorded for both.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.kernel_gather
 CI artifact: PYTHONPATH=src python -m benchmarks.kernel_gather \
@@ -48,7 +54,7 @@ from repro.kernels import (
 from repro.serving import SparseExecution
 from repro.serving.sparse_exec import KERNEL_BLOCK_ROWS, KERNEL_MAX_CHUNK_ROWS
 
-from .common import Rows, llm_importance
+from .common import Rows, decode_backend_pair, llm_importance
 
 ARCH = "internvl2-76b"
 H_BYTES = 4  # the per-site path's SwiGLU intermediate round-trips as f32
@@ -167,6 +173,78 @@ def run(rows: Rows, smoke: bool = False) -> None:
             assert err < 1e-5
             rows.add(f"kernel/matmul_dma_depth{depth}", 0.0, f"rel_err={err:.2e}")
 
+    bench_tile_sweep(rows, sparse, kstarts, ksizes, rng, batch, smoke=smoke)
+    bench_decode_backends(rows, smoke=smoke)
+
+
+def bench_tile_sweep(rows: Rows, sparse, kstarts, ksizes, rng, batch: int,
+                     smoke: bool = False) -> None:
+    """``tile_d`` sweep of the single-site DMA matmul on the attn_out lane.
+
+    tile_d is the kernel's output-column block: each grid step DMA-gathers
+    one (block_rows × tile_d) weight tile, so a wider tile means fewer
+    grid steps and larger contiguous transfers but a bigger VMEM slot
+    budget ((prefetch_depth + 1) × block_rows × tile_d × dtype bytes per
+    streamed operand). On real TPU this is the first knob of the ROADMAP's
+    hardware perf pass; recorded here (interpret-mode wall, compiled &
+    warmed) so the trajectory has a baseline shape, with parity asserted at
+    every tile width (the schedule only re-tiles the same arithmetic)."""
+    order = list(sparse.site_order)
+    io_ = order.index("attn_out")
+    n_o = sparse.sites["attn_out"].n
+    d = sparse.cfg.d_model
+    w_o = jnp.asarray(rng.normal(0, 0.05, (n_o, d)), jnp.float32)
+    x_o = jnp.asarray(rng.normal(0, 1, (batch, n_o)), jnp.float32)
+    y0 = chunk_gather_matmul_ref(w_o, x_o, kstarts[io_], ksizes[io_])
+    scale = float(jnp.max(jnp.abs(y0))) + 1.0
+    tiles = [t for t in (32, 64, 128) if d % t == 0]
+    reps = 1 if smoke else 5
+    for tile in tiles:
+        y = sparse_matmul_dma(w_o, x_o, kstarts[io_], ksizes[io_],
+                              tile_d=tile, max_chunk_rows=KERNEL_MAX_CHUNK_ROWS)
+        y.block_until_ready()  # compile + warm
+        err = float(jnp.max(jnp.abs(y - y0))) / scale
+        assert err < 1e-5, f"tile_d={tile} diverged from oracle: {err}"
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sparse_matmul_dma(w_o, x_o, kstarts[io_], ksizes[io_],
+                              tile_d=tile,
+                              max_chunk_rows=KERNEL_MAX_CHUNK_ROWS,
+                              ).block_until_ready()
+            walls.append(time.perf_counter() - t0)
+        rows.add(f"kernel/tile_d{tile}", float(np.median(walls)) * 1e6,
+                 f"rel_err={err:.2e} grid_steps={d // tile} interpret=cpu")
+
+
+def bench_decode_backends(rows: Rows, smoke: bool = False) -> None:
+    """End-to-end decode through the execution backends: the serve engine's
+    fused scan with ``backend='kernel'`` (the DMA kernels consuming the
+    decode plan inside the scan) vs ``backend='reference'`` (the pure-jnp
+    schedule twin), byte-identical tokens asserted
+    (``common.decode_backend_pair`` — the same helper the serve smoke
+    pins), wall tokens/s for both recorded into BENCH_kernel.json.
+    Interpret-mode kernels on CPU — the kernel row tracks emulation
+    overhead, the parity bit is the invariant."""
+    import jax
+
+    from repro.configs.base import InputShape
+    from repro.models import build_model
+    from repro.models.inputs import make_dummy_batch
+
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_dummy_batch(cfg, InputShape("kb", 16, 2, "train"))
+    n_tokens = 4 if smoke else 16
+    results = decode_backend_pair(model, params, batch, max_seq=64,
+                                  batch_size=2, n_tokens=n_tokens, seed=7)
+    for backend, (_eng, _out, wall) in results.items():
+        rows.add(f"kernel/decode_backend_{backend}",
+                 wall / n_tokens * 1e6,
+                 f"tokens_per_s={n_tokens * 2 / wall:.1f} "
+                 "identical_tokens=True")
+
 
 def _emit_json(rows: Rows, path: str, smoke: bool) -> None:
     payload = {
@@ -183,13 +261,18 @@ def _emit_json(rows: Rows, path: str, smoke: bool) -> None:
         fh.write("\n")
 
 
-if __name__ == "__main__":
+def build_parser() -> argparse.ArgumentParser:
+    """Exposed for tests/test_docs.py's docs-vs-CLI drift check."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI mode: one depth, still asserts parity")
     ap.add_argument("--out", default=None,
                     help="also write rows as JSON (e.g. BENCH_kernel.json)")
-    args = ap.parse_args()
+    return ap
+
+
+if __name__ == "__main__":
+    args = build_parser().parse_args()
     rows = Rows()
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

@@ -3,11 +3,16 @@ overlapped I/O–compute pipeline vs the serial charge, the chunk-plan reuse
 knob, the residency-cache budget sweep, and continuous-batching request
 latency per policy.
 
-Six sections (reduced InternVL2 under the flash simulator):
+Seven sections (reduced InternVL2 under the flash simulator):
 
   * serve/fused_vs_loop — equal batch, equal policy: wall tokens/s of the
     one-jit ``lax.scan`` decode vs the seed's one-jit-call-per-token loop,
     asserting byte-identical greedy tokens (the acceptance criterion);
+  * serve/backend_* — the kernel-backed decode execution path
+    (``--backend kernel``: the Pallas DMA gather kernels consume the decode
+    plan's chunk tables inside the scan) vs the reference schedule twin,
+    asserting byte-identical greedy tokens across backends and emitting
+    both wall tokens/s (interpret-mode kernels on CPU CI);
   * serve/overlap_<device> — the two-stage prefetch pipeline on BOTH the
     nano and agx profiles, swept over prefetch depth: asserts overlapped
     per-step decode latency strictly below the serial charge for
@@ -64,7 +69,7 @@ from repro.serving import (
     SparseExecution,
 )
 
-from .common import Rows
+from .common import Rows, decode_backend_pair
 
 ARCH = "internvl2-76b"
 BATCH = 2
@@ -86,11 +91,12 @@ def _setup():
 
 
 def _engine(model, params, method="chunk", refresh=1, seed=5, cache_mb=0.0,
-            device="nano", overlap=True, prefetch_depth=1):
+            device="nano", overlap=True, prefetch_depth=1, backend="reference"):
     return ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
                        device=device, sparsity=0.4, method=method, seed=seed,
                        plan_refresh_interval=refresh, cache_mb=cache_mb,
-                       overlap=overlap, prefetch_depth=prefetch_depth)
+                       overlap=overlap, prefetch_depth=prefetch_depth,
+                       backend=backend)
 
 
 def _timed_decode(eng, decode_fn, tok0, n, repeats=3):
@@ -139,6 +145,25 @@ def bench_fused_vs_loop(rows: Rows, model, params, batch,
              f"tokens_per_s={tps_l:.1f}")
     rows.add("serve/fused_vs_loop", 0.0,
              f"speedup={tps_f / tps_l:.2f}x identical_tokens={identical}")
+
+
+def bench_backend_parity(rows: Rows, model, params, batch,
+                         decode_tokens=DECODE_TOKENS, repeats=1) -> None:
+    """The kernel-backed decode execution path vs the reference backend:
+    equal settings, byte-identical greedy tokens (the PR-5 acceptance
+    invariant — the backend switch changes how the masked arithmetic is
+    realized, never which neurons participate), wall tokens/s for both.
+    The kernel backend runs the Pallas DMA gather kernels in interpret
+    mode here (CPU CI), so its wall number measures the schedule's
+    emulation, not MXU throughput — the row that matters for the perf
+    trajectory is the parity bit plus the reference-backend tokens/s."""
+    results = decode_backend_pair(model, params, batch, max_seq=MAX_SEQ,
+                                  batch_size=BATCH, n_tokens=decode_tokens,
+                                  seed=5, repeats=repeats)
+    for backend, (_eng, _out, wall) in results.items():
+        tps = decode_tokens * BATCH / wall
+        rows.add(f"serve/backend_{backend}", wall / decode_tokens * 1e6,
+                 f"tokens_per_s={tps:.1f} identical_tokens=True")
 
 
 def bench_overlap_pipeline(rows: Rows, model, params, batch,
@@ -412,6 +437,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
         # tests instead
         bench_fused_vs_loop(rows, model, params, batch, decode_tokens=8,
                             repeats=1, assert_speedup=False)
+        bench_backend_parity(rows, model, params, batch, decode_tokens=8)
         bench_overlap_pipeline(rows, model, params, batch, devices=("nano",),
                                decode_tokens=8, depth_engines=False)
         bench_plan_reuse(rows, model, params, batch, intervals=(1, 4),
@@ -422,6 +448,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
                                   smoke=True)
         return
     bench_fused_vs_loop(rows, model, params, batch)
+    bench_backend_parity(rows, model, params, batch, repeats=3)
     bench_overlap_pipeline(rows, model, params, batch)
     bench_plan_reuse(rows, model, params, batch)
     bench_cache_sweep(rows, model, params, batch, cfg)
@@ -444,14 +471,19 @@ def _emit_json(rows: Rows, path: str, smoke: bool) -> None:
         f.write("\n")
 
 
-if __name__ == "__main__":
+def build_parser() -> argparse.ArgumentParser:
+    """Exposed for tests/test_docs.py's docs-vs-CLI drift check."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI: every section, a minute or two on CPU")
     ap.add_argument("--out", default=None,
                     help="also write the rows as JSON (the CI perf artifact, "
                          "e.g. BENCH_serve.json)")
-    args = ap.parse_args()
+    return ap
+
+
+if __name__ == "__main__":
+    args = build_parser().parse_args()
     rows = Rows()
     print("name,us_per_call,derived")
     t0 = time.perf_counter()

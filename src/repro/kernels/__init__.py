@@ -1,5 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot-spot: chunk-gathered
 sparse matmuls driven by the utility-guided selection's chunk tables."""
+from .backend import (
+    BACKENDS,
+    ExecutionBackend,
+    blocked_masked_matmul,
+    pick_tile,
+    validate_backend,
+)
 from .chunk_gather_dma import (
     chunk_gather_matmul_dma,
     chunk_gather_mlp_dma,

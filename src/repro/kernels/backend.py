@@ -1,0 +1,213 @@
+"""Decode execution backends: the selection → plan → kernel chain's last hop.
+
+Up to PR 4 the DMA gather kernels (chunk_gather_dma.py) were dispatched
+standalone and parity-tested while the decode hot path computed through the
+dense-weights-masked reference — the kernels never executed a served token.
+``ExecutionBackend`` closes that gap: the planned decode path
+(models/transformer.py ``block_decode`` with a chunk-plan carry) routes its
+sparse projections through one of two implementations selected by
+``ServeEngine(backend=...)`` / ``launch.serve --backend``:
+
+  * ``reference`` (default) — pure-jnp masked matmuls, restructured as the
+    kernel's **schedule twin**: f32 accumulation over ``block_rows``-sized
+    row blocks in ascending order, the exact arithmetic the DMA kernel's
+    slot-rotation loop performs (interpret mode executes the same jnp ops
+    per block). Blocks outside the chunk tables contribute exact zeros
+    (the input is pre-masked), so skipping them — as the kernel does — or
+    adding them changes nothing. Result: the two backends are **bitwise
+    identical**, and byte-identical decode tokens become the system's
+    strongest correctness invariant (tests/test_backend.py pins it).
+  * ``kernel`` — the PR-4 Pallas kernels consume the decode plan's
+    ``kstarts``/``ksizes``/``mlp_kernel_plan`` lanes directly:
+    ``chunk_gather_mlp_dma`` replaces the masked dense SwiGLU (ONE dispatch
+    for gate/up/down, SwiGLU intermediate resident in VMEM) and
+    ``chunk_gather_matmul_dma`` serves the single-site projections
+    (attn_out's ``wo``; both matrices of the non-gated gelu MLP). Interpret
+    mode in CI / on CPU, compiled on real TPU (``interpret=None`` auto).
+
+Both implementations compute the SAME masked-matmul semantics of paper
+App. B.2 — the backend only changes how the arithmetic is realized, never
+which neurons participate, so every future perf PR lands behind this
+switch with byte-identity as its acceptance gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .chunk_gather_dma import chunk_gather_matmul_dma, chunk_gather_mlp_dma
+
+BACKENDS = ("reference", "kernel")
+
+
+def validate_backend(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown execution backend {name!r}; expected one of {BACKENDS}"
+        )
+    return name
+
+
+def pick_tile(dim: int, cap: int = 128) -> int:
+    """Largest power-of-two tile ≤ ``cap`` dividing ``dim`` — the kernels
+    require output dims to split evenly into tiles (reduced-config d_ff
+    values like 704 need 64-wide tiles; full-size dims take the 128 MXU
+    lane width)."""
+    t = cap
+    while t >= 8:
+        if dim % t == 0:
+            return t
+        t //= 2
+    raise ValueError(
+        f"dim {dim} has no power-of-two tile divisor >= 8 — the kernel "
+        "backend needs dims divisible by 8"
+    )
+
+
+def blocked_masked_matmul(
+    xm: jnp.ndarray,  # (B, N) pre-masked input, any float dtype
+    w: jnp.ndarray,  # (N, D)
+    block_rows: int = 8,
+) -> jnp.ndarray:
+    """The DMA gather kernel's schedule twin: y = Σ_blocks xm_blk @ w_blk in
+    ascending ``block_rows`` blocks, f32 accumulation — per output element
+    the identical multiply/add sequence the kernel's fori_loop performs, so
+    the result is bitwise equal to interpret-mode ``chunk_gather_matmul_dma``
+    on any chunk table covering the mask (uncovered blocks see zeroed xm
+    rows and contribute exact +0.0).
+
+    The per-block partial products are independent, so they run as ONE
+    batched einsum (each (B, block_rows) · (block_rows, D) contraction is
+    elementwise identical to the kernel's per-step dot); only the f32
+    additions — the order-sensitive part — stay sequential. That keeps the
+    decode hot path one fused matmul + nb cheap adds instead of nb
+    serialized dots (bitwise equality across both forms and the kernel is
+    pinned by tests/test_backend.py)."""
+    b, n = xm.shape
+    if n % block_rows:
+        raise ValueError(f"N={n} must be a multiple of block_rows={block_rows}")
+    nb = n // block_rows
+    xb = xm.astype(jnp.float32).reshape(b, nb, block_rows)
+    wb = w.astype(jnp.float32).reshape(nb, block_rows, w.shape[1])
+    parts = jnp.einsum("bkr,krd->kbd", xb, wb,
+                       preferred_element_type=jnp.float32)
+
+    def body(k, acc):
+        return acc + parts[k]
+
+    return jax.lax.fori_loop(
+        0, nb, body, jnp.zeros((b, w.shape[1]), jnp.float32)
+    )
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionBackend:
+    """Dispatch object carried by ``SparseExecution`` into the model blocks.
+
+    ``interpret``: None = auto (interpret off-TPU, compiled on TPU) —
+    resolved at construction so the jit caches stay stable.
+    ``prefetch_depth``: the DMA kernels' VMEM slot count − 1; numerics are
+    depth-invariant (the schedule only re-times the same fetches), so
+    tokens stay byte-identical at every depth.
+    """
+
+    name: str = "reference"
+    prefetch_depth: int = 1
+    interpret: bool = True
+    block_rows: int = 8
+    max_chunk_rows: int = 512
+    tile_cap: int = 128
+
+    @staticmethod
+    def create(
+        name: str = "reference",
+        prefetch_depth: int = 1,
+        interpret: Optional[bool] = None,
+        block_rows: int = 8,
+        max_chunk_rows: int = 512,
+        tile_cap: int = 128,
+    ) -> "ExecutionBackend":
+        validate_backend(name)
+        if prefetch_depth < 0:
+            raise ValueError(f"prefetch_depth must be >= 0, got {prefetch_depth}")
+        return ExecutionBackend(
+            name=name,
+            prefetch_depth=prefetch_depth,
+            interpret=not _on_tpu() if interpret is None else interpret,
+            block_rows=block_rows,
+            max_chunk_rows=max_chunk_rows,
+            tile_cap=tile_cap,
+        )
+
+    @property
+    def is_kernel(self) -> bool:
+        return self.name == "kernel"
+
+    # -- single-site projection (attn_out wo; gelu MLP fc/proj) -------------
+    def project(
+        self,
+        w: jnp.ndarray,  # (N, D)
+        x: jnp.ndarray,  # (B, N)
+        mask: jnp.ndarray,  # (N,) exact selected-row mask (float or bool)
+        starts: jnp.ndarray,  # (K,) block-aligned chunk table (kernel lane)
+        sizes: jnp.ndarray,  # (K,)
+    ) -> jnp.ndarray:
+        """y (B, D) f32 = (x · mask) @ w. The input is pre-masked by the
+        EXACT mask for both backends, so the kernel's outward block rounding
+        gathers only zeroed extra rows — masked-matmul semantics hold and
+        the two implementations agree bitwise."""
+        xm = (x * mask.astype(x.dtype)).astype(jnp.float32)
+        if self.is_kernel:
+            return chunk_gather_matmul_dma(
+                w, xm, starts, sizes,
+                block_rows=self.block_rows,
+                tile_d=pick_tile(w.shape[1], self.tile_cap),
+                max_chunk_rows=self.max_chunk_rows,
+                prefetch_depth=self.prefetch_depth,
+                interpret=self.interpret,
+            )
+        return blocked_masked_matmul(xm, w, self.block_rows)
+
+    # -- fused multi-site SwiGLU MLP -----------------------------------------
+    def swiglu_mlp(
+        self,
+        w_gate: jnp.ndarray,  # (N, F)
+        w_up: jnp.ndarray,  # (N, F)
+        w_down: jnp.ndarray,  # (F, D)
+        x: jnp.ndarray,  # (B, N)
+        hidden_mask: jnp.ndarray,  # (N,) exact hidden_mlp-site mask
+        ffn_mask: jnp.ndarray,  # (F,) exact ffn-site mask
+        starts: jnp.ndarray,  # (2, K) plan lanes: hidden_mlp, ffn
+        sizes: jnp.ndarray,  # (2, K)
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (y (B, D) f32, h (B, F) f32) where h is the UNMASKED
+        SwiGLU intermediate swish(xm @ w_gate) * (xm @ w_up) — the decode
+        path records |h| as the next refresh's ffn-lane importance, so it
+        must be the pre-mask value on both backends."""
+        xm = (x * hidden_mask.astype(x.dtype)).astype(jnp.float32)
+        fm = ffn_mask.astype(jnp.float32)
+        if self.is_kernel:
+            return chunk_gather_mlp_dma(
+                w_gate, w_up, w_down, xm, starts, sizes, fm,
+                block_rows=self.block_rows,
+                tile_f=pick_tile(w_gate.shape[1], self.tile_cap),
+                tile_d=pick_tile(w_down.shape[1], self.tile_cap),
+                max_chunk_rows=self.max_chunk_rows,
+                prefetch_depth=self.prefetch_depth,
+                interpret=self.interpret,
+                return_h=True,
+            )
+        g = blocked_masked_matmul(xm, w_gate, self.block_rows)
+        u = blocked_masked_matmul(xm, w_up, self.block_rows)
+        # the kernel's literal sigmoid expression (jax.nn.sigmoid lowers to
+        # a different, numerically-stable formulation — bitwise matters here)
+        h = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+        y = blocked_masked_matmul(h * fm[None, :], w_down, self.block_rows)
+        return y, h

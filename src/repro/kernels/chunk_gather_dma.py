@@ -288,8 +288,9 @@ def _mlp_dma_kernel(
     wg_hbm,  # (N, F) ANY
     wu_hbm,  # (N, F) ANY
     wd_hbm,  # (F, D) ANY
+    fmask_ref,  # (1, F) VMEM f32 — exact ffn row mask (all-ones = table only)
     out_ref,  # (B, D) VMEM f32
-    h_ref,  # scratch (B, F) VMEM f32 — the SwiGLU intermediate, never HBM
+    h_ref,  # (B, F) VMEM f32 output — the UNMASKED SwiGLU intermediate
     gslots,  # (n_slots, block_rows, tile_f)
     uslots,  # (n_slots, block_rows, tile_f)
     dslots,  # (n_slots, block_rows, tile_d)
@@ -395,7 +396,12 @@ def _mlp_dma_kernel(
                     dslots.at[slot],
                     sems_d.at[slot],
                 ).wait()
+                # the exact ffn mask applies at the gather, NOT to the h
+                # output: block-rounding may pull in rows outside the
+                # selected mask, and those must contribute zero for the
+                # kernel to equal the masked-matmul reference exactly
                 hb = pl.load(h_ref, (slice(None), pl.ds(off, block_rows)))
+                hb = hb * fmask_ref[0, pl.ds(off, block_rows)]
                 cur = pl.load(out_ref, (slice(None), pl.ds(dj * tile_d, tile_d)))
                 pl.store(
                     out_ref,
@@ -419,7 +425,7 @@ def _mlp_dma_kernel(
     jax.jit,
     static_argnames=(
         "block_rows", "tile_f", "tile_d", "max_chunk_rows", "prefetch_depth",
-        "interpret",
+        "interpret", "return_h",
     ),
 )
 def chunk_gather_mlp_dma(
@@ -429,6 +435,7 @@ def chunk_gather_mlp_dma(
     x: jnp.ndarray,  # (B, N)
     starts: jnp.ndarray,  # (2, K): lane 0 = hidden_mlp plan, lane 1 = ffn plan
     sizes: jnp.ndarray,  # (2, K)
+    ffn_mask: jnp.ndarray | None = None,  # (F,) exact down-input row mask
     *,
     block_rows: int = 8,
     tile_f: int = 128,
@@ -436,12 +443,29 @@ def chunk_gather_mlp_dma(
     max_chunk_rows: int = 512,
     prefetch_depth: int = 1,
     interpret: bool = False,
+    return_h: bool = False,
 ) -> jnp.ndarray:
     """Fused sparse MLP: y (B, D) f32 = SwiGLU-masked down projection where
     gate/up gather off ``starts[0]`` (the hidden_mlp lane of the batched
     plan) and down gathers off ``starts[1]`` (the ffn lane) — one
     ``pallas_call`` for what the per-site path dispatches as three. Matches
-    ``chunk_gather_mlp_ref`` exactly."""
+    ``chunk_gather_mlp_ref`` exactly.
+
+    ``ffn_mask`` (optional, (F,)): the exact selected row mask of the down
+    projection's input. The block tables round masks outward to the
+    ``block_rows`` grid; multiplying the gathered h block by the exact mask
+    restores masked-matmul semantics on the over-fetched rows, which is what
+    the decode execution backend needs for byte-identical parity with the
+    reference path. None keeps pure chunk-table semantics (every gathered
+    row contributes), the contract the standalone oracles test.
+
+    ``return_h=True`` additionally returns the **unmasked** SwiGLU
+    intermediate h (B, F) f32 — the decode path records its |·| importance
+    for the next refresh's ffn-lane selection, so it must see h before the
+    mask zeroes the unselected rows. With ``return_h=False`` h stays a VMEM
+    scratch buffer that never round-trips HBM (the fused kernel's whole
+    point); the kernel body is identical either way because outputs and
+    scratch occupy the same positional slot."""
     n, f = w_gate.shape
     fd, d = w_down.shape
     b = x.shape[0]
@@ -459,19 +483,34 @@ def chunk_gather_mlp_dma(
         raise ValueError("alignment violation")
     if max_chunk_rows % block_rows:
         raise ValueError("max_chunk_rows must be a multiple of block_rows")
+    if ffn_mask is None:
+        fmask = jnp.ones((1, f), jnp.float32)
+    else:
+        if ffn_mask.shape != (f,):
+            raise ValueError(f"ffn_mask must be ({f},), got {ffn_mask.shape}")
+        fmask = ffn_mask.astype(jnp.float32)[None, :]
     n_slots = prefetch_depth + 1
+    # h (B, F) occupies the same positional kernel-ref slot either way:
+    # second OUTPUT when the caller wants it, first SCRATCH when not (so a
+    # return_h=False dispatch never writes the intermediate back to HBM)
+    vmem = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)
+    out_specs = (vmem, vmem) if return_h else vmem
+    out_shape = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    if return_h:
+        out_shape = (out_shape, jax.ShapeDtypeStruct((b, f), jnp.float32))
+    h_scratch = [] if return_h else [pltpu.VMEM((b, f), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),  # x
+            vmem,  # x
             pl.BlockSpec(memory_space=_ANY),  # w_gate
             pl.BlockSpec(memory_space=_ANY),  # w_up
             pl.BlockSpec(memory_space=_ANY),  # w_down
+            vmem,  # ffn mask
         ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),
-        scratch_shapes=[
-            pltpu.VMEM((b, f), jnp.float32),  # h — never round-trips HBM
+        out_specs=out_specs,
+        scratch_shapes=h_scratch + [
             pltpu.VMEM((n_slots, block_rows, tile_f), w_gate.dtype),
             pltpu.VMEM((n_slots, block_rows, tile_f), w_up.dtype),
             pltpu.VMEM((n_slots, block_rows, tile_d), w_down.dtype),
@@ -482,7 +521,7 @@ def chunk_gather_mlp_dma(
             pltpu.SemaphoreType.DMA((n_slots,)),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(
             _mlp_dma_kernel,
             block_rows=block_rows,
@@ -494,6 +533,7 @@ def chunk_gather_mlp_dma(
             n_d_tiles=d // tile_d,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
-    )(starts, sizes, x, w_gate, w_up, w_down)
+    )(starts, sizes, x, w_gate, w_up, w_down, fmask)
+    return out

@@ -105,16 +105,20 @@ def sparse_mlp_fused(
     x: jnp.ndarray,
     starts: jnp.ndarray,  # (2, K): hidden_mlp and ffn lanes of a batched plan
     sizes: jnp.ndarray,
+    ffn_mask: Optional[jnp.ndarray] = None,
     *,
     block_rows: int = 8,
     tile_f: int = 128,
     tile_d: int = 128,
     max_chunk_rows: int = 512,
     prefetch_depth: int = 1,
+    return_h: bool = False,
 ) -> jnp.ndarray:
     """The fused multi-site MLP: ONE dispatch gathers gate/up off the
     hidden_mlp plan lane and down off the ffn lane, with the SwiGLU
-    intermediate kept in VMEM (no per-site re-dispatch, no h round-trip)."""
+    intermediate kept in VMEM (no per-site re-dispatch, no h round-trip).
+    ``ffn_mask``/``return_h`` as in ``chunk_gather_mlp_dma`` (the decode
+    execution backend's exact-mask / importance-recording plumbing)."""
     return chunk_gather_mlp_dma(
         w_gate,
         w_up,
@@ -122,12 +126,14 @@ def sparse_mlp_fused(
         x,
         starts,
         sizes,
+        ffn_mask,
         block_rows=block_rows,
         tile_f=tile_f,
         tile_d=tile_d,
         max_chunk_rows=max_chunk_rows,
         prefetch_depth=prefetch_depth,
         interpret=not _on_tpu(),
+        return_h=return_h,
     )
 
 

@@ -21,6 +21,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..configs.base import InputShape
+from ..kernels.backend import BACKENDS
 from ..models import build_model
 from ..models.inputs import make_dummy_batch
 from ..serving import (
@@ -32,11 +33,22 @@ from ..serving import (
 )
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI's argparse parser — exposed (rather than built inline
+    in ``main``) so tests/test_docs.py can check every ``--flag`` the docs
+    mention against the real option table."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="internvl2-76b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--method", choices=SERVE_METHODS, default="chunk")
+    ap.add_argument("--backend", choices=BACKENDS, default="reference",
+                    help="decode execution backend: 'reference' computes "
+                         "the planned sparse projections as the DMA "
+                         "kernels' pure-jnp schedule twin; 'kernel' "
+                         "dispatches the Pallas chunk-gather kernels off "
+                         "the decode plan's chunk tables (interpret mode "
+                         "off-TPU, compiled on TPU). Tokens are "
+                         "byte-identical across backends.")
     ap.add_argument("--sparsity", type=float, default=0.4)
     ap.add_argument("--device", choices=("nano", "agx"), default="nano")
     ap.add_argument("--batch", type=int, default=2)
@@ -73,7 +85,11 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=50.0,
                     help="request arrival rate (requests/sec, sim clock)")
     ap.add_argument("--round-tokens", type=int, default=4)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -85,7 +101,8 @@ def main():
                       method=args.method,
                       plan_refresh_interval=args.plan_refresh_interval,
                       cache_mb=args.cache_mb, overlap=args.overlap,
-                      prefetch_depth=args.prefetch_depth)
+                      prefetch_depth=args.prefetch_depth,
+                      backend=args.backend)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -122,7 +139,8 @@ def main():
           f"stall {s['decode_stall_s']*1e3:.2f} ms  "
           f"overlap_efficiency {s['overlap_efficiency']:.3f}  "
           f"select_overhead {s['select_overhead_s']*1e3:.2f} ms")
-    print(f"[total] method={args.method} sparsity={args.sparsity} "
+    print(f"[total] method={args.method} backend={args.backend} "
+          f"sparsity={args.sparsity} "
           f"refresh_interval={args.plan_refresh_interval} "
           f"cache_mb={eng.cache_mb:g} "
           f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms  "

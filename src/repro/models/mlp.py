@@ -9,10 +9,18 @@ masked form is the mathematical reference the kernels are tested against.
 Masks per the paper's Appendix A convention:
   * ``hidden_mask``: over d_model — shared by gate and up (they share input).
   * ``ffn_mask``: over d_ff — the down projection's own input.
+
+The PLANNED decode path (chunk-plan carry in ``transformer.block_decode``)
+routes through ``swiglu_mlp_planned`` / ``gelu_mlp_planned`` instead: the
+same masked semantics realized by the decode execution backend
+(``kernels/backend.ExecutionBackend``) — either the kernel schedule twin in
+pure jnp (``reference``) or the fused/DMA Pallas gather kernels consuming
+the plan's chunk tables directly (``kernel``); the two are bitwise
+identical by construction.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +57,56 @@ def swiglu_mlp(
     if ffn_mask is not None:
         h = h * ffn_mask.astype(h.dtype)
     return h @ params[f"{p}w_down"]
+
+
+def swiglu_mlp_planned(
+    x: jnp.ndarray,  # (b, s, d) — decode: s == 1
+    params: Dict[str, jnp.ndarray],
+    backend,  # kernels.backend.ExecutionBackend
+    hidden_mask: jnp.ndarray,  # (d,) exact hidden_mlp-site mask
+    ffn_mask: jnp.ndarray,  # (d_ff,) exact ffn-site mask
+    starts: jnp.ndarray,  # (2, K) kernel plan lanes (hidden_mlp, ffn)
+    sizes: jnp.ndarray,  # (2, K)
+    prefix: str = "",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The planned-decode sparse SwiGLU: one execution-backend dispatch for
+    gate/up/down off the decode plan's chunk-table lanes. Returns
+    (y (b, s, d) in x.dtype, h (b·s, d_ff) f32 — the UNMASKED SwiGLU
+    intermediate whose |·| the caller records as the next refresh's
+    ffn-site importance)."""
+    p = prefix
+    b, s, d = x.shape
+    y, h = backend.swiglu_mlp(
+        params[f"{p}w_gate"], params[f"{p}w_up"], params[f"{p}w_down"],
+        x.reshape(b * s, d), hidden_mask, ffn_mask, starts, sizes,
+    )
+    return y.astype(x.dtype).reshape(b, s, -1), h
+
+
+def gelu_mlp_planned(
+    x: jnp.ndarray,  # (b, s, d)
+    params: Dict[str, jnp.ndarray],
+    backend,  # kernels.backend.ExecutionBackend
+    hidden_mask: jnp.ndarray,  # (d,)
+    ffn_mask: jnp.ndarray,  # (d_ff,)
+    hidden_table: Tuple[jnp.ndarray, jnp.ndarray],  # (starts, sizes) (K,)
+    ffn_table: Tuple[jnp.ndarray, jnp.ndarray],
+    prefix: str = "",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Planned-decode sparse non-gated MLP (whisper/starcoder c_fc/c_proj):
+    two single-site backend projections with the gelu in f32 between them
+    (identical on both backends, so parity rests on ``project`` alone).
+    Returns (y (b, s, d) in x.dtype, mid (b·s, d_ff) f32 pre-ffn-mask)."""
+    p = prefix
+    b, s, d = x.shape
+    mid = backend.project(
+        params[f"{p}w_fc"], x.reshape(b * s, d), hidden_mask, *hidden_table
+    ) + params[f"{p}b_fc"].astype(jnp.float32)
+    mid = jax.nn.gelu(mid)
+    y = backend.project(
+        params[f"{p}w_proj"], mid, ffn_mask, *ffn_table
+    ) + params[f"{p}b_proj"].astype(jnp.float32)
+    return y.astype(x.dtype).reshape(b, s, -1), mid
 
 
 def gelu_mlp_param_defs(d_model: int, d_ff: int, prefix: str = "") -> Dict[str, ParamDef]:

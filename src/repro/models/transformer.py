@@ -28,7 +28,14 @@ from .attention import (
     project_kv_for_decode,
 )
 from .common import ParamDef, layer_norm, rms_norm
-from .mlp import gelu_mlp, gelu_mlp_param_defs, mlp_param_defs, swiglu_mlp
+from .mlp import (
+    gelu_mlp,
+    gelu_mlp_param_defs,
+    gelu_mlp_planned,
+    mlp_param_defs,
+    swiglu_mlp,
+    swiglu_mlp_planned,
+)
 from .moe import MoEConfig, moe_ffn, moe_param_defs
 
 
@@ -129,14 +136,48 @@ def block_forward(
     return x, aux, io
 
 
+def _planned_mlp(h, params, cfg: ModelConfig, sparse_ctx, plan):
+    """Planned-decode sparse MLP: masks were refreshed at the top of the
+    block (one batched dispatch), so here we only read them, run the MLP
+    through the decode execution backend off the plan's kernel chunk-table
+    lanes, and record this step's importances for the NEXT refresh. The
+    backend (``reference`` schedule twin vs ``kernel`` DMA gather) only
+    changes how the arithmetic is realized — outputs are bitwise identical.
+
+    Returns (y, io_latency (always 0 — the refresh charged it), new_plan).
+    """
+    backend = sparse_ctx.backend
+    mask_g = plan["hidden_mlp"]["mask"]
+    mask_f = plan["ffn"]["mask"]
+    plan = sparse_ctx.record_importance("hidden_mlp", h, plan)
+    if cfg.mlp == "gelu":
+        y, mid = gelu_mlp_planned(
+            h, params, backend, mask_g, mask_f,
+            sparse_ctx.kernel_tables(plan, "hidden_mlp"),
+            sparse_ctx.kernel_tables(plan, "ffn"),
+        )
+    else:
+        starts, sizes = sparse_ctx.mlp_kernel_plan(plan)
+        y, mid = swiglu_mlp_planned(
+            h, params, backend, mask_g, mask_f, starts, sizes
+        )
+    plan = sparse_ctx.record_importance("ffn", mid, plan)
+    return y, jnp.float32(0.0), plan
+
+
 def _mlp_maybe_sparse(h, params, cfg: ModelConfig, sparse_ctx, plan=None):
     """Gated/plain MLP with the paper's gate(+up-shared) and down masks.
 
     Returns (y, io_latency, new_plan); plan is passed through untouched on
-    the unplanned paths (forward / append / per-token decode)."""
+    the unplanned paths (forward / append / per-token decode). When a
+    decode plan carries the MLP sites, the compute routes through
+    ``_planned_mlp`` (the execution-backend path) instead of the masked
+    dense matmuls below."""
     if sparse_ctx is None:
         y = gelu_mlp(h, params) if cfg.mlp == "gelu" else swiglu_mlp(h, params)
         return y, jnp.float32(0.0), plan
+    if plan is not None and "hidden_mlp" in plan and "ffn" in plan:
+        return _planned_mlp(h, params, cfg, sparse_ctx, plan)
     mask_g, io1, plan = _site_mask(sparse_ctx, "hidden_mlp", h, plan)
     hm = _apply_mask(h, mask_g)
     if cfg.mlp == "gelu":
@@ -250,7 +291,18 @@ def block_decode(
     if sparse_ctx is not None:
         mask_o, lat, plan = _site_mask(sparse_ctx, "attn_out", attn_raw, plan)
         io += lat
-        attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
+        if plan is not None and "attn_out" in plan:
+            # planned path: the single-site o-projection runs through the
+            # execution backend off the plan's chunk table (reference twin
+            # or chunk_gather_matmul_dma — bitwise identical)
+            b, s, _ = attn_raw.shape
+            y_o = sparse_ctx.backend.project(
+                params["wo"], attn_raw.reshape(b * s, -1), mask_o,
+                *sparse_ctx.kernel_tables(plan, "attn_out"),
+            )
+            attn_raw = y_o.astype(attn_raw.dtype).reshape(b, s, -1)
+        else:
+            attn_raw = _apply_mask(attn_raw, mask_o) @ params["wo"]
     x = x + attn_raw
 
     h = apply_norm(x, params, cfg, "ln2")

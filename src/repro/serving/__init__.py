@@ -1,4 +1,4 @@
-from .engine import ServeEngine, StepStats
+from .engine import IO_SUMMARY_KEYS, ServeEngine, StepStats
 from .request import PoissonArrivalDriver, Request, RequestState
 from .scheduler import Scheduler, SchedulerStats
 from .sparse_exec import (

@@ -62,6 +62,7 @@ from ..core.latency_model import MB
 from ..core.offload import ComputeModel, FlashOffloadSimulator
 from ..core.pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from ..models.model import Model
+from ..kernels.backend import validate_backend
 from .sparse_exec import (
     SparseExecution,
     plan_hit_miss,
@@ -97,6 +98,30 @@ class StepStats:
     bubble_s: float = 0.0
 
 
+# the exact key set io_summary() returns — the docstring table and
+# tests/test_serving.py both pin against this, so docs, code and tests
+# cannot drift independently
+IO_SUMMARY_KEYS = (
+    "io_est_s",
+    "io_sim_s",
+    "steps",
+    "hit_rows",
+    "miss_rows",
+    "cache_hit_rate",
+    "io_bytes",
+    "select_overhead_s",
+    "decode_compute_s",
+    "decode_serial_s",
+    "decode_overlap_s",
+    "decode_stall_s",
+    "decode_bubble_s",
+    "overlap_efficiency",
+    "admitted_during_stall",
+    "stall_hidden_s",
+    "bubble_utilization",
+)
+
+
 class ServeEngine:
     # retention bound of the per-layer I/O log behind reprice_timeline
     _LAYER_IO_LOG_MAX_STEPS = 4096
@@ -117,8 +142,19 @@ class ServeEngine:
         overlap: bool = True,
         prefetch_depth: int = 1,
         compute_layer_scale=None,
+        backend: str = "reference",
     ):
-        """``cache_mb``: DRAM budget (MB) of the dynamic chunk residency
+        """``backend``: the decode execution backend ("reference" |
+        "kernel", see kernels/backend.py). "reference" computes the planned
+        decode path's sparse projections as the DMA kernels' pure-jnp
+        schedule twin; "kernel" dispatches the Pallas chunk-gather kernels
+        off the decode plan's ``kstarts``/``ksizes``/``mlp_kernel_plan``
+        lanes (interpret mode off-TPU, compiled on real TPU). Decode tokens
+        are byte-identical across backends — the switch changes how the
+        masked arithmetic is realized, never which neurons participate.
+        Ignored by ``dense_free`` (no sparse execution at all).
+
+        ``cache_mb``: DRAM budget (MB) of the dynamic chunk residency
         cache (paper §5). None → the device profile's ``dram_cache_mb``
         default; 0 disables the tier.
 
@@ -137,8 +173,10 @@ class ServeEngine:
         multipliers for the pipeline's compute lane
         (``ComputeModel.decode_layer_seconds``); None = uniform."""
         validate_method(method, allow_dense_free=True)
+        validate_backend(backend)
         if plan_refresh_interval < 1:
             raise ValueError("plan_refresh_interval must be >= 1")
+        self.backend = backend
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -163,7 +201,8 @@ class ServeEngine:
             if method == "dense_free"
             else SparseExecution(model.cfg, device=device, sparsity=sparsity,
                                  method=method, reorderings=reorderings,
-                                 cache_mb=self.cache_mb)
+                                 cache_mb=self.cache_mb, backend=backend,
+                                 kernel_prefetch_depth=prefetch_depth)
         )
         # per-layer compute lane of the overlap pipeline: selecting methods
         # compute over their kept rows, dense/dense_free over everything
@@ -516,6 +555,32 @@ class ServeEngine:
         self.stall_hidden_s += float(hidden_s)
 
     def io_summary(self) -> Dict[str, float]:
+        """Engine-lifetime I/O / pipeline / cache / admission rollup.
+
+        The returned dict carries EXACTLY the keys below (pinned against
+        ``IO_SUMMARY_KEYS`` by ``tests/test_serving.py`` so the table can't
+        drift from the implementation):
+
+        | field                  | meaning                                          | since |
+        |------------------------|--------------------------------------------------|-------|
+        | ``io_est_s``           | Σ additive-model I/O estimate over all steps     | PR 0  |
+        | ``io_sim_s``           | Σ simulator-measured I/O (lift + jitter applied) | PR 0  |
+        | ``steps``              | number of logged StepStats entries               | PR 0  |
+        | ``hit_rows``           | residency-cache rows served from DRAM (free)     | PR 2  |
+        | ``miss_rows``          | selected rows streamed from flash                | PR 2  |
+        | ``cache_hit_rate``     | hit_rows / (hit_rows + miss_rows), 0 when idle   | PR 2  |
+        | ``io_bytes``           | Σ estimated flash→DRAM transfer volume (nbytes)  | PR 3  |
+        | ``select_overhead_s``  | Σ chunk-selection wall seconds (fig13 quantity)  | PR 3  |
+        | ``decode_compute_s``   | Σ compute-lane seconds over decode steps         | PR 3  |
+        | ``decode_serial_s``    | Σ serial Σio+Σcompute charge (decode steps)      | PR 3  |
+        | ``decode_overlap_s``   | Σ prefetch-pipeline critical-path charge         | PR 3  |
+        | ``decode_stall_s``     | Σ compute-idle seconds (waiting on a fetch)      | PR 3  |
+        | ``decode_bubble_s``    | Σ fetch-engine-idle seconds (no free buffer)     | PR 4  |
+        | ``overlap_efficiency`` | hidden time / hideable time, clipped to [0, 1]   | PR 3  |
+        | ``admitted_during_stall`` | scheduler admissions hidden in idle windows   | PR 4  |
+        | ``stall_hidden_s``     | Σ prefill seconds those admissions hid           | PR 4  |
+        | ``bubble_utilization`` | stall_hidden_s / (stall + bubble), ≤ 1           | PR 4  |
+        """
         tot_est = sum(s.io_est_s for s in self.stats)
         tot_sim = sum(s.io_sim_s for s in self.stats)
         hit = sum(s.hit_rows for s in self.stats)

@@ -43,6 +43,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.baselines import topk_mask
 from ..core.chunking import BatchedChunkSelector, ChunkConfig, ChunkSelector
+from ..kernels.backend import ExecutionBackend, pick_tile
 from ..kernels.chunk_gather_dma import masks_to_block_tables
 from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profile_table
 from ..core.offload import decode_site_shapes, normalize_site_sparsity
@@ -189,8 +190,22 @@ class SparseExecution:
         reorderings: Optional[Dict[str, Reordering]] = None,
         cached: Optional[Dict[str, "jnp.ndarray"]] = None,
         cache_mb: float = 0.0,
+        backend: str | ExecutionBackend = "reference",
+        kernel_prefetch_depth: int = 1,
+        kernel_interpret: Optional[bool] = None,
     ):
-        """``cache_mb``: DRAM byte budget of the dynamic chunk residency
+        """``backend``: the decode EXECUTION backend for the planned decode
+        path (kernels/backend.py) — ``"reference"`` computes the masked
+        projections as the kernels' pure-jnp schedule twin, ``"kernel"``
+        dispatches the PR-4 DMA gather kernels off the plan's chunk tables
+        (``chunk_gather_mlp_dma`` for the SwiGLU MLP,
+        ``chunk_gather_matmul_dma`` for single-site projections). The two
+        are bitwise identical; an ``ExecutionBackend`` instance may be
+        passed directly. ``kernel_prefetch_depth`` is the DMA kernels' VMEM
+        slot count − 1 (numerics are depth-invariant);
+        ``kernel_interpret=None`` auto-selects interpret mode off-TPU.
+
+        ``cache_mb``: DRAM byte budget of the dynamic chunk residency
         cache (paper §5 "Leveraging Additional Memory Budget"). When > 0,
         the decode plan carries a per-(layer, site) residency score vector;
         selection becomes marginal-cost aware (resident rows are free),
@@ -244,6 +259,47 @@ class SparseExecution:
         # padded kernel chunk-table length: worst case every block its own
         # chunk (masks_to_block_tables pads every site's table to this)
         self.kernel_k = -(-self.batched.n_max // KERNEL_BLOCK_ROWS)
+        # the decode execution backend (reference schedule twin vs DMA
+        # kernels) — the planned decode path computes through it
+        self.backend = (
+            backend
+            if isinstance(backend, ExecutionBackend)
+            else ExecutionBackend.create(
+                backend,
+                prefetch_depth=kernel_prefetch_depth,
+                interpret=kernel_interpret,
+                block_rows=KERNEL_BLOCK_ROWS,
+                max_chunk_rows=KERNEL_MAX_CHUNK_ROWS,
+            )
+        )
+        if self.backend.is_kernel:
+            self._validate_kernel_backend(cfg)
+
+    def _validate_kernel_backend(self, cfg: ModelConfig) -> None:
+        """The DMA gather kernels' static preconditions, checked up front so
+        a misconfigured engine fails at construction, not mid-scan."""
+        if self.reorderings:
+            raise ValueError(
+                "backend='kernel' does not support reorderings: the kernels "
+                "gather weight rows by storage offset, so reordered "
+                "selection-order chunk tables would index the wrong rows of "
+                "the original-order weights (pre-reorder the stored weights "
+                "offline, or use backend='reference')"
+            )
+        # only the sites the kernel backend actually dispatches: attn_out's
+        # wo and the MLP matrices. hidden_attn's q/k/v keep the masked-dense
+        # form (see docs/serving.md), so their geometry is unconstrained.
+        kernel_sites = ("attn_out", "hidden_mlp", "ffn")
+        for kind, n, cols in decode_site_shapes(cfg):
+            if kind not in kernel_sites:
+                continue
+            if n % KERNEL_BLOCK_ROWS:
+                raise ValueError(
+                    f"backend='kernel' needs site {kind!r} input dim {n} "
+                    f"divisible by block_rows={KERNEL_BLOCK_ROWS}"
+                )
+            for c in cols:
+                pick_tile(c)  # raises if no power-of-two tile >= 8 divides
 
     def mask(self, kind: str, acts: jnp.ndarray):
         """acts (..., N) → (mask (N,) float or None, est latency seconds)."""

@@ -1,0 +1,118 @@
+"""Docs-drift guard (fast tier + its own CI step).
+
+Two contracts keep README.md / docs/*.md honest:
+
+  * every fenced ```python block EXECUTES — doc snippets are run, not
+    trusted, so an API rename or contract change breaks the build until
+    the docs catch up;
+  * every ``--flag`` a doc mentions must exist in the argparse parser of
+    the CLI(s) that doc describes — a renamed or removed flag fails here
+    before a reader hits it.
+
+Docs are written so the python blocks are self-contained and cheap (tiny
+shapes, interpret-mode kernels); bash/console blocks are not executed.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:  # make `import benchmarks.*` resolvable
+    sys.path.insert(0, str(REPO))
+
+DOC_FILES = ["README.md", "docs/serving.md", "docs/kernels.md",
+             "docs/benchmarks.md"]
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+# --flag tokens: double dash + lowercase word, dash-separated (excludes
+# markdown rules/table borders, em dashes and single-dash pytest flags)
+_FLAG = re.compile(r"--[a-z][a-z0-9]*(?:-[a-z0-9]+)*")
+
+
+def _doc_paths():
+    paths = [REPO / f for f in DOC_FILES]
+    missing = [str(p) for p in paths if not p.exists()]
+    assert not missing, f"documented files missing: {missing}"
+    # any new docs/*.md must be registered above so its snippets run
+    extra = {p.name for p in (REPO / "docs").glob("*.md")} - {
+        Path(f).name for f in DOC_FILES
+    }
+    assert not extra, (
+        f"docs/*.md files not covered by test_docs.DOC_FILES: {extra}"
+    )
+    return paths
+
+
+def _python_blocks():
+    for path in _doc_paths():
+        text = path.read_text()
+        for i, m in enumerate(_FENCE.finditer(text)):
+            rel = path.relative_to(REPO)
+            yield pytest.param(str(rel), i, m.group(1), id=f"{rel}#block{i}")
+
+
+@pytest.mark.parametrize("rel,idx,code", list(_python_blocks()))
+def test_doc_python_block_executes(rel, idx, code):
+    """Each fenced python block runs in a fresh namespace; its asserts are
+    part of the doc's contract."""
+    ns = {"__name__": f"docblock_{Path(rel).stem}_{idx}"}
+    exec(compile(code, f"{rel}#block{idx}", "exec"), ns)
+
+
+def _parsers():
+    """The argparse parsers the docs describe, keyed by CLI."""
+    from benchmarks.kernel_gather import build_parser as kernel_gather_parser
+    from benchmarks.serve_throughput import build_parser as serve_tp_parser
+    from repro.launch.serve import build_parser as serve_parser
+
+    return {
+        "repro.launch.serve": serve_parser(),
+        "benchmarks.serve_throughput": serve_tp_parser(),
+        "benchmarks.kernel_gather": kernel_gather_parser(),
+    }
+
+
+def _known_flags():
+    flags = {}
+    for name, parser in _parsers().items():
+        for action in parser._actions:
+            for opt in action.option_strings:
+                flags.setdefault(opt, set()).add(name)
+    return flags
+
+
+@pytest.mark.parametrize("rel", DOC_FILES)
+def test_documented_flags_exist(rel):
+    """Every --flag in a doc resolves against the union of the parsers that
+    doc covers (all docs here describe the serve CLI and/or the two
+    benchmark CLIs)."""
+    known = _known_flags()
+    text = (REPO / rel).read_text()
+    mentioned = sorted(set(_FLAG.findall(text)))
+    assert mentioned, f"{rel} documents no CLI flags — regex or doc broken?"
+    unknown = [f for f in mentioned if f not in known]
+    assert not unknown, (
+        f"{rel} mentions flags that exist in no argparse parser: {unknown} "
+        f"(known parsers: {sorted(_parsers())})"
+    )
+
+
+def test_cli_flags_are_documented_somewhere():
+    """The reverse direction for the user-facing serve CLI: every serve
+    flag should be discoverable from the docs (README or docs/)."""
+    text = "".join((REPO / f).read_text() for f in DOC_FILES)
+    mentioned = set(_FLAG.findall(text))
+    parser = _parsers()["repro.launch.serve"]
+    undocumented = []
+    for action in parser._actions:
+        opts = [o for o in action.option_strings
+                if o.startswith("--") and o != "--help"]
+        if opts and not any(o in mentioned for o in opts):
+            undocumented.append(opts[0])
+    assert not undocumented, (
+        f"serve CLI flags absent from README/docs: {undocumented}"
+    )

@@ -1,14 +1,17 @@
 """Serving engine + SparseExecution: end-to-end policies and invariants.
 
-Marked ``slow`` module-wide (reduced-VLM engine runs take ~100 s total);
-the fast tier's serving coverage lives in tests/test_scheduler.py.
+Engine-compiling tests are marked ``slow`` individually (reduced-VLM
+engine runs take ~100 s total); the fast tier's serving coverage lives in
+tests/test_scheduler.py. The ``io_summary`` key-contract test stays in the
+fast tier — it builds a compile-free dense_free engine, and its whole
+point is failing the same push that drifts the keys.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytestmark = pytest.mark.slow
+slow = pytest.mark.slow
 
 from repro.configs import get_config
 from repro.configs.base import InputShape
@@ -40,6 +43,7 @@ def _run(model, params, cfg, method, sparsity=0.4):
     return eng, out
 
 
+@slow
 def test_engine_all_methods_run(vlm):
     cfg, model, params = vlm
     for method in ("dense", "topk", "chunk"):
@@ -50,6 +54,7 @@ def test_engine_all_methods_run(vlm):
         assert s["io_sim_s"] > s["io_est_s"] > 0  # simulator lift applied
 
 
+@slow
 def test_chunk_beats_topk_io(vlm):
     """The paper's claim at engine level: chunk selection's I/O ≪ top-k's at
     the same sparsity."""
@@ -62,6 +67,7 @@ def test_chunk_beats_topk_io(vlm):
     assert c < 0.5 * t
 
 
+@slow
 def test_sparse_ctx_mask_invariants(vlm):
     cfg, model, params = vlm
     ctx = SparseExecution(cfg, device="nano", sparsity=0.5, method="chunk")
@@ -77,6 +83,7 @@ def test_sparse_ctx_mask_invariants(vlm):
     assert m2 is None and float(lat2) == 0.0
 
 
+@slow
 def test_sparse_decode_error_shrinks_with_sparsity(vlm):
     """Sparse decode is finite, accounts I/O, and its deviation from dense
     shrinks monotonically as sparsity → 0. (Absolute logit agreement is a
@@ -104,6 +111,7 @@ def test_sparse_decode_error_shrinks_with_sparsity(vlm):
     assert ios[-1] >= ios[0] * 0.5  # lower sparsity → no less I/O (chunky)
 
 
+@slow
 def test_reordering_integration(vlm):
     from repro.core import hot_cold_reordering
 
@@ -118,6 +126,37 @@ def test_reordering_integration(vlm):
     assert m.shape == (cfg.d_model,) and float(lat) > 0
 
 
+def test_io_summary_key_contract(vlm):
+    """io_summary()'s key set is a documented API: the docstring table, the
+    IO_SUMMARY_KEYS constant and the implementation must all agree — a new
+    counter that skips any of the three fails here."""
+    import re
+
+    from repro.serving import IO_SUMMARY_KEYS
+
+    cfg, model, params = vlm
+    # dense_free: no SparseExecution, no compile — cheap engine, empty stats
+    eng = ServeEngine(model, params, max_seq=32, batch_size=1,
+                      method="dense_free")
+    summary = eng.io_summary()
+    assert set(summary) == set(IO_SUMMARY_KEYS), (
+        "io_summary() keys drifted from IO_SUMMARY_KEYS"
+    )
+    # the docstring table documents exactly the same fields
+    doc = ServeEngine.io_summary.__doc__
+    documented = set(re.findall(r"\| ``([a-z_]+)``", doc))
+    assert documented == set(IO_SUMMARY_KEYS), (
+        f"io_summary docstring table drifted: "
+        f"missing={set(IO_SUMMARY_KEYS) - documented} "
+        f"extra={documented - set(IO_SUMMARY_KEYS)}"
+    )
+    # every documented field names the PR that introduced it
+    for key in IO_SUMMARY_KEYS:
+        row = next(line for line in doc.splitlines() if f"``{key}``" in line)
+        assert re.search(r"PR \d+", row), f"{key} row lacks a 'since PR' tag"
+
+
+@slow
 def test_hot_neuron_caching_complementary(vlm):
     """Paper §5: cached (memory-resident) neurons get zero importance —
     never loaded — and the remaining uncached selection still benefits from

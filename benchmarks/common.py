@@ -90,10 +90,12 @@ def time_call(fn: Callable, *args, repeats: int = 5) -> float:
 
 def decode_backend_pair(model, params, batch, *, max_seq: int, batch_size: int,
                         n_tokens: int, seed: int, repeats: int = 1,
-                        warm: bool = True):
+                        warm: bool = True, wbits: int = 16):
     """Run the SAME greedy decode through both execution backends
     (kernels/backend.py) and assert byte-identical tokens — the PR-5
-    invariant both benchmark artifacts pin. Returns
+    invariant both benchmark artifacts pin, extended in PR 6 to the
+    quantized chunk format (``wbits=8``: in-kernel dequantization vs the
+    reference twin's identical per-block multiply). Returns
     {backend: (engine, tokens, median_wall_s)}.
 
     Shared by ``serve_throughput.bench_backend_parity`` (BENCH_serve rows)
@@ -108,7 +110,8 @@ def decode_backend_pair(model, params, batch, *, max_seq: int, batch_size: int,
     for backend in ("reference", "kernel"):
         eng = ServeEngine(model, params, max_seq=max_seq,
                           batch_size=batch_size, device="nano", sparsity=0.4,
-                          method="chunk", seed=seed, backend=backend)
+                          method="chunk", seed=seed, backend=backend,
+                          wbits=wbits)
         eng.simulator.noise = 0.0
         tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
         if warm:
@@ -125,8 +128,8 @@ def decode_backend_pair(model, params, batch, *, max_seq: int, batch_size: int,
         outs[backend] = out
         results[backend] = (eng, out, float(np.median(walls)))
     assert bool(jax.numpy.all(outs["reference"] == outs["kernel"])), (
-        "backend='kernel' decode must produce byte-identical tokens to "
-        "backend='reference' (interpret mode)"
+        f"backend='kernel' decode must produce byte-identical tokens to "
+        f"backend='reference' (interpret mode, wbits={wbits})"
     )
     return results
 

@@ -23,6 +23,12 @@ that matter for the perf trajectory are structural and deterministic:
   * ``kernel/tile_d*`` — the single-site DMA matmul swept over the output
     tile width (grid-step count vs VMEM slot budget; the ROADMAP's first
     real-TPU perf knob), parity asserted at every width.
+  * ``kernel/quant_*`` — the quantized chunk format (PR 6): int8 payloads
+    + per-block scale lanes fetched through the same DMA slot rotation and
+    dequantized in VMEM, parity-checked against the dequantized-weights
+    oracle, plus the same chunk plan's modeled row bytes priced at
+    wbits=16 vs wbits=8 per site (ratio asserted under the serve smoke's
+    ceiling).
   * ``kernel/decode_backend_*`` — end-to-end serve-engine decode through
     ``backend='kernel'`` vs ``backend='reference'``: byte-identical tokens
     asserted, wall tokens/s recorded for both.
@@ -44,9 +50,13 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.kernels import (
+    chunk_gather_matmul_dma,
     chunk_gather_matmul_ref,
+    chunk_gather_mlp_dma,
     chunk_gather_mlp_ref,
+    dequantize_rows,
     masks_to_block_tables,
+    quantize_rows,
     sparse_matmul_dma,
     sparse_mlp_fused,
     sparse_swiglu,
@@ -174,6 +184,8 @@ def run(rows: Rows, smoke: bool = False) -> None:
             rows.add(f"kernel/matmul_dma_depth{depth}", 0.0, f"rel_err={err:.2e}")
 
     bench_tile_sweep(rows, sparse, kstarts, ksizes, rng, batch, smoke=smoke)
+    bench_quantized_gather(rows, sparse, kstarts, ksizes, rng, batch,
+                           smoke=smoke)
     bench_decode_backends(rows, smoke=smoke)
 
 
@@ -215,6 +227,110 @@ def bench_tile_sweep(rows: Rows, sparse, kstarts, ksizes, rng, batch: int,
             walls.append(time.perf_counter() - t0)
         rows.add(f"kernel/tile_d{tile}", float(np.median(walls)) * 1e6,
                  f"rel_err={err:.2e} grid_steps={d // tile} interpret=cpu")
+
+
+def bench_quantized_gather(rows: Rows, sparse, kstarts, ksizes, rng,
+                           batch: int, smoke: bool = False) -> None:
+    """The quantized chunk format through the DMA gather kernels (PR 6):
+    int8 payloads + per-block f32 scale lanes ride the same async-copy slot
+    rotation and are dequantized in VMEM before the f32 accumulation.
+    Parity is asserted against the dequantized-weights reference oracle at
+    every swept prefetch depth for BOTH kernels (single-site matmul on the
+    attn_out lane, fused MLP on the hidden_mlp/ffn lanes); the bytes sweep
+    prices the SAME chunk plan at wbits=16 vs 8 via two SparseExecution
+    instances and asserts the per-site ratio stays under the serve smoke's
+    QUANTIZED_BYTES_RATIO_MAX ceiling."""
+    from .serve_throughput import QUANTIZED_BYTES_RATIO_MAX
+
+    order = list(sparse.site_order)
+    d = sparse.cfg.d_model
+
+    # -- single-site quantized matmul on the attn_out lane -------------------
+    io_ = order.index("attn_out")
+    n_o = sparse.sites["attn_out"].n
+    w_o = jnp.asarray(rng.normal(0, 0.05, (n_o, d)), jnp.float32)
+    x_o = jnp.asarray(rng.normal(0, 1, (batch, n_o)), jnp.float32)
+    q_o, s_o = quantize_rows(w_o, KERNEL_BLOCK_ROWS)
+    yref = chunk_gather_matmul_ref(
+        dequantize_rows(q_o, s_o, KERNEL_BLOCK_ROWS), x_o,
+        kstarts[io_], ksizes[io_],
+    )
+    scale = float(jnp.max(jnp.abs(yref))) + 1.0
+    depths = (1,) if smoke else (0, 1, 2)
+    for depth in depths:
+        t0 = time.perf_counter()
+        y = chunk_gather_matmul_dma(q_o, x_o, kstarts[io_], ksizes[io_], s_o,
+                                    block_rows=KERNEL_BLOCK_ROWS,
+                                    max_chunk_rows=KERNEL_MAX_CHUNK_ROWS,
+                                    prefetch_depth=depth, interpret=True)
+        y.block_until_ready()
+        wall = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(y - yref))) / scale
+        assert err < 1e-5, (
+            f"quantized matmul diverged from dequantized oracle at depth "
+            f"{depth}: {err}"
+        )
+        rows.add(f"kernel/quant_matmul_depth{depth}", wall * 1e6,
+                 f"rel_err={err:.2e} interpret=cpu")
+
+    # -- fused quantized MLP on the real hidden_mlp/ffn plan lanes -----------
+    ih, i_f = order.index("hidden_mlp"), order.index("ffn")
+    n, f = sparse.sites["hidden_mlp"].n, sparse.sites["ffn"].n
+    wg = jnp.asarray(rng.normal(0, 0.05, (n, f)), jnp.float32)
+    wu = jnp.asarray(rng.normal(0, 0.05, (n, f)), jnp.float32)
+    wd = jnp.asarray(rng.normal(0, 0.05, (f, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (batch, n)), jnp.float32)
+    qg, sg = quantize_rows(wg, KERNEL_BLOCK_ROWS)
+    qu, su = quantize_rows(wu, KERNEL_BLOCK_ROWS)
+    qd, sd = quantize_rows(wd, KERNEL_BLOCK_ROWS)
+    lanes_s = jnp.stack([kstarts[ih], kstarts[i_f]])
+    lanes_z = jnp.stack([ksizes[ih], ksizes[i_f]])
+    yref_m = chunk_gather_mlp_ref(
+        dequantize_rows(qg, sg, KERNEL_BLOCK_ROWS),
+        dequantize_rows(qu, su, KERNEL_BLOCK_ROWS),
+        dequantize_rows(qd, sd, KERNEL_BLOCK_ROWS),
+        x, lanes_s, lanes_z,
+    )
+    scale_m = float(jnp.max(jnp.abs(yref_m))) + 1.0
+    for depth in depths:
+        t0 = time.perf_counter()
+        y = chunk_gather_mlp_dma(qg, qu, qd, x, lanes_s, lanes_z,
+                                 scales=(sg, su, sd),
+                                 block_rows=KERNEL_BLOCK_ROWS,
+                                 max_chunk_rows=KERNEL_MAX_CHUNK_ROWS,
+                                 prefetch_depth=depth, interpret=True)
+        y.block_until_ready()
+        wall = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(y - yref_m))) / scale_m
+        assert err < 1e-5, (
+            f"quantized fused MLP diverged from dequantized oracle at depth "
+            f"{depth}: {err}"
+        )
+        rows.add(f"kernel/quant_mlp_depth{depth}", wall * 1e6,
+                 f"rel_err={err:.2e} interpret=cpu")
+
+    # -- bytes sweep: the same chunk plan priced at 16 vs 8 bits -------------
+    sparse8 = SparseExecution(sparse.cfg, device="nano", sparsity=0.4,
+                              method="chunk", wbits=8)
+    sizes = np.asarray(ksizes)
+    total16 = total8 = 0.0
+    for i, kind in enumerate(order):
+        rows_sel = float(sizes[i].sum())
+        b16 = rows_sel * sparse.site_row_bytes(kind)
+        b8 = rows_sel * sparse8.site_row_bytes(kind)
+        total16 += b16
+        total8 += b8
+        ratio = b8 / b16
+        assert ratio <= QUANTIZED_BYTES_RATIO_MAX, (
+            f"site {kind}: quantized row bytes ratio {ratio:.3f} exceeds "
+            f"{QUANTIZED_BYTES_RATIO_MAX}"
+        )
+        rows.add(f"kernel/quant_bytes_{kind}", 0.0,
+                 f"bytes_w16={b16:.0f} bytes_w8={b8:.0f} ratio={ratio:.3f}")
+    rows.add("kernel/quant_bytes_total", 0.0,
+             f"bytes_w16={total16:.0f} bytes_w8={total8:.0f} "
+             f"ratio={total8 / total16:.3f} "
+             f"ceiling={QUANTIZED_BYTES_RATIO_MAX}")
 
 
 def bench_decode_backends(rows: Rows, smoke: bool = False) -> None:

@@ -11,8 +11,15 @@ Seven sections (reduced InternVL2 under the flash simulator):
   * serve/backend_* — the kernel-backed decode execution path
     (``--backend kernel``: the Pallas DMA gather kernels consume the decode
     plan's chunk tables inside the scan) vs the reference schedule twin,
-    asserting byte-identical greedy tokens across backends and emitting
-    both wall tokens/s (interpret-mode kernels on CPU CI);
+    asserting byte-identical greedy tokens across backends at wbits 16 AND
+    8 (in-kernel dequantization vs the twin's identical per-block multiply)
+    and emitting both wall tokens/s (interpret-mode kernels on CPU CI);
+  * serve/quantized_* — int8 chunk storage (``--wbits 8``) vs fp16 on BOTH
+    the nano and agx profiles at equal settings (deterministic sim):
+    asserts total modeled I/O bytes at 8 bits strictly below fp16 and the
+    ratio at or under QUANTIZED_BYTES_RATIO_MAX (payload halves;
+    per-block scales add 4/8 bytes per row) — the PR-6 byte-trajectory
+    floor CI gates on;
   * serve/overlap_<device> — the two-stage prefetch pipeline on BOTH the
     nano and agx profiles, swept over prefetch depth: asserts overlapped
     per-step decode latency strictly below the serial charge for
@@ -80,6 +87,11 @@ MAX_SEQ = 128
 # fraction of hideable time actually hidden; ~0.92+ at current settings) —
 # the CI smoke fails below it to guard the perf trajectory
 OVERLAP_EFFICIENCY_FLOOR = 0.5
+# ceiling for int8-vs-fp16 total modeled I/O bytes at matched settings
+# (~0.49 at current geometry: payload exactly halves, the per-block scale
+# lane adds 4 bytes per 8 rows) — the CI smoke fails above it so quantized
+# storage can never silently stop paying for itself
+QUANTIZED_BYTES_RATIO_MAX = 0.55
 
 
 def _setup():
@@ -91,12 +103,13 @@ def _setup():
 
 
 def _engine(model, params, method="chunk", refresh=1, seed=5, cache_mb=0.0,
-            device="nano", overlap=True, prefetch_depth=1, backend="reference"):
+            device="nano", overlap=True, prefetch_depth=1, backend="reference",
+            wbits=16):
     return ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
                        device=device, sparsity=0.4, method=method, seed=seed,
                        plan_refresh_interval=refresh, cache_mb=cache_mb,
                        overlap=overlap, prefetch_depth=prefetch_depth,
-                       backend=backend)
+                       backend=backend, wbits=wbits)
 
 
 def _timed_decode(eng, decode_fn, tok0, n, repeats=3):
@@ -152,18 +165,26 @@ def bench_backend_parity(rows: Rows, model, params, batch,
     """The kernel-backed decode execution path vs the reference backend:
     equal settings, byte-identical greedy tokens (the PR-5 acceptance
     invariant — the backend switch changes how the masked arithmetic is
-    realized, never which neurons participate), wall tokens/s for both.
-    The kernel backend runs the Pallas DMA gather kernels in interpret
-    mode here (CPU CI), so its wall number measures the schedule's
-    emulation, not MXU throughput — the row that matters for the perf
-    trajectory is the parity bit plus the reference-backend tokens/s."""
-    results = decode_backend_pair(model, params, batch, max_seq=MAX_SEQ,
-                                  batch_size=BATCH, n_tokens=decode_tokens,
-                                  seed=5, repeats=repeats)
-    for backend, (_eng, _out, wall) in results.items():
-        tps = decode_tokens * BATCH / wall
-        rows.add(f"serve/backend_{backend}", wall / decode_tokens * 1e6,
-                 f"tokens_per_s={tps:.1f} identical_tokens=True")
+    realized, never which neurons participate), wall tokens/s for both —
+    at wbits=16 AND wbits=8 (PR 6: the kernels dequantize int8 chunk
+    payloads in VMEM; the reference twin performs the elementwise-identical
+    per-block multiply, so the parity invariant extends to the quantized
+    path unchanged). The kernel backend runs the Pallas DMA gather kernels
+    in interpret mode here (CPU CI), so its wall number measures the
+    schedule's emulation, not MXU throughput — the rows that matter for
+    the perf trajectory are the parity bits plus the reference-backend
+    tokens/s."""
+    for wbits in (16, 8):
+        results = decode_backend_pair(model, params, batch, max_seq=MAX_SEQ,
+                                      batch_size=BATCH, n_tokens=decode_tokens,
+                                      seed=5, repeats=repeats, wbits=wbits)
+        suffix = "" if wbits == 16 else "_w8"
+        for backend, (_eng, _out, wall) in results.items():
+            tps = decode_tokens * BATCH / wall
+            rows.add(f"serve/backend_{backend}{suffix}",
+                     wall / decode_tokens * 1e6,
+                     f"tokens_per_s={tps:.1f} identical_tokens=True "
+                     f"wbits={wbits}")
 
 
 def bench_overlap_pipeline(rows: Rows, model, params, batch,
@@ -266,6 +287,42 @@ def bench_overlap_pipeline(rows: Rows, model, params, batch,
                  serial / decode_tokens * 1e6,
                  f"sim_tokens_per_s={n_tok / serial:.1f} "
                  f"speedup={serial / overlapped:.3f}x")
+
+
+def bench_quantized_io(rows: Rows, model, params, batch,
+                       devices=("nano", "agx"),
+                       decode_tokens=DECODE_TOKENS) -> None:
+    """int8 chunk storage vs fp16 on both device profiles (PR 6): identical
+    settings and seed, deterministic sim, the same quality proxy (selection
+    budget = (1-sparsity)·N rows per site either way) — total modeled I/O
+    bytes at wbits=8 must come in strictly below fp16 AND at or under the
+    QUANTIZED_BYTES_RATIO_MAX ceiling (the payload halves; the per-block
+    scale lane costs 4 bytes per 8 rows). Emits per-width bytes plus the
+    ratio row the CI artifact tracks."""
+    for device in devices:
+        total_bytes = {}
+        for wbits in (16, 8):
+            eng = _engine(model, params, device=device, wbits=wbits)
+            eng.simulator.noise = 0.0  # deterministic sim for the assertions
+            tok0 = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
+            eng.decode(tok0, decode_tokens)
+            s = eng.io_summary()
+            total_bytes[wbits] = float(s["io_bytes"])
+            rows.add(f"serve/quantized_w{wbits}_{device}",
+                     s["io_sim_s"] / decode_tokens * 1e6,
+                     f"io_bytes={s['io_bytes']:.0f} wbits={wbits}")
+        ratio = total_bytes[8] / total_bytes[16]
+        assert total_bytes[8] < total_bytes[16], (
+            f"[{device}] wbits=8 total I/O bytes must be strictly below "
+            f"fp16: {total_bytes[8]:.0f} vs {total_bytes[16]:.0f}"
+        )
+        assert ratio <= QUANTIZED_BYTES_RATIO_MAX, (
+            f"[{device}] quantized_bytes_ratio {ratio:.3f} exceeds the "
+            f"{QUANTIZED_BYTES_RATIO_MAX} ceiling — int8 chunk storage "
+            "stopped paying for itself"
+        )
+        rows.add(f"serve/quantized_bytes_ratio_{device}", 0.0,
+                 f"ratio={ratio:.3f} ceiling={QUANTIZED_BYTES_RATIO_MAX}")
 
 
 def bench_plan_reuse(rows: Rows, model, params, batch,
@@ -440,6 +497,9 @@ def run(rows: Rows, smoke: bool = False) -> None:
         bench_backend_parity(rows, model, params, batch, decode_tokens=8)
         bench_overlap_pipeline(rows, model, params, batch, devices=("nano",),
                                decode_tokens=8, depth_engines=False)
+        # both device profiles even in smoke: the int8-below-fp16 byte
+        # ordering is a per-profile acceptance criterion
+        bench_quantized_io(rows, model, params, batch, decode_tokens=8)
         bench_plan_reuse(rows, model, params, batch, intervals=(1, 4),
                          decode_tokens=8)
         bench_cache_sweep(rows, model, params, batch, cfg,
@@ -450,6 +510,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
     bench_fused_vs_loop(rows, model, params, batch)
     bench_backend_parity(rows, model, params, batch, repeats=3)
     bench_overlap_pipeline(rows, model, params, batch)
+    bench_quantized_io(rows, model, params, batch)
     bench_plan_reuse(rows, model, params, batch)
     bench_cache_sweep(rows, model, params, batch, cfg)
     bench_scheduler_admission(rows, cfg, model, params)

@@ -39,6 +39,23 @@ MB = 1024.0 * 1024.0
 GB = 1024.0 * 1024.0 * 1024.0
 
 
+def row_stream_bytes(cols: int, wbits: int = 16, block_rows: int = 8) -> float:
+    """Streamed bytes per selected weight row at a given storage width.
+
+    At 16 bits a row is ``cols * 2`` payload bytes. Quantized storage
+    (``wbits=8``, kernels/quantize.py) ships ``cols`` int8 payload bytes
+    plus its share of the per-``block_rows``-block f32 scale — 4 bytes
+    amortized over the block, i.e. ``4 / block_rows`` per row per matrix —
+    so quantized savings are charged honestly, never as a free 2×. The
+    value is fractional by design; every consumer (LatencyTable pricing,
+    IOEvent.nbytes, the residency cache's byte budget) accepts floats."""
+    if wbits not in (16, 8):
+        raise ValueError(f"wbits must be 16 or 8, got {wbits}")
+    payload = cols * wbits / 8.0
+    scale_overhead = (4.0 / block_rows) if wbits < 16 else 0.0
+    return payload + scale_overhead
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceProfile:
     """Two-regime storage/DMA latency profile.
@@ -97,7 +114,7 @@ class DeviceProfile:
         return s / self.latency_bytes(s)
 
     # -- row-granular lookup table (the paper's T[s]) ------------------------
-    def build_table(self, row_bytes: int, max_rows: int) -> "LatencyTable":
+    def build_table(self, row_bytes: float, max_rows: int) -> "LatencyTable":
         sizes = np.arange(max_rows + 1, dtype=np.float64) * row_bytes
         lat = self.latency_bytes(sizes)
         lat[0] = 0.0
@@ -117,7 +134,7 @@ class LatencyTable:
     """
 
     device: str
-    row_bytes: int
+    row_bytes: float  # fractional at wbits=8 (amortized scale overhead)
     table: jnp.ndarray
 
     @property
@@ -245,7 +262,7 @@ def get_profile(name: str) -> DeviceProfile:
 
 
 def profile_table(
-    device: str | DeviceProfile, row_bytes: int, max_rows: int
+    device: str | DeviceProfile, row_bytes: float, max_rows: int
 ) -> LatencyTable:
     prof = device if isinstance(device, DeviceProfile) else get_profile(device)
     return prof.build_table(row_bytes=row_bytes, max_rows=max_rows)

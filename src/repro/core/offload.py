@@ -34,14 +34,16 @@ class IOEvent:
     for the estimate-driven decode paths it is the step's cache-miss rows ×
     per-site row bytes, threaded from the decode-plan counters (it used to
     be logged as 0 there, making ``total_bytes()`` meaningless for the scan
-    path). ``hit_rate`` is the DRAM residency-cache hit fraction of the rows
-    the step *selected* (hit rows transfer nothing — the event's latency
-    charges only the cache-miss bytes). 0.0 when the residency tier is
-    disabled.
+    path). Float because the per-row cost is fractional at wbits=8: int8
+    payload plus the per-block quantization scale overhead amortized over
+    the rows of a block (latency_model.row_stream_bytes). ``hit_rate`` is
+    the DRAM residency-cache hit fraction of the rows the step *selected*
+    (hit rows transfer nothing — the event's latency charges only the
+    cache-miss bytes). 0.0 when the residency tier is disabled.
     """
 
     name: str
-    nbytes: int
+    nbytes: float
     n_chunks: int
     latency_s: float
     hit_rate: float = 0.0
@@ -96,7 +98,7 @@ class FlashOffloadSimulator:
         self.log.append(
             IOEvent(
                 name=name,
-                nbytes=int(sizes.sum()) * row_bytes,
+                nbytes=float(sizes.sum()) * row_bytes,
                 n_chunks=len(chunks),
                 latency_s=latency,
             )
@@ -129,7 +131,7 @@ class FlashOffloadSimulator:
         jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
         latency = est_s * lift * jitter
         self.log.append(
-            IOEvent(name=name, nbytes=int(nbytes), n_chunks=n_chunks,
+            IOEvent(name=name, nbytes=float(nbytes), n_chunks=n_chunks,
                     latency_s=latency, hit_rate=float(hit_rate))
         )
         return latency
@@ -169,7 +171,7 @@ class FlashOffloadSimulator:
                 self.log.append(
                     IOEvent(
                         name=f"{name}[{i}]" if name else name,
-                        nbytes=int(nbytes[i]) if nbytes is not None else 0,
+                        nbytes=float(nbytes[i]) if nbytes is not None else 0.0,
                         n_chunks=n_chunks,
                         latency_s=float(lat),
                         hit_rate=float(hit_rates[i]) if hit_rates is not None else 0.0,
@@ -185,8 +187,8 @@ class FlashOffloadSimulator:
     def total_io_seconds(self) -> float:
         return float(sum(e.latency_s for e in self.log))
 
-    def total_bytes(self) -> int:
-        return int(sum(e.nbytes for e in self.log))
+    def total_bytes(self) -> float:
+        return float(sum(e.nbytes for e in self.log))
 
     def reset(self) -> None:
         self.log.clear()

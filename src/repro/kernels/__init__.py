@@ -21,6 +21,12 @@ from .ops import (
     sparse_mlp_fused,
     sparse_swiglu,
 )
+from .quantize import (
+    SCALE_BYTES,
+    dequantize_rows,
+    quantize_params,
+    quantize_rows,
+)
 from .ref import (
     chunk_gather_matmul_ref,
     chunk_gather_mlp_ref,

@@ -21,9 +21,10 @@ sparse projections through one of two implementations selected by
     ``kstarts``/``ksizes``/``mlp_kernel_plan`` lanes directly:
     ``chunk_gather_mlp_dma`` replaces the masked dense SwiGLU (ONE dispatch
     for gate/up/down, SwiGLU intermediate resident in VMEM) and
-    ``chunk_gather_matmul_dma`` serves the single-site projections
-    (attn_out's ``wo``; both matrices of the non-gated gelu MLP). Interpret
-    mode in CI / on CPU, compiled on real TPU (``interpret=None`` auto).
+    ``chunk_gather_matmul_dma`` serves the single-site projections (q/k/v
+    off the ``hidden_attn`` site, attn_out's ``wo``, both matrices of the
+    non-gated gelu MLP — the full decode hot path). Interpret mode in
+    CI / on CPU, compiled on real TPU (``interpret=None`` auto).
 
 Both implementations compute the SAME masked-matmul semantics of paper
 App. B.2 — the backend only changes how the arithmetic is realized, never
@@ -69,8 +70,9 @@ def pick_tile(dim: int, cap: int = 128) -> int:
 
 def blocked_masked_matmul(
     xm: jnp.ndarray,  # (B, N) pre-masked input, any float dtype
-    w: jnp.ndarray,  # (N, D)
+    w: jnp.ndarray,  # (N, D); int8 payload when scales is given
     block_rows: int = 8,
+    scales: jnp.ndarray | None = None,  # (N // block_rows,) f32 per-block
 ) -> jnp.ndarray:
     """The DMA gather kernel's schedule twin: y = Σ_blocks xm_blk @ w_blk in
     ascending ``block_rows`` blocks, f32 accumulation — per output element
@@ -85,13 +87,20 @@ def blocked_masked_matmul(
     additions — the order-sensitive part — stay sequential. That keeps the
     decode hot path one fused matmul + nb cheap adds instead of nb
     serialized dots (bitwise equality across both forms and the kernel is
-    pinned by tests/test_backend.py)."""
+    pinned by tests/test_backend.py).
+
+    With ``scales`` (the quantized chunk format): ``w`` is the int8 payload
+    and each block is dequantized ``q.astype(f32) * scale`` before the
+    identical contraction — elementwise the same multiply the kernel's
+    in-VMEM dequant performs, keeping the twins bitwise equal at 8 bits."""
     b, n = xm.shape
     if n % block_rows:
         raise ValueError(f"N={n} must be a multiple of block_rows={block_rows}")
     nb = n // block_rows
     xb = xm.astype(jnp.float32).reshape(b, nb, block_rows)
     wb = w.astype(jnp.float32).reshape(nb, block_rows, w.shape[1])
+    if scales is not None:
+        wb = wb * scales.astype(jnp.float32)[:, None, None]
     parts = jnp.einsum("bkr,krd->kbd", xb, wb,
                        preferred_element_type=jnp.float32)
 
@@ -153,27 +162,30 @@ class ExecutionBackend:
     # -- single-site projection (attn_out wo; gelu MLP fc/proj) -------------
     def project(
         self,
-        w: jnp.ndarray,  # (N, D)
+        w: jnp.ndarray,  # (N, D); int8 payload when scales is given
         x: jnp.ndarray,  # (B, N)
         mask: jnp.ndarray,  # (N,) exact selected-row mask (float or bool)
         starts: jnp.ndarray,  # (K,) block-aligned chunk table (kernel lane)
         sizes: jnp.ndarray,  # (K,)
+        scales: jnp.ndarray | None = None,  # (N // block_rows,) f32
     ) -> jnp.ndarray:
         """y (B, D) f32 = (x · mask) @ w. The input is pre-masked by the
         EXACT mask for both backends, so the kernel's outward block rounding
         gathers only zeroed extra rows — masked-matmul semantics hold and
-        the two implementations agree bitwise."""
+        the two implementations agree bitwise. With ``scales`` (8-bit chunk
+        storage) both backends dequantize per block before the identical
+        f32 contraction, preserving the bitwise twin property."""
         xm = (x * mask.astype(x.dtype)).astype(jnp.float32)
         if self.is_kernel:
             return chunk_gather_matmul_dma(
-                w, xm, starts, sizes,
+                w, xm, starts, sizes, scales,
                 block_rows=self.block_rows,
                 tile_d=pick_tile(w.shape[1], self.tile_cap),
                 max_chunk_rows=self.max_chunk_rows,
                 prefetch_depth=self.prefetch_depth,
                 interpret=self.interpret,
             )
-        return blocked_masked_matmul(xm, w, self.block_rows)
+        return blocked_masked_matmul(xm, w, self.block_rows, scales)
 
     # -- fused multi-site SwiGLU MLP -----------------------------------------
     def swiglu_mlp(
@@ -186,16 +198,19 @@ class ExecutionBackend:
         ffn_mask: jnp.ndarray,  # (F,) exact ffn-site mask
         starts: jnp.ndarray,  # (2, K) plan lanes: hidden_mlp, ffn
         sizes: jnp.ndarray,  # (2, K)
+        scales: Optional[Tuple] = None,  # (sg, su, sd) per-block f32 lanes
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Returns (y (B, D) f32, h (B, F) f32) where h is the UNMASKED
         SwiGLU intermediate swish(xm @ w_gate) * (xm @ w_up) — the decode
         path records |h| as the next refresh's ffn-lane importance, so it
-        must be the pre-mask value on both backends."""
+        must be the pre-mask value on both backends. ``scales`` switches
+        all three weights to the quantized chunk format (int8 payloads +
+        per-block scale lanes), dequantized identically on both backends."""
         xm = (x * hidden_mask.astype(x.dtype)).astype(jnp.float32)
         fm = ffn_mask.astype(jnp.float32)
         if self.is_kernel:
             return chunk_gather_mlp_dma(
-                w_gate, w_up, w_down, xm, starts, sizes, fm,
+                w_gate, w_up, w_down, xm, starts, sizes, fm, scales,
                 block_rows=self.block_rows,
                 tile_f=pick_tile(w_gate.shape[1], self.tile_cap),
                 tile_d=pick_tile(w_down.shape[1], self.tile_cap),
@@ -204,10 +219,11 @@ class ExecutionBackend:
                 interpret=self.interpret,
                 return_h=True,
             )
-        g = blocked_masked_matmul(xm, w_gate, self.block_rows)
-        u = blocked_masked_matmul(xm, w_up, self.block_rows)
+        sg, su, sd = scales if scales is not None else (None, None, None)
+        g = blocked_masked_matmul(xm, w_gate, self.block_rows, sg)
+        u = blocked_masked_matmul(xm, w_up, self.block_rows, su)
         # the kernel's literal sigmoid expression (jax.nn.sigmoid lowers to
         # a different, numerically-stable formulation — bitwise matters here)
         h = g * (1.0 / (1.0 + jnp.exp(-g))) * u
-        y = blocked_masked_matmul(h * fm[None, :], w_down, self.block_rows)
+        y = blocked_masked_matmul(h * fm[None, :], w_down, self.block_rows, sd)
         return y, h

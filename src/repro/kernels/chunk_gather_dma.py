@@ -165,15 +165,18 @@ def _matmul_dma_kernel(
     sizes_ref,  # scalar prefetch (K,)
     x_ref,  # (B, N) VMEM
     w_hbm,  # (N, D) ANY/HBM — fetched by explicit DMA only
-    out_ref,  # (B, tile_d) VMEM f32
-    wslots,  # (n_slots, block_rows, tile_d) VMEM
-    sems,  # DMA semaphores (n_slots,)
-    *,
+    *rest,  # [s_hbm,] out_ref, wslots, [sslots,] sems, [sems_s]
     block_rows: int,
     tile_d: int,
     blocks_per_chunk: int,
     n_slots: int,
+    quantized: bool,
 ):
+    if quantized:
+        s_hbm, out_ref, wslots, sslots, sems, sems_s = rest
+    else:
+        out_ref, wslots, sems = rest
+        s_hbm = sslots = sems_s = None
     dj = pl.program_id(0)
     k = starts_ref.shape[0]
     total = k * blocks_per_chunk
@@ -193,6 +196,14 @@ def _matmul_dma_kernel(
                 wslots.at[slot],
                 sems.at[slot],
             ).start()
+            if quantized:
+                # the scales lane rides the same slot rotation: one f32
+                # per block_rows block, fetched alongside its payload
+                pltpu.make_async_copy(
+                    s_hbm.at[pl.ds(off // block_rows, 1)],
+                    sslots.at[slot],
+                    sems_s.at[slot],
+                ).start()
 
     def wait_and_compute(step, slot):
         off, active = offset(step)
@@ -204,10 +215,21 @@ def _matmul_dma_kernel(
                 wslots.at[slot],
                 sems.at[slot],
             ).wait()
+            wb = wslots[slot].astype(jnp.float32)
+            if quantized:
+                pltpu.make_async_copy(
+                    s_hbm.at[pl.ds(off // block_rows, 1)],
+                    sslots.at[slot],
+                    sems_s.at[slot],
+                ).wait()
+                # upcast + dequantize in VMEM, accumulate in f32: one
+                # multiply per element before the identical dot, so the
+                # reference twin's elementwise dequant stays bitwise equal
+                wb = wb * sslots[slot][0]
             xb = pl.load(x_ref, (slice(None), pl.ds(off, block_rows)))
             out_ref[...] += jnp.dot(
                 xb.astype(jnp.float32),
-                wslots[slot].astype(jnp.float32),
+                wb,
                 preferred_element_type=jnp.float32,
             )
 
@@ -222,10 +244,11 @@ def _matmul_dma_kernel(
     ),
 )
 def chunk_gather_matmul_dma(
-    w: jnp.ndarray,  # (N, D)
+    w: jnp.ndarray,  # (N, D); int8 payload when scales is given
     x: jnp.ndarray,  # (B, N)
     starts: jnp.ndarray,  # (K,) int32, multiples of block_rows
     sizes: jnp.ndarray,  # (K,) int32, multiples of block_rows (0 = padded)
+    scales: jnp.ndarray | None = None,  # (N // block_rows,) f32 per-block
     *,
     block_rows: int = 8,
     tile_d: int = 128,
@@ -236,7 +259,13 @@ def chunk_gather_matmul_dma(
     """y (B, D) f32 = Σ_chunks x_chunk @ W_chunk, fetched by an explicitly
     ``prefetch_depth``-deep double-buffered DMA pipeline. Numerically
     identical at every depth (the schedule only re-times the same fetches) —
-    matches ``chunk_gather_matmul_ref`` exactly like the BlockSpec kernel."""
+    matches ``chunk_gather_matmul_ref`` exactly like the BlockSpec kernel.
+
+    With ``scales`` (the quantized chunk format, ``kernels/quantize.py``):
+    ``w`` is the int8 payload and each DMA step additionally fetches its
+    block's f32 scale through the same slot rotation, dequantizing in VMEM
+    (``q.astype(f32) * scale``) before the identical f32 accumulation —
+    matching ``blocked_masked_matmul(..., scales=...)`` bitwise."""
     n, d = w.shape
     b = x.shape[0]
     if prefetch_depth < 0:
@@ -247,19 +276,36 @@ def chunk_gather_matmul_dma(
         raise ValueError(f"N={n} must be a multiple of block_rows={block_rows}")
     if max_chunk_rows % block_rows:
         raise ValueError("max_chunk_rows must be a multiple of block_rows")
+    quantized = scales is not None
+    if quantized and scales.shape != (n // block_rows,):
+        raise ValueError(
+            f"scales must be ({n // block_rows},), got {scales.shape}"
+        )
     n_slots = prefetch_depth + 1
+    in_specs = [
+        pl.BlockSpec((b, n), lambda dj, *_: (0, 0)),  # x resident in VMEM
+        pl.BlockSpec(memory_space=_ANY),  # w stays in HBM; DMA'd manually
+    ]
+    scratch = [
+        pltpu.VMEM((n_slots, block_rows, tile_d), w.dtype),
+        pltpu.SemaphoreType.DMA((n_slots,)),
+    ]
+    operands = [starts, sizes, x, w]
+    if quantized:
+        in_specs.append(pl.BlockSpec(memory_space=_ANY))  # scales lane in HBM
+        scratch = [
+            scratch[0],
+            pltpu.VMEM((n_slots, 1), jnp.float32),  # sslots
+            scratch[1],
+            pltpu.SemaphoreType.DMA((n_slots,)),  # sems_s
+        ]
+        operands.append(scales.astype(jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(d // tile_d,),
-        in_specs=[
-            pl.BlockSpec((b, n), lambda dj, *_: (0, 0)),  # x resident in VMEM
-            pl.BlockSpec(memory_space=_ANY),  # w stays in HBM; DMA'd manually
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((b, tile_d), lambda dj, *_: (0, dj)),
-        scratch_shapes=[
-            pltpu.VMEM((n_slots, block_rows, tile_d), w.dtype),
-            pltpu.SemaphoreType.DMA((n_slots,)),
-        ],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         functools.partial(
@@ -268,12 +314,13 @@ def chunk_gather_matmul_dma(
             tile_d=tile_d,
             blocks_per_chunk=max_chunk_rows // block_rows,
             n_slots=n_slots,
+            quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
         compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(starts, sizes, x, w)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -289,17 +336,7 @@ def _mlp_dma_kernel(
     wu_hbm,  # (N, F) ANY
     wd_hbm,  # (F, D) ANY
     fmask_ref,  # (1, F) VMEM f32 — exact ffn row mask (all-ones = table only)
-    out_ref,  # (B, D) VMEM f32
-    h_ref,  # (B, F) VMEM f32 output — the UNMASKED SwiGLU intermediate
-    gslots,  # (n_slots, block_rows, tile_f)
-    uslots,  # (n_slots, block_rows, tile_f)
-    dslots,  # (n_slots, block_rows, tile_d)
-    acc_g,  # (B, tile_f) f32
-    acc_u,  # (B, tile_f) f32
-    sems_g,
-    sems_u,
-    sems_d,
-    *,
+    *rest,  # [sg/su/sd_hbm,] out_ref, h?, slots..., [scale slots,] sems...
     block_rows: int,
     tile_f: int,
     tile_d: int,
@@ -307,7 +344,17 @@ def _mlp_dma_kernel(
     n_slots: int,
     n_f_tiles: int,
     n_d_tiles: int,
+    quantized: bool,
 ):
+    if quantized:
+        (sg_hbm, su_hbm, sd_hbm, out_ref, h_ref, gslots, uslots, dslots,
+         gsc, usc, dsc, acc_g, acc_u, sems_g, sems_u, sems_d,
+         sems_gs, sems_us, sems_ds) = rest
+    else:
+        (out_ref, h_ref, gslots, uslots, dslots, acc_g, acc_u,
+         sems_g, sems_u, sems_d) = rest
+        sg_hbm = su_hbm = sd_hbm = gsc = usc = dsc = None
+        sems_gs = sems_us = sems_ds = None
     k = starts_ref.shape[1]
     total = k * blocks_per_chunk
 
@@ -334,6 +381,14 @@ def _mlp_dma_kernel(
                     uslots.at[slot],
                     sems_u.at[slot],
                 ).start()
+                if quantized:
+                    bk = off // block_rows
+                    pltpu.make_async_copy(
+                        sg_hbm.at[pl.ds(bk, 1)], gsc.at[slot], sems_gs.at[slot]
+                    ).start()
+                    pltpu.make_async_copy(
+                        su_hbm.at[pl.ds(bk, 1)], usc.at[slot], sems_us.at[slot]
+                    ).start()
 
         def wait_and_compute(step, slot):
             off, active = offset(0, step)
@@ -350,11 +405,23 @@ def _mlp_dma_kernel(
                     uslots.at[slot],
                     sems_u.at[slot],
                 ).wait()
+                gb = gslots[slot].astype(jnp.float32)
+                ub = uslots[slot].astype(jnp.float32)
+                if quantized:
+                    bk = off // block_rows
+                    pltpu.make_async_copy(
+                        sg_hbm.at[pl.ds(bk, 1)], gsc.at[slot], sems_gs.at[slot]
+                    ).wait()
+                    pltpu.make_async_copy(
+                        su_hbm.at[pl.ds(bk, 1)], usc.at[slot], sems_us.at[slot]
+                    ).wait()
+                    gb = gb * gsc[slot][0]
+                    ub = ub * usc[slot][0]
                 xb = pl.load(x_ref, (slice(None), pl.ds(off, block_rows)))
                 xb = xb.astype(jnp.float32)
-                acc_g[...] += jnp.dot(xb, gslots[slot].astype(jnp.float32),
+                acc_g[...] += jnp.dot(xb, gb,
                                       preferred_element_type=jnp.float32)
-                acc_u[...] += jnp.dot(xb, uslots[slot].astype(jnp.float32),
+                acc_u[...] += jnp.dot(xb, ub,
                                       preferred_element_type=jnp.float32)
 
         acc_g[...] = jnp.zeros_like(acc_g)
@@ -385,6 +452,12 @@ def _mlp_dma_kernel(
                     dslots.at[slot],
                     sems_d.at[slot],
                 ).start()
+                if quantized:
+                    pltpu.make_async_copy(
+                        sd_hbm.at[pl.ds(off // block_rows, 1)],
+                        dsc.at[slot],
+                        sems_ds.at[slot],
+                    ).start()
 
         def wait_and_compute(step, slot):
             off, active = offset(1, step)
@@ -396,6 +469,14 @@ def _mlp_dma_kernel(
                     dslots.at[slot],
                     sems_d.at[slot],
                 ).wait()
+                db = dslots[slot].astype(jnp.float32)
+                if quantized:
+                    pltpu.make_async_copy(
+                        sd_hbm.at[pl.ds(off // block_rows, 1)],
+                        dsc.at[slot],
+                        sems_ds.at[slot],
+                    ).wait()
+                    db = db * dsc[slot][0]
                 # the exact ffn mask applies at the gather, NOT to the h
                 # output: block-rounding may pull in rows outside the
                 # selected mask, and those must contribute zero for the
@@ -406,7 +487,7 @@ def _mlp_dma_kernel(
                 pl.store(
                     out_ref,
                     (slice(None), pl.ds(dj * tile_d, tile_d)),
-                    cur + jnp.dot(hb, dslots[slot].astype(jnp.float32),
+                    cur + jnp.dot(hb, db,
                                   preferred_element_type=jnp.float32),
                 )
 
@@ -429,13 +510,14 @@ def _mlp_dma_kernel(
     ),
 )
 def chunk_gather_mlp_dma(
-    w_gate: jnp.ndarray,  # (N, F)
+    w_gate: jnp.ndarray,  # (N, F); int8 payloads when scales is given
     w_up: jnp.ndarray,  # (N, F)
     w_down: jnp.ndarray,  # (F, D)
     x: jnp.ndarray,  # (B, N)
     starts: jnp.ndarray,  # (2, K): lane 0 = hidden_mlp plan, lane 1 = ffn plan
     sizes: jnp.ndarray,  # (2, K)
     ffn_mask: jnp.ndarray | None = None,  # (F,) exact down-input row mask
+    scales: tuple | None = None,  # (sg (N//br,), su (N//br,), sd (F//br,)) f32
     *,
     block_rows: int = 8,
     tile_f: int = 128,
@@ -465,7 +547,13 @@ def chunk_gather_mlp_dma(
     mask zeroes the unselected rows. With ``return_h=False`` h stays a VMEM
     scratch buffer that never round-trips HBM (the fused kernel's whole
     point); the kernel body is identical either way because outputs and
-    scratch occupy the same positional slot."""
+    scratch occupy the same positional slot.
+
+    With ``scales = (sg, su, sd)`` the three weights are int8 payloads of
+    the quantized chunk format; each lane's DMA step fetches its block's
+    f32 scale through the same slot rotation and dequantizes in VMEM
+    before the identical f32 accumulation (bitwise equal to the reference
+    backend's quantized schedule twin)."""
     n, f = w_gate.shape
     fd, d = w_down.shape
     b = x.shape[0]
@@ -489,6 +577,18 @@ def chunk_gather_mlp_dma(
         if ffn_mask.shape != (f,):
             raise ValueError(f"ffn_mask must be ({f},), got {ffn_mask.shape}")
         fmask = ffn_mask.astype(jnp.float32)[None, :]
+    quantized = scales is not None
+    if quantized:
+        sg, su, sd = scales
+        if sg.shape != (n // block_rows,) or su.shape != (n // block_rows,):
+            raise ValueError(
+                f"gate/up scales must be ({n // block_rows},), "
+                f"got {sg.shape}/{su.shape}"
+            )
+        if sd.shape != (f // block_rows,):
+            raise ValueError(
+                f"down scales must be ({f // block_rows},), got {sd.shape}"
+            )
     n_slots = prefetch_depth + 1
     # h (B, F) occupies the same positional kernel-ref slot either way:
     # second OUTPUT when the caller wants it, first SCRATCH when not (so a
@@ -499,27 +599,36 @@ def chunk_gather_mlp_dma(
     if return_h:
         out_shape = (out_shape, jax.ShapeDtypeStruct((b, f), jnp.float32))
     h_scratch = [] if return_h else [pltpu.VMEM((b, f), jnp.float32)]
+    in_specs = [
+        vmem,  # x
+        pl.BlockSpec(memory_space=_ANY),  # w_gate
+        pl.BlockSpec(memory_space=_ANY),  # w_up
+        pl.BlockSpec(memory_space=_ANY),  # w_down
+        vmem,  # ffn mask
+    ]
+    operands = [starts, sizes, x, w_gate, w_up, w_down, fmask]
+    scale_slots, scale_sems = [], []
+    if quantized:
+        in_specs += [pl.BlockSpec(memory_space=_ANY)] * 3  # scales lanes
+        operands += [s.astype(jnp.float32) for s in (sg, su, sd)]
+        scale_slots = [pltpu.VMEM((n_slots, 1), jnp.float32)] * 3
+        scale_sems = [pltpu.SemaphoreType.DMA((n_slots,))] * 3
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(),
-        in_specs=[
-            vmem,  # x
-            pl.BlockSpec(memory_space=_ANY),  # w_gate
-            pl.BlockSpec(memory_space=_ANY),  # w_up
-            pl.BlockSpec(memory_space=_ANY),  # w_down
-            vmem,  # ffn mask
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         scratch_shapes=h_scratch + [
             pltpu.VMEM((n_slots, block_rows, tile_f), w_gate.dtype),
             pltpu.VMEM((n_slots, block_rows, tile_f), w_up.dtype),
             pltpu.VMEM((n_slots, block_rows, tile_d), w_down.dtype),
+        ] + scale_slots + [
             pltpu.VMEM((b, tile_f), jnp.float32),
             pltpu.VMEM((b, tile_f), jnp.float32),
             pltpu.SemaphoreType.DMA((n_slots,)),
             pltpu.SemaphoreType.DMA((n_slots,)),
             pltpu.SemaphoreType.DMA((n_slots,)),
-        ],
+        ] + scale_sems,
     )
     out = pl.pallas_call(
         functools.partial(
@@ -531,9 +640,10 @@ def chunk_gather_mlp_dma(
             n_slots=n_slots,
             n_f_tiles=f // tile_f,
             n_d_tiles=d // tile_d,
+            quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(starts, sizes, x, w_gate, w_up, w_down, fmask)
+    )(*operands)
     return out

@@ -1,0 +1,87 @@
+"""Per-chunk int8 quantization for offloaded weight rows (PR 6 tentpole).
+
+Offloaded chunks ship at 8 bits with one f32 scale per ``block_rows`` row
+block — the same 8-row granularity as the kernel chunk tables, so every
+DMA step of the gather kernels covers exactly ONE scale. The storage
+format per (N, D) matrix:
+
+  * payload  ``q``  — int8, shape (N, D): symmetric per-block quantization,
+    ``q = clip(round(w / scale), -127, 127)``;
+  * scales lane ``s`` — float32, shape (N // block_rows,):
+    ``scale_b = max|w[b*block_rows:(b+1)*block_rows, :]| / 127``.
+
+A zero-magnitude block gets scale 0 and payload 0 — dequantization then
+multiplies 0·0 = 0 exactly (the scale=0 guard: the divide uses
+``where(scale > 0, scale, 1)`` so no inf/nan ever enters the payload).
+
+Dequantization is ``q.astype(f32) * scale`` — one multiply per element —
+performed *inside* the DMA gather kernels (upcast in VMEM, accumulate in
+f32) and, elementwise-identically, by the reference backend's schedule
+twin, keeping the two backends bitwise equal at ``--wbits 8``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+SCALE_BYTES = 4.0  # one f32 scale per block_rows rows
+
+# stacked-param leaves produced by quantize_params: "<name>_q8" / "<name>_sc"
+QUANT_SUFFIX_PAYLOAD = "_q8"
+QUANT_SUFFIX_SCALE = "_sc"
+
+
+def quantize_rows(
+    w: jnp.ndarray, block_rows: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize an (N, D) matrix to (int8 payload, per-block f32 scales).
+
+    N must be a multiple of ``block_rows`` (the kernel backend validates
+    this for every sparsifiable site already).
+    """
+    n, d = w.shape
+    if n % block_rows != 0:
+        raise ValueError(
+            f"rows ({n}) must be a multiple of block_rows ({block_rows})"
+        )
+    nb = n // block_rows
+    blocks = w.astype(jnp.float32).reshape(nb, block_rows, d)
+    amax = jnp.max(jnp.abs(blocks), axis=(1, 2))
+    scales = amax / INT8_QMAX
+    safe = jnp.where(scales > 0, scales, 1.0)  # scale=0 guard
+    q = jnp.clip(
+        jnp.round(blocks / safe[:, None, None]), -INT8_QMAX, INT8_QMAX
+    ).astype(jnp.int8)
+    return q.reshape(n, d), scales
+
+
+def dequantize_rows(
+    q: jnp.ndarray, scales: jnp.ndarray, block_rows: int = 8
+) -> jnp.ndarray:
+    """Inverse of ``quantize_rows``: f32 (N, D), exact elementwise
+    ``q * scale`` — the arithmetic both backends perform."""
+    n, d = q.shape
+    nb = n // block_rows
+    blocks = q.astype(jnp.float32).reshape(nb, block_rows, d)
+    return (blocks * scales[:, None, None]).reshape(n, d)
+
+
+def quantize_params(
+    layers: Dict[str, jnp.ndarray], names: Tuple[str, ...], block_rows: int = 8
+) -> Dict[str, jnp.ndarray]:
+    """Quantize the named stacked (L, N, D) weight leaves of a layer-stack
+    param dict; returns the new ``<name>_q8`` / ``<name>_sc`` leaves (with
+    the leading L dim preserved, so they ride the decode ``lax.scan``
+    unchanged). Missing names are skipped (arch families differ)."""
+    out: Dict[str, jnp.ndarray] = {}
+    quant = jax.vmap(lambda w: quantize_rows(w, block_rows))
+    for name in names:
+        if name not in layers:
+            continue
+        q, s = quant(layers[name])
+        out[name + QUANT_SUFFIX_PAYLOAD] = q
+        out[name + QUANT_SUFFIX_SCALE] = s
+    return out

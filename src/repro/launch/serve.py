@@ -49,6 +49,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "the decode plan's chunk tables (interpret mode "
                          "off-TPU, compiled on TPU). Tokens are "
                          "byte-identical across backends.")
+    ap.add_argument("--wbits", type=int, choices=(16, 8), default=16,
+                    help="offloaded chunk storage width: 16 = fp16 payload, "
+                         "8 = int8 payload + one f32 scale per 8-row block, "
+                         "dequantized inside the gather kernels (and "
+                         "identically by the reference twin — tokens stay "
+                         "byte-identical across backends at fixed wbits). "
+                         "At 8 every byte/latency figure prices the "
+                         "quantized rows, so the same I/O budget admits "
+                         "about twice the neurons.")
     ap.add_argument("--sparsity", type=float, default=0.4)
     ap.add_argument("--device", choices=("nano", "agx"), default="nano")
     ap.add_argument("--batch", type=int, default=2)
@@ -102,7 +111,7 @@ def main():
                       plan_refresh_interval=args.plan_refresh_interval,
                       cache_mb=args.cache_mb, overlap=args.overlap,
                       prefetch_depth=args.prefetch_depth,
-                      backend=args.backend)
+                      backend=args.backend, wbits=args.wbits)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -140,7 +149,7 @@ def main():
           f"overlap_efficiency {s['overlap_efficiency']:.3f}  "
           f"select_overhead {s['select_overhead_s']*1e3:.2f} ms")
     print(f"[total] method={args.method} backend={args.backend} "
-          f"sparsity={args.sparsity} "
+          f"wbits={args.wbits} sparsity={args.sparsity} "
           f"refresh_interval={args.plan_refresh_interval} "
           f"cache_mb={eng.cache_mb:g} "
           f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms  "

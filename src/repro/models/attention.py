@@ -314,15 +314,23 @@ def decode_attention(
     window: Optional[int],
     prefix: str = "",
     project_out: bool = True,
+    q: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Single-token attention against a (possibly rotating) cache.
 
     ``length`` may be a scalar (whole batch at the same position) or a (b,)
-    vector (continuous batching: one independent request per batch row)."""
+    vector (continuous batching: one independent request per batch row).
+
+    ``q``: optional precomputed q projection (b, 1, n_heads*head_dim) —
+    the planned decode path computes it through the execution backend
+    (kernel chunk gather / reference twin) instead of the dense matmul
+    here; RoPE still applies below either way."""
     b, one, d = x.shape
     p = prefix
     phys = layer_k.shape[1]
-    q = (x @ params[f"{p}wq"]).reshape(b, 1, n_heads, head_dim)
+    if q is None:
+        q = x @ params[f"{p}wq"]
+    q = q.reshape(b, 1, n_heads, head_dim)
     if rope_theta is not None:
         pos = jnp.broadcast_to(jnp.reshape(length - 1, (-1, 1)), (b, 1))
         q = apply_rope(q, pos, rope_theta)
@@ -413,11 +421,20 @@ def project_kv_for_decode(
     length: jnp.ndarray,
     rope_theta: Optional[float],
     prefix: str = "",
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``kv``: optional precomputed (k, v) projections (each (b, 1,
+    n_kv_heads*head_dim)) from the planned decode path's execution-backend
+    dispatch; RoPE on k still applies below either way."""
     b = x.shape[0]
     p = prefix
-    k = (x @ params[f"{p}wk"]).reshape(b, 1, n_kv_heads, head_dim)
-    v = (x @ params[f"{p}wv"]).reshape(b, 1, n_kv_heads, head_dim)
+    if kv is None:
+        k = x @ params[f"{p}wk"]
+        v = x @ params[f"{p}wv"]
+    else:
+        k, v = kv
+    k = k.reshape(b, 1, n_kv_heads, head_dim)
+    v = v.reshape(b, 1, n_kv_heads, head_dim)
     if rope_theta is not None:
         pos = jnp.broadcast_to(jnp.reshape(length, (-1, 1)), (b, 1))
         k = apply_rope(k, pos, rope_theta)

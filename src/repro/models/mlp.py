@@ -25,8 +25,17 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.quantize import QUANT_SUFFIX_PAYLOAD, QUANT_SUFFIX_SCALE
 from ..sharding import shard_act
 from .common import ParamDef, swish
+
+
+def _stored(params, name: str, quantized: bool):
+    """One matrix in the planned path's storage form: (int8 payload,
+    per-block scales) at wbits=8, (fp weight, None) otherwise."""
+    if quantized:
+        return params[name + QUANT_SUFFIX_PAYLOAD], params[name + QUANT_SUFFIX_SCALE]
+    return params[name], None
 
 
 def mlp_param_defs(d_model: int, d_ff: int, prefix: str = "") -> Dict[str, ParamDef]:
@@ -68,17 +77,24 @@ def swiglu_mlp_planned(
     starts: jnp.ndarray,  # (2, K) kernel plan lanes (hidden_mlp, ffn)
     sizes: jnp.ndarray,  # (2, K)
     prefix: str = "",
+    quantized: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """The planned-decode sparse SwiGLU: one execution-backend dispatch for
     gate/up/down off the decode plan's chunk-table lanes. Returns
     (y (b, s, d) in x.dtype, h (b·s, d_ff) f32 — the UNMASKED SwiGLU
     intermediate whose |·| the caller records as the next refresh's
-    ffn-site importance)."""
+    ffn-site importance). ``quantized`` streams the int8 payload + scale
+    leaves (wbits=8 storage, kernels/quantize.py) instead of the fp
+    weights."""
     p = prefix
     b, s, d = x.shape
+    wg, sg = _stored(params, f"{p}w_gate", quantized)
+    wu, su = _stored(params, f"{p}w_up", quantized)
+    wd, sd = _stored(params, f"{p}w_down", quantized)
+    scales = (sg, su, sd) if quantized else None
     y, h = backend.swiglu_mlp(
-        params[f"{p}w_gate"], params[f"{p}w_up"], params[f"{p}w_down"],
-        x.reshape(b * s, d), hidden_mask, ffn_mask, starts, sizes,
+        wg, wu, wd,
+        x.reshape(b * s, d), hidden_mask, ffn_mask, starts, sizes, scales,
     )
     return y.astype(x.dtype).reshape(b, s, -1), h
 
@@ -92,19 +108,23 @@ def gelu_mlp_planned(
     hidden_table: Tuple[jnp.ndarray, jnp.ndarray],  # (starts, sizes) (K,)
     ffn_table: Tuple[jnp.ndarray, jnp.ndarray],
     prefix: str = "",
+    quantized: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Planned-decode sparse non-gated MLP (whisper/starcoder c_fc/c_proj):
     two single-site backend projections with the gelu in f32 between them
     (identical on both backends, so parity rests on ``project`` alone).
-    Returns (y (b, s, d) in x.dtype, mid (b·s, d_ff) f32 pre-ffn-mask)."""
+    Returns (y (b, s, d) in x.dtype, mid (b·s, d_ff) f32 pre-ffn-mask).
+    ``quantized`` streams the int8 payload + scale leaves (wbits=8)."""
     p = prefix
     b, s, d = x.shape
+    w_fc, s_fc = _stored(params, f"{p}w_fc", quantized)
+    w_proj, s_proj = _stored(params, f"{p}w_proj", quantized)
     mid = backend.project(
-        params[f"{p}w_fc"], x.reshape(b * s, d), hidden_mask, *hidden_table
+        w_fc, x.reshape(b * s, d), hidden_mask, *hidden_table, s_fc
     ) + params[f"{p}b_fc"].astype(jnp.float32)
     mid = jax.nn.gelu(mid)
     y = backend.project(
-        params[f"{p}w_proj"], mid, ffn_mask, *ffn_table
+        w_proj, mid, ffn_mask, *ffn_table, s_proj
     ) + params[f"{p}b_proj"].astype(jnp.float32)
     return y.astype(x.dtype).reshape(b, s, -1), mid
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..kernels.quantize import QUANT_SUFFIX_PAYLOAD, QUANT_SUFFIX_SCALE
 from ..sharding import shard_act
 from .attention import (
     attention_param_defs,
@@ -87,6 +88,31 @@ def _apply_mask(x, mask):
     return x if mask is None else x * mask.astype(x.dtype)
 
 
+# the offloaded per-layer matrices governed by sparsification — the set the
+# engine quantizes (kernels/quantize.py) when serving at wbits=8; names
+# absent from an arch family (gelu vs swiglu MLPs) are skipped
+SPARSE_WEIGHT_NAMES = (
+    "wq", "wk", "wv", "wo",
+    "w_gate", "w_up", "w_down",  # swiglu family
+    "w_fc", "w_proj",  # non-gated gelu family
+)
+
+
+def _site_weight(params, sparse_ctx, name):
+    """One offloaded matrix in the form the planned decode path streams it:
+    the (int8 payload, per-block scales) pair at wbits=8 — the quantized
+    leaves the engine stores next to the fp originals — or (fp weight,
+    None) at 16 bits. The execution backend dequantizes inside the gather
+    (kernel) / before the identical contraction (reference twin)."""
+    if (
+        sparse_ctx is not None
+        and getattr(sparse_ctx, "wbits", 16) == 8
+        and name + QUANT_SUFFIX_PAYLOAD in params
+    ):
+        return params[name + QUANT_SUFFIX_PAYLOAD], params[name + QUANT_SUFFIX_SCALE]
+    return params[name], None
+
+
 def block_forward(
     params: Dict[str, jnp.ndarray],
     x: jnp.ndarray,  # (b, s, d)
@@ -150,16 +176,23 @@ def _planned_mlp(h, params, cfg: ModelConfig, sparse_ctx, plan):
     mask_g = plan["hidden_mlp"]["mask"]
     mask_f = plan["ffn"]["mask"]
     plan = sparse_ctx.record_importance("hidden_mlp", h, plan)
+    qname = "w_fc" if cfg.mlp == "gelu" else "w_gate"
+    quantized = (
+        getattr(sparse_ctx, "wbits", 16) == 8
+        and qname + QUANT_SUFFIX_PAYLOAD in params
+    )
     if cfg.mlp == "gelu":
         y, mid = gelu_mlp_planned(
             h, params, backend, mask_g, mask_f,
             sparse_ctx.kernel_tables(plan, "hidden_mlp"),
             sparse_ctx.kernel_tables(plan, "ffn"),
+            quantized=quantized,
         )
     else:
         starts, sizes = sparse_ctx.mlp_kernel_plan(plan)
         y, mid = swiglu_mlp_planned(
-            h, params, backend, mask_g, mask_f, starts, sizes
+            h, params, backend, mask_g, mask_f, starts, sizes,
+            quantized=quantized,
         )
     plan = sparse_ctx.record_importance("ffn", mid, plan)
     return y, jnp.float32(0.0), plan
@@ -264,8 +297,25 @@ def block_decode(
     mask_q, lat, plan = _site_mask(sparse_ctx, "hidden_attn", h, plan)
     io += lat
     attn_in = _apply_mask(h, mask_q)
+    q_pre = kv_pre = None
+    if plan is not None and "hidden_attn" in plan:
+        # planned path: the q/k/v projections run through the execution
+        # backend off the hidden_attn chunk table — the same reference-twin /
+        # chunk_gather_matmul_dma dispatch as every other site (closing the
+        # last masked-dense residue of the decode hot path)
+        b, s, _ = h.shape
+        hs, hz = sparse_ctx.kernel_tables(plan, "hidden_attn")
+        hflat = h.reshape(b * s, -1)
+        outs = []
+        for name in ("wq", "wk", "wv"):
+            w, sc = _site_weight(params, sparse_ctx, name)
+            y = sparse_ctx.backend.project(w, hflat, mask_q, hs, hz, sc)
+            outs.append(y.astype(h.dtype).reshape(b, s, -1))
+        q_pre, k_pre, v_pre = outs
+        kv_pre = (k_pre, v_pre)
     new_k, new_v = project_kv_for_decode(
-        attn_in, params, cfg.n_kv_heads, cfg.resolved_head_dim, length, cfg.rope_theta
+        attn_in, params, cfg.n_kv_heads, cfg.resolved_head_dim, length,
+        cfg.rope_theta, kv=kv_pre,
     )
     if cfg.kv_replicate > 1:  # shardable-cache replication (§Perf iteration A)
         from .attention import repeat_kv
@@ -287,6 +337,7 @@ def block_decode(
         cfg.rope_theta,
         window,
         project_out=sparse_ctx is None,
+        q=q_pre,
     )
     if sparse_ctx is not None:
         mask_o, lat, plan = _site_mask(sparse_ctx, "attn_out", attn_raw, plan)
@@ -296,9 +347,10 @@ def block_decode(
             # execution backend off the plan's chunk table (reference twin
             # or chunk_gather_matmul_dma — bitwise identical)
             b, s, _ = attn_raw.shape
+            w_o, sc_o = _site_weight(params, sparse_ctx, "wo")
             y_o = sparse_ctx.backend.project(
-                params["wo"], attn_raw.reshape(b * s, -1), mask_o,
-                *sparse_ctx.kernel_tables(plan, "attn_out"),
+                w_o, attn_raw.reshape(b * s, -1), mask_o,
+                *sparse_ctx.kernel_tables(plan, "attn_out"), sc_o,
             )
             attn_raw = y_o.astype(attn_raw.dtype).reshape(b, s, -1)
         else:

@@ -4,6 +4,7 @@ from .scheduler import Scheduler, SchedulerStats
 from .sparse_exec import (
     SERVE_METHODS,
     SPARSE_METHODS,
+    WBITS_CHOICES,
     SparseExecution,
     plan_hit_miss,
     plan_transfer_bytes,

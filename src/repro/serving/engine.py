@@ -62,8 +62,11 @@ from ..core.latency_model import MB
 from ..core.offload import ComputeModel, FlashOffloadSimulator
 from ..core.pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from ..models.model import Model
+from ..models.transformer import SPARSE_WEIGHT_NAMES
 from ..kernels.backend import validate_backend
+from ..kernels.quantize import quantize_params
 from .sparse_exec import (
+    WBITS_CHOICES,
     SparseExecution,
     plan_hit_miss,
     plan_transfer_bytes,
@@ -143,6 +146,7 @@ class ServeEngine:
         prefetch_depth: int = 1,
         compute_layer_scale=None,
         backend: str = "reference",
+        wbits: int = 16,
     ):
         """``backend``: the decode execution backend ("reference" |
         "kernel", see kernels/backend.py). "reference" computes the planned
@@ -171,9 +175,21 @@ class ServeEngine:
 
         ``compute_layer_scale``: optional (n_layers,) per-layer calibration
         multipliers for the pipeline's compute lane
-        (``ComputeModel.decode_layer_seconds``); None = uniform."""
+        (``ComputeModel.decode_layer_seconds``); None = uniform.
+
+        ``wbits``: offloaded chunk storage width (16 = fp16, 8 = int8
+        payload + per-block f32 scales, kernels/quantize.py). At 8 the
+        engine quantizes the sparsifiable layer matrices once at
+        construction (the ``_q8``/``_sc`` leaves ride the decode scan next
+        to the fp originals) and every byte/latency figure prices the
+        quantized rows; decode tokens stay byte-identical across backends
+        at fixed wbits. Ignored by ``dense_free`` (nothing streams)."""
         validate_method(method, allow_dense_free=True)
         validate_backend(backend)
+        if wbits not in WBITS_CHOICES:
+            raise ValueError(
+                f"wbits must be one of {WBITS_CHOICES}, got {wbits!r}"
+            )
         if plan_refresh_interval < 1:
             raise ValueError("plan_refresh_interval must be >= 1")
         self.backend = backend
@@ -202,8 +218,18 @@ class ServeEngine:
             else SparseExecution(model.cfg, device=device, sparsity=sparsity,
                                  method=method, reorderings=reorderings,
                                  cache_mb=self.cache_mb, backend=backend,
-                                 kernel_prefetch_depth=prefetch_depth)
+                                 kernel_prefetch_depth=prefetch_depth,
+                                 wbits=wbits)
         )
+        self.wbits = wbits
+        if self.sparse_ctx is not None and wbits == 8:
+            # quantize the offloaded matrices once: the int8 payload +
+            # per-block scale leaves (leading L dim preserved) join the
+            # stacked layer params so they ride the decode scan unchanged;
+            # prefill / append / the unplanned paths keep the fp originals
+            layers = dict(self.params["layers"])
+            layers.update(quantize_params(layers, SPARSE_WEIGHT_NAMES))
+            self.params = {**self.params, "layers": layers}
         # per-layer compute lane of the overlap pipeline: selecting methods
         # compute over their kept rows, dense/dense_free over everything
         eff_sparsity = sparsity if method in ("chunk", "topk") else 0.0

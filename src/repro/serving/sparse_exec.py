@@ -45,11 +45,24 @@ from ..core.baselines import topk_mask
 from ..core.chunking import BatchedChunkSelector, ChunkConfig, ChunkSelector
 from ..kernels.backend import ExecutionBackend, pick_tile
 from ..kernels.chunk_gather_dma import masks_to_block_tables
-from ..core.latency_model import DeviceProfile, LatencyTable, get_profile, profile_table
+from ..core.latency_model import (
+    DeviceProfile,
+    LatencyTable,
+    get_profile,
+    profile_table,
+    row_stream_bytes,
+)
 from ..core.offload import decode_site_shapes, normalize_site_sparsity
 from ..core.reorder import Reordering
 
-DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 (paper: fp16)
+DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 at wbits=16 (paper: fp16)
+
+# Offloaded chunk storage widths (kernels/quantize.py): 16 = fp16 payload,
+# 8 = int8 payload + one f32 scale per KERNEL_BLOCK_ROWS rows. All byte
+# pricing (selector utilities, residency budget, IOEvent.nbytes) goes
+# through core.latency_model.row_stream_bytes so every consumer sees the
+# same per-row cost including the amortized scale overhead.
+WBITS_CHOICES = (16, 8)
 
 # Kernel chunk-table geometry for the DMA gather kernels
 # (kernels/chunk_gather_dma.py): refresh steps convert each site's selected
@@ -158,19 +171,21 @@ class _Site:
         return jnp.int32(round((1.0 - self.sparsity) * self.n))
 
 
-def _site(n_rows: int, out_cols: Tuple[int, ...], device, sparsity: float) -> _Site:
-    primary_rb = out_cols[0] * DTYPE_BYTES
+def _site(n_rows: int, out_cols: Tuple[int, ...], device, sparsity: float,
+          wbits: int = 16) -> _Site:
+    primary_rb = row_stream_bytes(out_cols[0], wbits, KERNEL_BLOCK_ROWS)
     cfg = ChunkConfig.for_shape(n_rows, out_cols[0],
                                 device if isinstance(device, str) else device.name)
     selector = ChunkSelector.build(n_rows, primary_rb, device=device, cfg=cfg)
     tables = tuple(
-        profile_table(device, c * DTYPE_BYTES, max_rows=selector.max_size)
+        profile_table(device, row_stream_bytes(c, wbits, KERNEL_BLOCK_ROWS),
+                      max_rows=selector.max_size)
         for c in out_cols
     )
     dense = float(
         sum(
             get_profile(device if isinstance(device, str) else device.name)
-            .latency_bytes(n_rows * c * DTYPE_BYTES)
+            .latency_bytes(n_rows * row_stream_bytes(c, wbits, KERNEL_BLOCK_ROWS))
             for c in out_cols
         )
     )
@@ -193,6 +208,7 @@ class SparseExecution:
         backend: str | ExecutionBackend = "reference",
         kernel_prefetch_depth: int = 1,
         kernel_interpret: Optional[bool] = None,
+        wbits: int = 16,
     ):
         """``backend``: the decode EXECUTION backend for the planned decode
         path (kernels/backend.py) — ``"reference"`` computes the masked
@@ -219,10 +235,21 @@ class SparseExecution:
         selection (never loaded from flash) but always participate in
         compute. With ``cache_mb > 0`` the masks are re-expressed as
         residency state that is pre-warmed and pinned (PIN_SCORE — never
-        evicted, clipped to the byte budget)."""
+        evicted, clipped to the byte budget).
+
+        ``wbits``: offloaded chunk storage width — 16 (fp16 payload) or 8
+        (int8 payload + per-block f32 scales, kernels/quantize.py). At 8
+        every byte figure in the system (selector utilities, latency
+        tables, residency budget, ``IOEvent.nbytes``) prices the quantized
+        row, so the same I/O budget admits ~2x the rows."""
         validate_method(method)
         if cache_mb < 0:
             raise ValueError(f"cache_mb must be >= 0, got {cache_mb}")
+        if wbits not in WBITS_CHOICES:
+            raise ValueError(
+                f"wbits must be one of {WBITS_CHOICES}, got {wbits!r}"
+            )
+        self.wbits = int(wbits)
         self.cfg = cfg
         self.method = method
         self.reorderings = reorderings or {}
@@ -234,7 +261,7 @@ class SparseExecution:
         # shared table in core.offload so the overlap pipeline's compute
         # lane (ComputeModel.decode_layer_seconds) can never drift from it
         self.sites: Dict[str, _Site] = {
-            kind: _site(n, cols, device, sp[kind])
+            kind: _site(n, cols, device, sp[kind], self.wbits)
             for kind, n, cols in decode_site_shapes(cfg)
         }
         # static `cached` masks re-expressed in SELECTION (reordered) row
@@ -286,10 +313,11 @@ class SparseExecution:
                 "the original-order weights (pre-reorder the stored weights "
                 "offline, or use backend='reference')"
             )
-        # only the sites the kernel backend actually dispatches: attn_out's
-        # wo and the MLP matrices. hidden_attn's q/k/v keep the masked-dense
-        # form (see docs/serving.md), so their geometry is unconstrained.
-        kernel_sites = ("attn_out", "hidden_mlp", "ffn")
+        # every decode site dispatches through the kernels now: hidden_attn's
+        # q/k/v and attn_out's wo via chunk_gather_matmul_dma, the MLP
+        # matrices via the fused chunk_gather_mlp_dma (or matmul_dma for the
+        # non-gated gelu family) — so all site geometries are constrained.
+        kernel_sites = ("hidden_attn", "attn_out", "hidden_mlp", "ffn")
         for kind, n, cols in decode_site_shapes(cfg):
             if kind not in kernel_sites:
                 continue
@@ -564,11 +592,13 @@ class SparseExecution:
         dense streams every matrix every step regardless of budget."""
         return self.cache_mb > 0 and self.method in ("chunk", "topk")
 
-    def site_row_bytes(self, kind: str) -> int:
-        """Total bytes of one row across every matrix sharing the site."""
-        return int(sum(t.row_bytes for t in self.sites[kind].tables))
+    def site_row_bytes(self, kind: str) -> float:
+        """Total streamed bytes of one row across every matrix sharing the
+        site — fractional at wbits=8 (int8 payload + the per-block scale
+        overhead amortized over KERNEL_BLOCK_ROWS rows)."""
+        return float(sum(t.row_bytes for t in self.sites[kind].tables))
 
-    def sparsifiable_bytes(self, n_layers: int) -> int:
+    def sparsifiable_bytes(self, n_layers: int) -> float:
         """Total offloaded-weight footprint governed by sparsification."""
         return n_layers * sum(
             site.n * self.site_row_bytes(kind) for kind, site in self.sites.items()

@@ -18,8 +18,10 @@ from repro.configs.base import InputShape
 from repro.kernels import (
     ExecutionBackend,
     blocked_masked_matmul,
+    dequantize_rows,
     masks_to_block_tables,
     pick_tile,
+    quantize_rows,
     validate_backend,
 )
 from repro.models import build_model
@@ -90,6 +92,61 @@ def test_blocked_matmul_is_exact_masked_semantics():
 
 
 # ---------------------------------------------------------------------------
+# quantized chunk storage (PR 6): the same bitwise-twin property at 8 bits
+# ---------------------------------------------------------------------------
+
+
+def test_project_quantized_bitwise_parity():
+    """int8 payload + per-block scale lane through both backends: still
+    bitwise twins (the kernel's in-VMEM dequant multiply is elementwise the
+    reference twin's per-block multiply), and within half a quantization
+    step of the dequantized dense matmul."""
+    rng = np.random.default_rng(5)
+    n, d, b = 64, 48, 2
+    w = jnp.asarray(rng.normal(0, 0.1, (n, d)), jnp.bfloat16)
+    q, s = quantize_rows(w)
+    x = jnp.asarray(rng.normal(0, 1.0, (b, n)), jnp.bfloat16)
+    mask = jnp.asarray(rng.random(n) < 0.4)
+    starts, sizes = masks_to_block_tables(mask[None, :])
+    ref, ker = _backends()
+    y_ref = ref.project(q, x, mask, starts[0], sizes[0], s)
+    y_ker = ker.project(q, x, mask, starts[0], sizes[0], s)
+    assert y_ref.dtype == y_ker.dtype == jnp.float32
+    assert bool(jnp.all(y_ref == y_ker)), "quantized backends must agree bitwise"
+    dense = (x * mask.astype(x.dtype)).astype(jnp.float32) @ dequantize_rows(q, s)
+    assert float(jnp.max(jnp.abs(y_ref - dense))) < 1e-4
+
+
+def test_swiglu_mlp_quantized_bitwise_parity():
+    rng = np.random.default_rng(6)
+    n, f, d, b = 64, 96, 64, 2
+    wg = jnp.asarray(rng.normal(0, 0.1, (n, f)), jnp.bfloat16)
+    wu = jnp.asarray(rng.normal(0, 0.1, (n, f)), jnp.bfloat16)
+    wd = jnp.asarray(rng.normal(0, 0.1, (f, d)), jnp.bfloat16)
+    qg, sg = quantize_rows(wg)
+    qu, su = quantize_rows(wu)
+    qd, sd = quantize_rows(wd)
+    x = jnp.asarray(rng.normal(0, 1.0, (b, n)), jnp.bfloat16)
+    hidden = jnp.asarray(rng.random(n) < 0.5)
+    ffn = jnp.asarray(rng.random(f) < 0.3)
+    n_max = max(n, f)
+    masks = np.zeros((2, n_max), bool)
+    masks[0, :n] = np.asarray(hidden)
+    masks[1, :f] = np.asarray(ffn)
+    starts, sizes = masks_to_block_tables(jnp.asarray(masks))
+    ref, ker = _backends()
+    y_ref, h_ref = ref.swiglu_mlp(qg, qu, qd, x, hidden, ffn, starts, sizes,
+                                  scales=(sg, su, sd))
+    y_ker, h_ker = ker.swiglu_mlp(qg, qu, qd, x, hidden, ffn, starts, sizes,
+                                  scales=(sg, su, sd))
+    assert bool(jnp.all(y_ref == y_ker))
+    assert bool(jnp.all(h_ref == h_ker))
+    # h (the importance-recording intermediate) stays unmasked at 8 bits too
+    off = ~np.asarray(ffn)
+    assert float(jnp.max(jnp.abs(np.asarray(h_ref)[:, off]))) > 0.0
+
+
+# ---------------------------------------------------------------------------
 # validation
 # ---------------------------------------------------------------------------
 
@@ -122,6 +179,15 @@ def test_engine_validates_backend():
     model = build_model(cfg)
     with pytest.raises(ValueError, match="unknown execution backend"):
         ServeEngine(model, None, max_seq=32, batch_size=1, backend="nope")
+
+
+def test_wbits_validation():
+    cfg = get_config("internvl2-76b").reduced()
+    with pytest.raises(ValueError, match="wbits"):
+        SparseExecution(cfg, wbits=4)
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="wbits"):
+        ServeEngine(model, None, max_seq=32, batch_size=1, wbits=4)
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +226,25 @@ def test_decode_tokens_byte_identical_across_backends(vlm):
     sr, sk = eng_r.io_summary(), eng_k.io_summary()
     assert sr["io_est_s"] == pytest.approx(sk["io_est_s"], rel=0, abs=0)
     assert sr["miss_rows"] == sk["miss_rows"]
+
+
+def test_decode_tokens_byte_identical_at_wbits8(vlm):
+    """The PR-6 acceptance criterion: greedy decode at --wbits 8 (int8
+    chunk payloads dequantized in-kernel) stays byte-identical between the
+    kernel backend and the reference twin, and the quantized run's total
+    modeled I/O bytes land strictly below the fp16 run's."""
+    cfg, model, params, batch = vlm
+    eng_r, out_r = _decode(model, params, batch, "reference", wbits=8)
+    eng_k, out_k = _decode(model, params, batch, "kernel", wbits=8)
+    assert bool(jnp.all(out_r == out_k)), (
+        "wbits=8 kernel-backend decode diverged from the reference backend"
+    )
+    sr, sk = eng_r.io_summary(), eng_k.io_summary()
+    assert sr["io_bytes"] == sk["io_bytes"]  # selection unchanged by backend
+    eng16, _ = _decode(model, params, batch, "reference")
+    assert sr["io_bytes"] < eng16.io_summary()["io_bytes"], (
+        "int8 chunk storage must move strictly fewer modeled bytes than fp16"
+    )
 
 
 @pytest.mark.slow

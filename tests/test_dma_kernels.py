@@ -10,11 +10,16 @@ import pytest
 from repro.core.offload import ComputeModel
 from repro.core.pipeline import PipelineModel
 from repro.kernels import (
+    blocked_masked_matmul,
+    chunk_gather_matmul_dma,
     chunk_gather_matmul_ref,
+    chunk_gather_mlp_dma,
     chunk_gather_mlp_ref,
     chunk_table_to_mask,
+    dequantize_rows,
     masks_to_block_tables,
     plan_to_kernel_table,
+    quantize_rows,
     sparse_matmul_dma,
     sparse_mlp_fused,
 )
@@ -179,6 +184,133 @@ def test_mlp_fused_full_lanes_equal_dense(rng):
     g = x @ wg
     dense = (g * (1.0 / (1.0 + jnp.exp(-g))) * (x @ wu)) @ wd
     assert _rel_err(y, dense) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# quantized chunk storage through the kernels (PR 6, satellite edge cases)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_quantized_matmul_kernel_vs_twin_bitwise(depth, rng):
+    """The in-kernel dequant (scales lane through the slot rotation) is
+    bitwise the reference twin's per-block multiply — at every prefetch
+    depth, on a chunk table covering the mask exactly."""
+    n, d, b = 128, 128, 2
+    w = jnp.asarray(rng.normal(0, 0.5, (n, d)), jnp.float32)
+    q, s = quantize_rows(w, 8)
+    x = jnp.asarray(rng.normal(0, 1, (b, n)), jnp.float32)
+    mask = rng.random(n) < 0.5
+    ks, kz = plan_to_kernel_table(mask, 8, n // 8, 64)
+    # the twin sees the block-rounded mask (what the kernel actually gathers)
+    cov = np.asarray(chunk_table_to_mask(jnp.asarray(ks), jnp.asarray(kz), n))
+    y = chunk_gather_matmul_dma(q, x, jnp.asarray(ks), jnp.asarray(kz), s,
+                                max_chunk_rows=64, prefetch_depth=depth,
+                                interpret=True)
+    y_twin = blocked_masked_matmul(x * cov.astype(np.float32), q, 8, s)
+    assert bool(jnp.all(y == y_twin))
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_quantized_zero_magnitude_chunk(depth, rng):
+    """A selected chunk whose rows are entirely zero: scale 0, payload 0 —
+    the kernel's dequant multiply must yield exact zeros for that block's
+    contribution (the scale=0 guard), with the other chunks unaffected."""
+    n, d = 64, 128
+    w = np.asarray(rng.normal(0, 0.5, (n, d)), np.float32)
+    w[8:16] = 0.0  # one full block of zeros, selected below
+    q, s = quantize_rows(jnp.asarray(w), 8)
+    assert float(s[1]) == 0.0
+    x = jnp.asarray(rng.normal(0, 1, (2, n)), jnp.float32)
+    ks = jnp.asarray([0, 32], jnp.int32)  # covers rows 0..32 incl. the zeros
+    kz = jnp.asarray([32, 16], jnp.int32)
+    y = chunk_gather_matmul_dma(q, x, ks, kz, s, max_chunk_rows=32,
+                                prefetch_depth=depth, interpret=True)
+    yref = chunk_gather_matmul_ref(dequantize_rows(q, s), x, ks, kz)
+    assert _rel_err(y, yref) < 1e-6
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_quantized_all_padded_plan(depth, rng):
+    """Every quantized plan lane padded (size 0) → exact zeros; the scales
+    lane is fetched through the same inactive-step skip."""
+    w = np.asarray(rng.normal(0, 1, (64, 128)), np.float32)
+    q, s = quantize_rows(jnp.asarray(w), 8)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64)), jnp.float32)
+    z = jnp.zeros((5,), jnp.int32)
+    y = chunk_gather_matmul_dma(q, x, z, z, s, max_chunk_rows=32,
+                                prefetch_depth=depth, interpret=True)
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+
+
+def test_quantized_k_exceeds_real_chunks(rng):
+    """K far beyond the real chunk count: the padded tail must not fetch
+    (or dequantize) anything, and the schedule stays depth-invariant."""
+    n, d = 64, 128
+    w = np.asarray(rng.normal(0, 1, (n, d)), np.float32)
+    q, s = quantize_rows(jnp.asarray(w), 8)
+    x = jnp.asarray(rng.normal(0, 1, (2, n)), jnp.float32)
+    ks = np.zeros(32, np.int32)
+    kz = np.zeros(32, np.int32)
+    ks[0], kz[0] = 8, 16
+    outs = [
+        chunk_gather_matmul_dma(q, x, jnp.asarray(ks), jnp.asarray(kz), s,
+                                max_chunk_rows=32, prefetch_depth=depth,
+                                interpret=True)
+        for depth in DEPTHS
+    ]
+    yref = chunk_gather_matmul_ref(dequantize_rows(q, s), x, ks, kz)
+    for y in outs:
+        assert _rel_err(y, yref) < 1e-6
+    for y in outs[1:]:
+        assert bool(jnp.all(y == outs[0]))
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_quantized_saturation_extremes(depth):
+    """Blocks pinned at the int8 extremes (±127 payload): the dequant must
+    reproduce the extreme values exactly — no overflow, no off-by-one in
+    the clip."""
+    n, d = 32, 128
+    w = np.zeros((n, d), np.float32)
+    w[:8] = 4.0
+    w[8:16] = -4.0
+    w[16:24, 0] = 1e-3  # tiny-magnitude block exercises small scales
+    q, s = quantize_rows(jnp.asarray(w), 8)
+    assert int(jnp.max(q)) == 127 and int(jnp.min(q)) == -127
+    x = jnp.asarray(np.ones((1, n), np.float32))
+    ks = jnp.asarray([0], jnp.int32)
+    kz = jnp.asarray([32], jnp.int32)
+    y = chunk_gather_matmul_dma(q, x, ks, kz, s, max_chunk_rows=32,
+                                prefetch_depth=depth, interpret=True)
+    yref = chunk_gather_matmul_ref(dequantize_rows(q, s), x, ks, kz)
+    assert _rel_err(y, yref) < 1e-6
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_quantized_mlp_fused_parity(depth, rng):
+    """The fused MLP with all three weights quantized (three scale lanes
+    riding the rotation) against the dequantized-weights oracle."""
+    n, f, d, b = 128, 256, 128, 2
+    wg = jnp.asarray(rng.normal(0, 0.2, (n, f)), jnp.float32)
+    wu = jnp.asarray(rng.normal(0, 0.2, (n, f)), jnp.float32)
+    wd = jnp.asarray(rng.normal(0, 0.2, (f, d)), jnp.float32)
+    qg, sg = quantize_rows(wg, 8)
+    qu, su = quantize_rows(wu, 8)
+    qd, sd = quantize_rows(wd, 8)
+    x = jnp.asarray(rng.normal(0, 1, (b, n)), jnp.float32)
+    th = plan_to_kernel_table(rng.random(n) < 0.7, 8, n // 8, 64)
+    tf = plan_to_kernel_table(rng.random(f) < 0.3, 8, f // 8, 64)
+    s2, z2 = _stack_lanes([th, tf], max(n, f) // 8)
+    y = chunk_gather_mlp_dma(qg, qu, qd, x, s2, z2, scales=(sg, su, sd),
+                             max_chunk_rows=64, prefetch_depth=depth,
+                             interpret=True)
+    yref = chunk_gather_mlp_ref(
+        dequantize_rows(qg, sg), dequantize_rows(qu, su),
+        dequantize_rows(qd, sd), x, s2, z2,
+    )
+    assert _rel_err(y, yref) < 1e-5
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,139 @@
+"""The quantized chunk storage format (kernels/quantize.py) and its byte
+accounting (PR 6): per-8-row-block symmetric int8 payloads + f32 scale
+lanes, the scale=0 guard, saturation at the int8 extremes, the stacked
+param-leaf injection the engine performs at wbits=8, and the fractional
+per-row byte pricing that selectors/residency cache see (satellite 2:
+hand-computed payload + scale-overhead totals)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.latency_model import row_stream_bytes
+from repro.kernels import SCALE_BYTES, dequantize_rows, quantize_params, quantize_rows
+from repro.kernels.quantize import (
+    INT8_QMAX,
+    QUANT_SUFFIX_PAYLOAD,
+    QUANT_SUFFIX_SCALE,
+)
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize roundtrip + edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_error_bounded_by_half_step(rng):
+    w = jnp.asarray(rng.normal(0, 0.5, (64, 32)), jnp.float32)
+    q, s = quantize_rows(w, 8)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert q.shape == w.shape and s.shape == (8,)
+    wq = dequantize_rows(q, s, 8)
+    # symmetric rounding: per-block error ≤ scale/2 (half a quantization step)
+    err = jnp.max(jnp.abs(wq - w).reshape(8, 8, 32), axis=(1, 2))
+    assert bool(jnp.all(err <= s / 2 + 1e-7))
+
+
+def test_zero_magnitude_block_scale_zero_guard():
+    """An all-zero 8-row block must produce scale 0 and payload 0 — no
+    inf/nan from the divide, and dequantization is exactly zero."""
+    w = np.ones((24, 16), np.float32)
+    w[8:16] = 0.0  # middle block entirely zero
+    q, s = quantize_rows(jnp.asarray(w), 8)
+    assert float(s[1]) == 0.0
+    assert bool(jnp.all(jnp.isfinite(s)))
+    assert int(jnp.max(jnp.abs(q[8:16]))) == 0
+    wq = dequantize_rows(q, s, 8)
+    assert float(jnp.max(jnp.abs(wq[8:16]))) == 0.0
+    # the nonzero blocks still roundtrip
+    assert float(jnp.max(jnp.abs(wq[:8] - 1.0))) < 1e-6
+
+
+def test_max_magnitude_saturates_at_qmax():
+    """The block max maps exactly to ±127; nothing exceeds the int8 range
+    even when every element sits at the extreme."""
+    w = np.full((8, 4), 3.0, np.float32)
+    w[0, 0] = -3.0
+    q, s = quantize_rows(jnp.asarray(w), 8)
+    assert float(s[0]) == pytest.approx(3.0 / INT8_QMAX)
+    assert int(jnp.max(q)) == int(INT8_QMAX)
+    assert int(jnp.min(q)) == -int(INT8_QMAX)
+    wq = dequantize_rows(q, s, 8)
+    assert float(jnp.max(jnp.abs(wq - jnp.asarray(w)))) < 1e-6
+
+
+def test_rows_must_divide_block_rows():
+    with pytest.raises(ValueError, match="multiple of block_rows"):
+        quantize_rows(jnp.ones((12, 4)), 8)
+
+
+def test_quantize_params_leaf_names_and_shapes(rng):
+    layers = {
+        "wq": jnp.asarray(rng.normal(0, 1, (3, 16, 8)), jnp.bfloat16),
+        "w_gate": jnp.asarray(rng.normal(0, 1, (3, 24, 8)), jnp.bfloat16),
+        "ln": jnp.ones((3, 16)),  # not in names → untouched
+    }
+    out = quantize_params(layers, ("wq", "w_gate", "w_fc"))
+    # w_fc missing → skipped; ln not requested → absent
+    assert sorted(out) == ["w_gate_q8", "w_gate_sc", "wq_q8", "wq_sc"]
+    assert out["wq" + QUANT_SUFFIX_PAYLOAD].shape == (3, 16, 8)
+    assert out["wq" + QUANT_SUFFIX_SCALE].shape == (3, 2)
+    assert out["w_gate" + QUANT_SUFFIX_PAYLOAD].dtype == jnp.int8
+    # the L dim is a true vmap: layer 0's leaves match the single-matrix path
+    q0, s0 = quantize_rows(layers["wq"][0], 8)
+    assert bool(jnp.all(out["wq_q8"][0] == q0))
+    assert bool(jnp.all(out["wq_sc"][0] == s0))
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (satellite 2): payload + amortized scale overhead
+# ---------------------------------------------------------------------------
+
+
+def test_row_stream_bytes_hand_computed():
+    # fp16: plain 2 bytes/element, no scale lane
+    assert row_stream_bytes(128, 16) == 128 * 2.0
+    # int8: 1 byte/element + one f32 scale amortized over the 8-row block
+    assert row_stream_bytes(128, 8) == 128 * 1.0 + SCALE_BYTES / 8
+    assert row_stream_bytes(64, 8, block_rows=16) == 64 + SCALE_BYTES / 16
+    with pytest.raises(ValueError):
+        row_stream_bytes(128, 4)
+
+
+def test_site_row_bytes_includes_scale_overhead():
+    """SparseExecution's per-site pricing at wbits=8 equals the
+    hand-computed Σ over the site's matrices of (cols × 1 byte +
+    SCALE_BYTES/block_rows) — the exact payload+scales total an offloaded
+    row streams (satellite 2 regression)."""
+    from repro.configs import get_config
+    from repro.core.offload import decode_site_shapes
+    from repro.serving import SparseExecution
+    from repro.serving.sparse_exec import KERNEL_BLOCK_ROWS
+
+    cfg = get_config("internvl2-76b").reduced()
+    sp16 = SparseExecution(cfg, device="nano", sparsity=0.4, method="chunk")
+    sp8 = SparseExecution(cfg, device="nano", sparsity=0.4, method="chunk",
+                          wbits=8)
+    shapes = {kind: out_cols for kind, _n, out_cols in decode_site_shapes(cfg)}
+    assert set(shapes) == set(sp8.sites)
+    for kind, cols in shapes.items():
+        expect8 = sum(c * 1.0 + SCALE_BYTES / KERNEL_BLOCK_ROWS for c in cols)
+        expect16 = sum(c * 2.0 for c in cols)
+        assert sp8.site_row_bytes(kind) == pytest.approx(expect8)
+        assert sp16.site_row_bytes(kind) == pytest.approx(expect16)
+        # int8 strictly cheaper per row on every site
+        assert sp8.site_row_bytes(kind) < sp16.site_row_bytes(kind)
+
+
+def test_io_event_totals_match_hand_computed_bytes():
+    """The simulator's event log at a fractional row_bytes: nbytes and
+    total_bytes must be the exact Σ rows × (payload + amortized scale),
+    float-precise — not silently int-truncated."""
+    from repro.core.offload import FlashOffloadSimulator
+
+    sim = FlashOffloadSimulator(device="nano")
+    rb = row_stream_bytes(32, 8)  # 32 cols int8 → 32.5 bytes/row
+    mask = np.zeros(64, bool)
+    mask[:8] = True
+    mask[16:40] = True  # 32 selected rows in two chunks
+    sim.measure(mask, row_bytes=rb, name="q8")
+    assert sim.log[-1].nbytes == pytest.approx(32 * 32.5)
+    assert sim.total_bytes() == pytest.approx(32 * 32.5)

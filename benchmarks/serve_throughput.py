@@ -3,7 +3,7 @@ overlapped I/O–compute pipeline vs the serial charge, the chunk-plan reuse
 knob, the residency-cache budget sweep, and continuous-batching request
 latency per policy.
 
-Seven sections (reduced InternVL2 under the flash simulator):
+Eight sections (reduced InternVL2 under the flash simulator):
 
   * serve/fused_vs_loop — equal batch, equal policy: wall tokens/s of the
     one-jit ``lax.scan`` decode vs the seed's one-jit-call-per-token loop,
@@ -14,6 +14,13 @@ Seven sections (reduced InternVL2 under the flash simulator):
     asserting byte-identical greedy tokens across backends at wbits 16 AND
     8 (in-kernel dequantization vs the twin's identical per-block multiply)
     and emitting both wall tokens/s (interpret-mode kernels on CPU CI);
+  * serve/sharded_<d>x<m>_* — multi-chip sharded serving (``--mesh``, a
+    (data, model) host-device mesh simulated via
+    XLA_FLAGS=--xla_force_host_platform_device_count=8): per mesh shape
+    and wbits 16/8, asserts greedy tokens byte-identical to the 1×1
+    engine, total modeled I/O bytes equal, and the per-shard byte lanes
+    summing to the unsharded total; emits wall tokens/s per shape (rows
+    degrade to an explicit skipped marker below data×model devices);
   * serve/quantized_* — int8 chunk storage (``--wbits 8``) vs fp16 on BOTH
     the nano and agx profiles at equal settings (deterministic sim):
     asserts total modeled I/O bytes at 8 bits strictly below fp16 and the
@@ -56,6 +63,15 @@ the perf-trajectory guard for the prefetch pipeline.)
 """
 from __future__ import annotations
 
+import os
+
+# Must land before jax initializes: the sharded-mesh section needs >= 4
+# devices, simulated as host CPU devices on CI runners and laptops alike.
+# setdefault keeps a caller's own XLA_FLAGS intact, and when the module is
+# imported after jax already initialized (e.g. from a test) the section
+# simply skips below 4 devices.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import argparse
 import json
 import time
@@ -75,6 +91,7 @@ from repro.serving import (
     ServeEngine,
     SparseExecution,
 )
+from repro.sharding.serve import ServeMesh
 
 from .common import Rows, decode_backend_pair
 
@@ -104,12 +121,12 @@ def _setup():
 
 def _engine(model, params, method="chunk", refresh=1, seed=5, cache_mb=0.0,
             device="nano", overlap=True, prefetch_depth=1, backend="reference",
-            wbits=16):
+            wbits=16, mesh=None):
     return ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
                        device=device, sparsity=0.4, method=method, seed=seed,
                        plan_refresh_interval=refresh, cache_mb=cache_mb,
                        overlap=overlap, prefetch_depth=prefetch_depth,
-                       backend=backend, wbits=wbits)
+                       backend=backend, wbits=wbits, mesh=mesh)
 
 
 def _timed_decode(eng, decode_fn, tok0, n, repeats=3):
@@ -184,6 +201,65 @@ def bench_backend_parity(rows: Rows, model, params, batch,
             rows.add(f"serve/backend_{backend}{suffix}",
                      wall / decode_tokens * 1e6,
                      f"tokens_per_s={tps:.1f} identical_tokens=True "
+                     f"wbits={wbits}")
+
+
+def bench_sharded_mesh(rows: Rows, model, params, batch,
+                       decode_tokens=DECODE_TOKENS,
+                       shapes=((2, 2),)) -> None:
+    """Multi-chip sharded serving vs the single-device engine: per mesh
+    shape (data, model) and wbits 16/8, prefill + fused-scan decode at
+    equal settings, asserting (1) byte-identical greedy tokens — the
+    sharded-serving acceptance invariant: storage and I/O shard over the
+    model axis but every fold's operands are gathered and summed in
+    single-device block order (kernels/backend.py), so the mesh can never
+    change a token; (2) equal total modeled I/O bytes; (3) the per-shard
+    byte lanes (``shard_summary``) summing to that total. Emits wall
+    tokens/s per shape. Below data×model devices (the CI smoke sets
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax init,
+    as does this module when imported first) the shape degrades to an
+    explicit skipped row rather than silently vanishing."""
+    ndev = len(jax.devices())
+    for wbits in (16, 8):
+        suffix = f"w{wbits}"
+        eng0 = _engine(model, params, refresh=2, cache_mb=2.0, wbits=wbits)
+        tok0 = jnp.argmax(eng0.prefill(batch), -1)[:, None].astype(jnp.int32)
+        out0, _ = _timed_decode(eng0, eng0.decode, tok0, decode_tokens,
+                                repeats=1)
+        bytes0 = eng0.io_summary()["io_bytes"]
+        for d, m in shapes:
+            name = f"serve/sharded_{d}x{m}_{suffix}"
+            if ndev < d * m:
+                rows.add(name, 0.0,
+                         f"skipped=True devices={ndev} needed={d * m}")
+                continue
+            eng = _engine(model, params, refresh=2, cache_mb=2.0,
+                          wbits=wbits, mesh=ServeMesh.create(d, m))
+            tok = jnp.argmax(eng.prefill(batch), -1)[:, None].astype(jnp.int32)
+            out, wall = _timed_decode(eng, eng.decode, tok, decode_tokens,
+                                      repeats=1)
+            identical = bool(jnp.array_equal(out0, out))
+            assert identical, (
+                f"{name}: sharded greedy tokens diverged from the 1x1 mesh "
+                f"at wbits={wbits} — the operand-gather constraint in "
+                "kernels/backend.py is the byte-identity mechanism"
+            )
+            total = eng.io_summary()["io_bytes"]
+            assert abs(total - bytes0) <= 1e-6 * max(bytes0, 1.0), (
+                f"{name}: sharded total I/O bytes {total} != unsharded "
+                f"{bytes0} — per-shard accounting must repartition, never "
+                "rescale, the modeled traffic"
+            )
+            ss = eng.shard_summary()
+            per = ss["io_bytes_per_shard"]
+            assert abs(sum(per) - total) <= 1e-6 * max(total, 1.0), (
+                f"{name}: per-shard byte lanes {per} do not sum to the "
+                f"engine total {total}"
+            )
+            tps = decode_tokens * BATCH / wall
+            rows.add(name, wall / decode_tokens * 1e6,
+                     f"tokens_per_s={tps:.1f} identical_tokens={identical} "
+                     f"io_bytes_eq=True shards={ss['n_shards']} "
                      f"wbits={wbits}")
 
 
@@ -495,6 +571,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
         bench_fused_vs_loop(rows, model, params, batch, decode_tokens=8,
                             repeats=1, assert_speedup=False)
         bench_backend_parity(rows, model, params, batch, decode_tokens=8)
+        bench_sharded_mesh(rows, model, params, batch, decode_tokens=8)
         bench_overlap_pipeline(rows, model, params, batch, devices=("nano",),
                                decode_tokens=8, depth_engines=False)
         # both device profiles even in smoke: the int8-below-fp16 byte
@@ -509,6 +586,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
         return
     bench_fused_vs_loop(rows, model, params, batch)
     bench_backend_parity(rows, model, params, batch, repeats=3)
+    bench_sharded_mesh(rows, model, params, batch)
     bench_overlap_pipeline(rows, model, params, batch)
     bench_quantized_io(rows, model, params, batch)
     bench_plan_reuse(rows, model, params, batch)

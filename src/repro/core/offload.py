@@ -17,7 +17,7 @@ EXPERIMENTS.md that refers to Jetson hardware, and is labeled as such.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,6 +40,11 @@ class IOEvent:
     the DRAM residency-cache hit fraction of the rows the step *selected*
     (hit rows transfer nothing — the event's latency charges only the
     cache-miss bytes). 0.0 when the residency tier is disabled.
+
+    ``shard_bytes`` (sharded serving, sharding/serve.py): the event's
+    transfer volume split by the model shard whose flash tier each byte
+    streams from — sums to ``nbytes`` up to f32 round-off. None on the
+    unsharded path, so single-device event logs are unchanged.
     """
 
     name: str
@@ -47,6 +52,7 @@ class IOEvent:
     n_chunks: int
     latency_s: float
     hit_rate: float = 0.0
+    shard_bytes: Optional[Tuple[float, ...]] = None
 
 
 class FlashOffloadSimulator:
@@ -116,6 +122,7 @@ class FlashOffloadSimulator:
         name: str = "",
         hit_rate: float = 0.0,
         nbytes: float = 0.0,
+        shard_bytes: Optional[Sequence[float]] = None,
     ) -> float:
         """Turn an additive-model estimate (computed inside jit by the
         runtime) into a simulated measurement — same lift + jitter model as
@@ -132,7 +139,9 @@ class FlashOffloadSimulator:
         latency = est_s * lift * jitter
         self.log.append(
             IOEvent(name=name, nbytes=float(nbytes), n_chunks=n_chunks,
-                    latency_s=latency, hit_rate=float(hit_rate))
+                    latency_s=latency, hit_rate=float(hit_rate),
+                    shard_bytes=(tuple(float(b) for b in shard_bytes)
+                                 if shard_bytes is not None else None))
         )
         return latency
 
@@ -144,6 +153,7 @@ class FlashOffloadSimulator:
         name: str = "",
         hit_rates: Optional[np.ndarray] = None,
         nbytes: Optional[np.ndarray] = None,
+        shard_bytes: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Vectorized ``measure_from_estimate`` for the scan-fused decode
         path: one call consumes the whole (n_steps,) on-device estimate
@@ -155,7 +165,10 @@ class FlashOffloadSimulator:
         fraction to record on each logged IOEvent — the estimates themselves
         already charge only cache-miss bytes. ``nbytes`` (optional,
         (n_steps,)): per-step estimated transfer volume from the decode-plan
-        counters, recorded on the events for ``total_bytes()``."""
+        counters, recorded on the events for ``total_bytes()``.
+        ``shard_bytes`` (optional, (n_steps, n_shards)): each step's volume
+        split by source model shard (sharded serving), recorded on the
+        events for ``total_bytes_by_shard()``."""
         est = np.asarray(est_s, dtype=np.float64).reshape(-1)
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         # consume the RNG stream and the event log exactly as the scalar
@@ -175,6 +188,8 @@ class FlashOffloadSimulator:
                         n_chunks=n_chunks,
                         latency_s=float(lat),
                         hit_rate=float(hit_rates[i]) if hit_rates is not None else 0.0,
+                        shard_bytes=(tuple(float(b) for b in shard_bytes[i])
+                                     if shard_bytes is not None else None),
                     )
                 )
         return latency
@@ -189,6 +204,27 @@ class FlashOffloadSimulator:
 
     def total_bytes(self) -> float:
         return float(sum(e.nbytes for e in self.log))
+
+    def total_bytes_by_shard(self, n_shards: int) -> Tuple[float, ...]:
+        """Lifetime transfer volume split by source model shard. Events
+        logged with ``shard_bytes`` contribute their recorded split; events
+        without shard info (unsharded paths, legacy callers) split evenly —
+        so the tuple always sums to ``total_bytes()`` and degrades to
+        ``(total_bytes(),)`` at n_shards=1."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        out = np.zeros(n_shards, np.float64)
+        for e in self.log:
+            if e.shard_bytes is not None:
+                if len(e.shard_bytes) != n_shards:
+                    raise ValueError(
+                        f"event {e.name!r} recorded {len(e.shard_bytes)} "
+                        f"shard lanes, asked for {n_shards}"
+                    )
+                out += np.asarray(e.shard_bytes, np.float64)
+            else:
+                out += e.nbytes / n_shards
+        return tuple(float(b) for b in out)
 
     def reset(self) -> None:
         self.log.clear()

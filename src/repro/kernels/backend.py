@@ -38,6 +38,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .chunk_gather_dma import chunk_gather_matmul_dma, chunk_gather_mlp_dma
 
@@ -125,6 +126,20 @@ class ExecutionBackend:
     ``prefetch_depth``: the DMA kernels' VMEM slot count − 1; numerics are
     depth-invariant (the schedule only re-times the same fetches), so
     tokens stay byte-identical at every depth.
+
+    ``mesh`` (sharded serving, sharding/serve.py): when set, every weight
+    / scales operand is constrained to FULL REPLICATION at the compute
+    boundary — the explicit all-gather of each model shard's slice that
+    realizes the SwiGLU down-projection all-reduce as gather-then-ordered-
+    sum. Storage and I/O stay sharded (the leaves live model-partitioned
+    in device memory and the plan's per-shard byte lanes price each
+    shard's slice); only the fold's operands are gathered, so the f32
+    accumulation runs in the exact single-device block order and decode
+    tokens are byte-identical to the 1×1 mesh BY CONSTRUCTION. Without
+    the constraint GSPMD is free to partition the contraction over the
+    sharded rows and reassociate the partial sums — measurably not
+    bitwise-stable. Also pins the kernel path's operand layout (pallas
+    calls need replicated operands on host meshes anyway).
     """
 
     name: str = "reference"
@@ -133,6 +148,7 @@ class ExecutionBackend:
     block_rows: int = 8
     max_chunk_rows: int = 512
     tile_cap: int = 128
+    mesh: Optional[Mesh] = None
 
     @staticmethod
     def create(
@@ -142,6 +158,7 @@ class ExecutionBackend:
         block_rows: int = 8,
         max_chunk_rows: int = 512,
         tile_cap: int = 128,
+        mesh: Optional[Mesh] = None,
     ) -> "ExecutionBackend":
         validate_backend(name)
         if prefetch_depth < 0:
@@ -153,11 +170,22 @@ class ExecutionBackend:
             block_rows=block_rows,
             max_chunk_rows=max_chunk_rows,
             tile_cap=tile_cap,
+            mesh=mesh,
         )
 
     @property
     def is_kernel(self) -> bool:
         return self.name == "kernel"
+
+    def _gather(self, w: Optional[jnp.ndarray]) -> Optional[jnp.ndarray]:
+        """All-gather a (possibly model-sharded) weight/scales operand to
+        full replication at the compute boundary — see the class docstring.
+        No-op without a serve mesh."""
+        if self.mesh is None or w is None:
+            return w
+        return jax.lax.with_sharding_constraint(
+            w, NamedSharding(self.mesh, PartitionSpec())
+        )
 
     # -- single-site projection (attn_out wo; gelu MLP fc/proj) -------------
     def project(
@@ -176,6 +204,7 @@ class ExecutionBackend:
         storage) both backends dequantize per block before the identical
         f32 contraction, preserving the bitwise twin property."""
         xm = (x * mask.astype(x.dtype)).astype(jnp.float32)
+        w, scales = self._gather(w), self._gather(scales)
         if self.is_kernel:
             return chunk_gather_matmul_dma(
                 w, xm, starts, sizes, scales,
@@ -208,6 +237,11 @@ class ExecutionBackend:
         per-block scale lanes), dequantized identically on both backends."""
         xm = (x * hidden_mask.astype(x.dtype)).astype(jnp.float32)
         fm = ffn_mask.astype(jnp.float32)
+        w_gate, w_up, w_down = (
+            self._gather(w_gate), self._gather(w_up), self._gather(w_down)
+        )
+        if scales is not None:
+            scales = tuple(self._gather(s) for s in scales)
         if self.is_kernel:
             return chunk_gather_mlp_dma(
                 w_gate, w_up, w_down, xm, starts, sizes, fm, scales,

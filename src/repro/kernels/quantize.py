@@ -29,9 +29,22 @@ import jax.numpy as jnp
 INT8_QMAX = 127.0
 SCALE_BYTES = 4.0  # one f32 scale per block_rows rows
 
+# the quantization block granularity — one scale per this many weight rows,
+# matching the DMA kernels' chunk-table alignment (KERNEL_BLOCK_ROWS in
+# serving/sparse_exec.py is this same constant; the sharded serve path also
+# requires model-axis row slices to be multiples of it so every shard owns
+# whole quantization blocks)
+QUANT_BLOCK_ROWS = 8
+
 # stacked-param leaves produced by quantize_params: "<name>_q8" / "<name>_sc"
 QUANT_SUFFIX_PAYLOAD = "_q8"
 QUANT_SUFFIX_SCALE = "_sc"
+
+# fp decode-copy leaves created by the sharded serve path at wbits=16
+# ("<name>_dec"): a model-axis-sharded copy of the fp original that ONLY the
+# planned decode hot path streams — the original stays replicated so prefill
+# and frame-append matmuls keep their exact single-device reduction order
+DECODE_COPY_SUFFIX = "_dec"
 
 
 def quantize_rows(

@@ -31,6 +31,7 @@ from ..serving import (
     Scheduler,
     ServeEngine,
 )
+from ..sharding.serve import ServeMesh, validate_serve_mesh
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -88,6 +89,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "slot count - 1): 1 = double buffering, 0 = serial "
                          "schedule, >1 = deeper pipeline. Tokens are "
                          "byte-identical at every depth.")
+    ap.add_argument("--mesh", type=str, default="1,1", metavar="DATA,MODEL",
+                    help="serve-mesh shape 'data,model' (default 1,1 = "
+                         "unsharded): serve slots partition over the data "
+                         "axis (--batch and --streams must divide it), the "
+                         "offloaded decode weights / chunk payloads / block "
+                         "tables partition over the model axis (ffn rows "
+                         "must divide model x 8). Greedy tokens are "
+                         "byte-identical to the 1,1 mesh at both --wbits. "
+                         "Simulate devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--streams", type=int, default=0,
                     help=">0: continuous-batching mode — serve this many "
                          "Poisson-arriving requests through --batch slots")
@@ -97,12 +108,37 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def resolve_mesh(spec: str, cfg, batch: int, streams: int) -> ServeMesh:
+    """Parse + validate ``--mesh`` against ``--batch``/``--streams``/the
+    arch config BEFORE any model is built, so a bad mesh fails in
+    milliseconds with an actionable message instead of mid-prefill
+    (tests/test_sharded_serving.py pins the error cases)."""
+    parts = spec.split(",")
+    if len(parts) != 2:
+        raise ValueError(
+            f"--mesh must be 'data,model' (e.g. 2,2), got {spec!r}"
+        )
+    try:
+        data, model = (int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"--mesh axes must be integers, got {spec!r}"
+        ) from None
+    validate_serve_mesh(
+        data, model, batch=batch, streams=streams,
+        d_ff=(cfg.d_ff if (model > 1 and cfg.d_ff and not cfg.has_moe) else 0),
+        n_devices=len(jax.devices()),
+    )
+    return ServeMesh.create(data, model)
+
+
 def main():
     args = build_parser().parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    mesh = resolve_mesh(args.mesh, cfg, args.batch, args.streams)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     eng = ServeEngine(model, params, max_seq=args.max_seq, batch_size=args.batch,
@@ -111,7 +147,7 @@ def main():
                       plan_refresh_interval=args.plan_refresh_interval,
                       cache_mb=args.cache_mb, overlap=args.overlap,
                       prefetch_depth=args.prefetch_depth,
-                      backend=args.backend, wbits=args.wbits)
+                      backend=args.backend, wbits=args.wbits, mesh=mesh)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -148,6 +184,13 @@ def main():
           f"stall {s['decode_stall_s']*1e3:.2f} ms  "
           f"overlap_efficiency {s['overlap_efficiency']:.3f}  "
           f"select_overhead {s['select_overhead_s']*1e3:.2f} ms")
+    if eng.mesh.is_sharded:
+        ss = eng.shard_summary()
+        per = ", ".join(f"{b/1e6:.1f}" for b in ss["io_bytes_per_shard"])
+        print(f"[mesh] data={eng.mesh.data} model={eng.mesh.model}  "
+              f"slots/data_shard={ss['slots_per_data_shard']}  "
+              f"cache_mb/shard={ss['cache_mb_per_shard']:g}  "
+              f"io_bytes/shard MB=[{per}]")
     print(f"[total] method={args.method} backend={args.backend} "
           f"wbits={args.wbits} sparsity={args.sparsity} "
           f"refresh_interval={args.plan_refresh_interval} "

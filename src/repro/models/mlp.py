@@ -25,7 +25,11 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.quantize import QUANT_SUFFIX_PAYLOAD, QUANT_SUFFIX_SCALE
+from ..kernels.quantize import (
+    DECODE_COPY_SUFFIX,
+    QUANT_SUFFIX_PAYLOAD,
+    QUANT_SUFFIX_SCALE,
+)
 from ..sharding import shard_act
 from .common import ParamDef, swish
 
@@ -35,6 +39,10 @@ def _stored(params, name: str, quantized: bool):
     per-block scales) at wbits=8, (fp weight, None) otherwise."""
     if quantized:
         return params[name + QUANT_SUFFIX_PAYLOAD], params[name + QUANT_SUFFIX_SCALE]
+    if name + DECODE_COPY_SUFFIX in params:
+        # sharded serving at wbits=16: stream the model-axis-sharded decode
+        # copy; the replicated fp original stays for prefill/frame append
+        return params[name + DECODE_COPY_SUFFIX], None
     return params[name], None
 
 

@@ -19,7 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..kernels.quantize import QUANT_SUFFIX_PAYLOAD, QUANT_SUFFIX_SCALE
+from ..kernels.quantize import (
+    DECODE_COPY_SUFFIX,
+    QUANT_SUFFIX_PAYLOAD,
+    QUANT_SUFFIX_SCALE,
+)
 from ..sharding import shard_act
 from .attention import (
     attention_param_defs,
@@ -110,6 +114,10 @@ def _site_weight(params, sparse_ctx, name):
         and name + QUANT_SUFFIX_PAYLOAD in params
     ):
         return params[name + QUANT_SUFFIX_PAYLOAD], params[name + QUANT_SUFFIX_SCALE]
+    if sparse_ctx is not None and name + DECODE_COPY_SUFFIX in params:
+        # sharded serving at wbits=16: stream the model-axis-sharded decode
+        # copy; the replicated fp original stays for prefill/frame append
+        return params[name + DECODE_COPY_SUFFIX], None
     return params[name], None
 
 

@@ -65,6 +65,7 @@ from ..models.model import Model
 from ..models.transformer import SPARSE_WEIGHT_NAMES
 from ..kernels.backend import validate_backend
 from ..kernels.quantize import quantize_params
+from ..sharding.serve import ServeMesh, validate_serve_mesh
 from .sparse_exec import (
     WBITS_CHOICES,
     SparseExecution,
@@ -147,6 +148,7 @@ class ServeEngine:
         compute_layer_scale=None,
         backend: str = "reference",
         wbits: int = 16,
+        mesh: Optional[ServeMesh] = None,
     ):
         """``backend``: the decode execution backend ("reference" |
         "kernel", see kernels/backend.py). "reference" computes the planned
@@ -183,7 +185,14 @@ class ServeEngine:
         construction (the ``_q8``/``_sc`` leaves ride the decode scan next
         to the fp originals) and every byte/latency figure prices the
         quantized rows; decode tokens stay byte-identical across backends
-        at fixed wbits. Ignored by ``dense_free`` (nothing streams)."""
+        at fixed wbits. Ignored by ``dense_free`` (nothing streams).
+
+        ``mesh``: the (data, model) serve mesh (sharding/serve.py). Serve
+        slots partition over ``data`` (batch must divide); the offloaded
+        decode-streamed weights, chunk payloads/scales and per-shard block
+        tables partition over ``model``; selection stays replicated so
+        greedy tokens are byte-identical between the 1×1 mesh and any
+        (d, m) mesh at both wbits. None → unsharded (the default)."""
         validate_method(method, allow_dense_free=True)
         validate_backend(backend)
         if wbits not in WBITS_CHOICES:
@@ -192,6 +201,14 @@ class ServeEngine:
             )
         if plan_refresh_interval < 1:
             raise ValueError("plan_refresh_interval must be >= 1")
+        self.mesh = mesh if mesh is not None else ServeMesh.single()
+        if self.mesh.is_sharded:
+            validate_serve_mesh(
+                self.mesh.data, self.mesh.model, batch=batch_size,
+                d_ff=(model.cfg.d_ff
+                      if (self.mesh.model > 1 and model.cfg.d_ff
+                          and not model.cfg.has_moe) else 0),
+            )
         self.backend = backend
         self.model = model
         self.params = params
@@ -219,9 +236,16 @@ class ServeEngine:
                                  method=method, reorderings=reorderings,
                                  cache_mb=self.cache_mb, backend=backend,
                                  kernel_prefetch_depth=prefetch_depth,
-                                 wbits=wbits)
+                                 wbits=wbits, mesh=self.mesh)
         )
         self.wbits = wbits
+        # per-shard I/O accounting width (1 on the unsharded path — the
+        # shard lanes stay out of the logs entirely so single-device
+        # StepStats/IOEvents are byte-identical to pre-mesh engines)
+        self.n_shards = (
+            self.sparse_ctx.n_shards if self.sparse_ctx is not None
+            else (self.mesh.model if self.mesh.is_sharded else 1)
+        )
         if self.sparse_ctx is not None and wbits == 8:
             # quantize the offloaded matrices once: the int8 payload +
             # per-block scale leaves (leading L dim preserved) join the
@@ -230,6 +254,17 @@ class ServeEngine:
             layers = dict(self.params["layers"])
             layers.update(quantize_params(layers, SPARSE_WEIGHT_NAMES))
             self.params = {**self.params, "layers": layers}
+        if self.mesh.is_sharded:
+            # commit params to the mesh: decode-streamed leaves shard over
+            # 'model' (the _q8/_sc chunk leaves at wbits=8; fresh <name>_dec
+            # fp copies at 16 — originals stay replicated for prefill), the
+            # rest replicates. dense_free has nothing decode-streamed.
+            if self.sparse_ctx is not None:
+                self.params = self.mesh.place_params(
+                    self.params, wbits, SPARSE_WEIGHT_NAMES
+                )
+            else:
+                self.params = self.mesh.put_replicated(self.params)
         # per-layer compute lane of the overlap pipeline: selecting methods
         # compute over their kept rows, dense/dense_free over everything
         eff_sparsity = sparsity if method in ("chunk", "topk") else 0.0
@@ -237,7 +272,9 @@ class ServeEngine:
             model.cfg, sparsity=eff_sparsity, tokens=batch_size,
             layer_scale=compute_layer_scale,
         )
-        self.cache = model.init_cache(batch_size, max_seq)
+        self.cache = self.mesh.place_cache(
+            model.init_cache(batch_size, max_seq), self._cache_axes()
+        )
         self.stats: List[StepStats] = []
         self._plan = None  # chunk-plan carry, persists across decode calls
         self._select_s_per_refresh: Optional[float] = None  # lazy, wall-timed
@@ -258,7 +295,8 @@ class ServeEngine:
             h0, m0 = plan_hit_miss(plan)
             h1, m1 = plan_hit_miss(new_plan)
             db = plan_transfer_bytes(new_plan) - plan_transfer_bytes(plan)
-            return logits, cache, io, new_plan, h1 - h0, m1 - m0, db
+            dsb = self._plan_shard_bytes(new_plan) - self._plan_shard_bytes(plan)
+            return logits, cache, io, new_plan, h1 - h0, m1 - m0, db, dsb
 
         self._decode_one = jax.jit(_decode_one_impl)
         self._append = jax.jit(
@@ -269,19 +307,37 @@ class ServeEngine:
             lambda p, b: model.prefill(p, b, self.max_seq)
         )
 
+    def _cache_axes(self):
+        """The model's logical cache-axes pytree for mesh placement, or
+        None (→ fully replicated cache) for families that don't expose
+        one."""
+        try:
+            return self.model.cache_axes()
+        except (AttributeError, NotImplementedError):
+            return None
+
     # -- fused decode loop ----------------------------------------------------
     def _init_plan(self):
         if self.sparse_ctx is None:
             return {}
         return self.sparse_ctx.init_plan(self.model.cfg.n_layers)
 
+    def _plan_shard_bytes(self, plan) -> jnp.ndarray:
+        """Per-model-shard transfer bytes accumulated in ``plan``, shape
+        (n_shards,) — (0,)-summing zeros when there is no sparse context.
+        jit-safe (rides the decode step functions)."""
+        if self.sparse_ctx is None:
+            return jnp.zeros((self.n_shards,), jnp.float32)
+        return self.sparse_ctx.plan_shard_bytes(plan)
+
     def _decode_scan_impl(self, params, token, cache, n_tokens: int, plan):
         """One jit: scan ``decode_step_planned`` over n_tokens greedy steps.
 
         Returns (tokens (b, n), final cache, final plan, io (n, n_layers),
-        hits (n,), misses (n,), bytes (n,)) — per-step per-layer I/O
-        estimates plus residency-cache row/byte counters ride along.
-        Everything stays on device until the caller syncs once.
+        hits (n,), misses (n,), bytes (n,), shard_bytes (n, n_shards)) —
+        per-step per-layer I/O estimates plus residency-cache row/byte
+        counters and per-model-shard byte splits ride along. Everything
+        stays on device until the caller syncs once.
         """
         k = self.plan_refresh_interval
 
@@ -294,13 +350,17 @@ class ServeEngine:
             h0, m0 = plan_hit_miss(plan)
             h1, m1 = plan_hit_miss(new_plan)
             db = plan_transfer_bytes(new_plan) - plan_transfer_bytes(plan)
+            dsb = self._plan_shard_bytes(new_plan) - self._plan_shard_bytes(plan)
             nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            return (nxt, cache, new_plan), (nxt[:, 0], io, h1 - h0, m1 - m0, db)
+            return (nxt, cache, new_plan), (
+                nxt[:, 0], io, h1 - h0, m1 - m0, db, dsb
+            )
 
-        (_, cache, plan), (toks, ios, hits, misses, byts) = jax.lax.scan(
+        (_, cache, plan), (toks, ios, hits, misses, byts, sbyts) = jax.lax.scan(
             step, (token, cache, plan), jnp.arange(n_tokens)
         )
-        return toks.T, cache, plan, ios, hits, misses, byts  # toks: (n, b) -> (b, n)
+        # toks: (n, b) -> (b, n)
+        return toks.T, cache, plan, ios, hits, misses, byts, sbyts
 
     def _selection_seconds_per_refresh(self) -> float:
         """Wall seconds one refresh step spends on chunk selection: the
@@ -330,24 +390,31 @@ class ServeEngine:
         if self._plan is None:
             self._plan = self._init_plan()
         self._plan = reset_plan_counters(self._plan)
+        tokens = self.mesh.put_batch(tokens)
         t0 = time.perf_counter()
-        toks, self.cache, self._plan, ios, hits, misses, byts = self._decode_scan(
+        (toks, self.cache, self._plan, ios, hits, misses, byts,
+         sbyts) = self._decode_scan(
             self.params, tokens, self.cache, n_tokens, self._plan
         )
         # ONE blocking host transfer for the whole scan (per-layer estimates
         # + residency counters)
-        ios, hits, misses, byts = jax.device_get((ios, hits, misses, byts))
+        ios, hits, misses, byts, sbyts = jax.device_get(
+            (ios, hits, misses, byts, sbyts)
+        )
         ios = np.asarray(ios, np.float64)  # (n, n_layers)
         hits, misses = np.asarray(hits, np.float64), np.asarray(misses, np.float64)
         byts = np.asarray(byts, np.float64)
+        sbyts = np.asarray(sbyts, np.float64)  # (n, n_shards)
         if self.method == "dense":
             byts = np.full_like(byts, self._dense_step_bytes())
+            sbyts = np.full_like(sbyts, self._dense_step_bytes() / self.n_shards)
         wall = time.perf_counter() - t0
         io_steps = ios.sum(axis=1)
         rows = hits + misses
         hit_rates = np.where(rows > 0, hits / np.maximum(rows, 1.0), 0.0)
         sims = self.simulator.measure_from_estimate_batch(
-            io_steps, name="decode", hit_rates=hit_rates, nbytes=byts
+            io_steps, name="decode", hit_rates=hit_rates, nbytes=byts,
+            shard_bytes=sbyts if self.n_shards > 1 else None,
         )
         # the simulator's lift+jitter applies per step; spread it over the
         # step's layers proportionally so the pipeline sees simulated time
@@ -409,26 +476,34 @@ class ServeEngine:
         if self._plan is None:
             self._plan = self._init_plan()
         self._plan = reset_plan_counters(self._plan)
-        token = first_token
+        token = self.mesh.put_batch(first_token)
         out = [token]
         start_idx = len(self.stats)
         io_rows = []
         select_per_refresh = self._selection_seconds_per_refresh()
         for i in range(n_tokens):
             t0 = time.perf_counter()
-            logits, self.cache, io_vec, self._plan, dh, dm, db = self._decode_one(
+            (logits, self.cache, io_vec, self._plan, dh, dm, db,
+             dsb) = self._decode_one(
                 self.params, token, self.cache, self._plan, jnp.int32(i)
             )
             io_vec = np.asarray(io_vec, np.float64)  # the per-token host sync
             io = float(io_vec.sum())
             hit, miss = float(dh), float(dm)
             nbytes = self._dense_step_bytes() if self.method == "dense" else float(db)
+            if self.n_shards > 1:
+                if self.method == "dense":
+                    sb = (nbytes / self.n_shards,) * self.n_shards
+                else:
+                    sb = tuple(float(x) for x in np.asarray(dsb, np.float64))
+            else:
+                sb = None
             wall = time.perf_counter() - t0
             token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out.append(token)
             rate = hit / (hit + miss) if (hit + miss) > 0 else 0.0
             sim = self.simulator.measure_from_estimate(
-                io, name="decode", hit_rate=rate, nbytes=nbytes
+                io, name="decode", hit_rate=rate, nbytes=nbytes, shard_bytes=sb
             )
             io_rows.append(io_vec * (sim / io if io > 0 else 1.0))
             sel = select_per_refresh if (i % self.plan_refresh_interval) == 0 else 0.0
@@ -463,7 +538,10 @@ class ServeEngine:
             self.sparse_ctx.sparsifiable_bytes(self.model.cfg.n_layers)
             if self.sparse_ctx else 0.0
         )
-        sim = self.simulator.measure_from_estimate(est, name="prefill", nbytes=nbytes)
+        sim = self.simulator.measure_from_estimate(
+            est, name="prefill", nbytes=nbytes,
+            shard_bytes=self._even_shard_bytes(nbytes),
+        )
         self.stats.append(StepStats("prefill", n, est, sim, 0.0, wall,
                                     nbytes=float(nbytes)))
         self._plan = None  # new sequence → stale plan
@@ -485,8 +563,9 @@ class ServeEngine:
     def enable_slots(self):
         """Switch the cache to per-slot lengths: each batch row becomes an
         independent request slot (empty until ``admit_slot``)."""
-        self.cache = self.model.init_cache(self.batch_size, self.max_seq)
-        self.cache["length"] = jnp.zeros((self.batch_size,), jnp.int32)
+        cache = self.model.init_cache(self.batch_size, self.max_seq)
+        cache["length"] = jnp.zeros((self.batch_size,), jnp.int32)
+        self.cache = self.mesh.place_cache(cache, self._cache_axes())
         self._plan = None
 
     def admit_slot(self, slot: int, batch: Dict[str, jnp.ndarray]):
@@ -510,7 +589,8 @@ class ServeEngine:
             if self.sparse_ctx else 0.0
         )
         sim = self.simulator.measure_from_estimate(
-            est, name=f"admit[{slot}]", nbytes=nbytes
+            est, name=f"admit[{slot}]", nbytes=nbytes,
+            shard_bytes=self._even_shard_bytes(nbytes),
         )
         self.stats.append(
             StepStats("prefill", int(batch["tokens"].shape[1]), est, sim, 0.0, 0.0,
@@ -530,6 +610,15 @@ class ServeEngine:
         return np.asarray(self.cache["length"]).reshape(-1)
 
     # -- accounting ----------------------------------------------------------
+    def _even_shard_bytes(self, nbytes: float):
+        """Even per-model-shard split of a transfer that streams every
+        matrix contiguously (prefill / slot admission load ALL weights, so
+        each shard streams exactly its slice); None on the unsharded path
+        so single-device IOEvents are unchanged."""
+        if self.n_shards == 1:
+            return None
+        return (float(nbytes) / self.n_shards,) * self.n_shards
+
     def _dense_io(self) -> float:
         per_layer = self.sparse_ctx.dense_total_latency()
         return per_layer * self.model.cfg.n_layers
@@ -579,6 +668,30 @@ class ServeEngine:
             raise ValueError(f"hidden_s must be >= 0, got {hidden_s}")
         self.admitted_during_stall += 1
         self.stall_hidden_s += float(hidden_s)
+
+    def shard_summary(self) -> Dict[str, Any]:
+        """Per-shard rollup of the sharded serve path (mesh geometry,
+        per-model-shard transfer bytes, per-shard residency budget, slots
+        per data shard). Lives NEXT TO ``io_summary`` — whose key set is
+        pinned — rather than inside it; on the 1×1 mesh everything
+        degrades to one shard holding the unsharded totals.
+
+        ``io_bytes_per_shard`` sums exactly to ``io_summary()['io_bytes']``
+        (the ISSUE's accounting invariant): row-sharded sites split by each
+        shard's actual miss rows, everything else splits evenly.
+        ``cache_mb_per_shard`` is the uniform capacity split — resident
+        rows partition across model shards with the weights, so each shard
+        provisions 1/n_shards of the residency budget."""
+        per_shard = self.simulator.total_bytes_by_shard(self.n_shards)
+        return {
+            "mesh_data": self.mesh.data,
+            "mesh_model": self.mesh.model,
+            "n_shards": self.n_shards,
+            "io_bytes": float(sum(per_shard)),
+            "io_bytes_per_shard": [float(b) for b in per_shard],
+            "cache_mb_per_shard": self.cache_mb / self.n_shards,
+            "slots_per_data_shard": self.batch_size // self.mesh.data,
+        }
 
     def io_summary(self) -> Dict[str, float]:
         """Engine-lifetime I/O / pipeline / cache / admission rollup.

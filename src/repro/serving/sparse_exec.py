@@ -54,6 +54,7 @@ from ..core.latency_model import (
 )
 from ..core.offload import decode_site_shapes, normalize_site_sparsity
 from ..core.reorder import Reordering
+from ..sharding.serve import ServeMesh
 
 DTYPE_BYTES = 2  # offloaded weights stored bf16/fp16 at wbits=16 (paper: fp16)
 
@@ -149,7 +150,7 @@ def reset_plan_counters(plan):
     for kind, state in plan.items():
         if isinstance(state, dict):
             state = dict(state)
-            for key in ("hit", "miss", "bytes"):
+            for key in ("hit", "miss", "bytes", "hit_shard", "miss_shard"):
                 if key in state:
                     state[key] = jnp.zeros_like(state[key])
         out[kind] = state
@@ -209,6 +210,7 @@ class SparseExecution:
         kernel_prefetch_depth: int = 1,
         kernel_interpret: Optional[bool] = None,
         wbits: int = 16,
+        mesh: Optional[ServeMesh] = None,
     ):
         """``backend``: the decode EXECUTION backend for the planned decode
         path (kernels/backend.py) — ``"reference"`` computes the masked
@@ -241,7 +243,15 @@ class SparseExecution:
         (int8 payload + per-block f32 scales, kernels/quantize.py). At 8
         every byte figure in the system (selector utilities, latency
         tables, residency budget, ``IOEvent.nbytes``) prices the quantized
-        row, so the same I/O budget admits ~2x the rows."""
+        row, so the same I/O budget admits ~2x the rows.
+
+        ``mesh``: the serve-stack (data, model) mesh context
+        (sharding/serve.py). Selection stays REPLICATED — importance
+        vectors are constrained to full replication before any cross-batch
+        reduction so every shard selects identical chunks — while the
+        row-sharded sites' I/O splits by each model shard's contiguous row
+        slice (``miss_shard``/``hit_shard`` plan lanes; byte totals sum to
+        the unsharded figures). Defaults to the unsharded 1×1 mesh."""
         validate_method(method)
         if cache_mb < 0:
             raise ValueError(f"cache_mb must be >= 0, got {cache_mb}")
@@ -252,6 +262,14 @@ class SparseExecution:
         self.wbits = int(wbits)
         self.cfg = cfg
         self.method = method
+        self.mesh = mesh if mesh is not None else ServeMesh.single()
+        if self.mesh.is_sharded and reorderings:
+            raise ValueError(
+                "sharded serving does not support reorderings: per-shard "
+                "block tables and byte counters assume selection row order "
+                "equals storage row order (pre-reorder the stored weights "
+                "offline, or serve on the 1x1 mesh)"
+            )
         self.reorderings = reorderings or {}
         self.cached = cached or {}
         self.cache_mb = float(cache_mb)
@@ -263,6 +281,17 @@ class SparseExecution:
         self.sites: Dict[str, _Site] = {
             kind: _site(n, cols, device, sp[kind], self.wbits)
             for kind, n, cols in decode_site_shapes(cfg)
+        }
+        # per-shard I/O geometry: the sites whose STREAMED row dim shards
+        # over the model axis ('attn_out' streams wo rows, 'ffn' streams
+        # w_down/w_proj rows) get data-dependent per-shard miss counters —
+        # shard s owns contiguous rows [s*n/S, (s+1)*n/S). The col-sharded
+        # sites' rows replicate, so their bytes split evenly instead.
+        self.n_shards = self.mesh.model if self.mesh.is_sharded else 1
+        self.row_shards: Dict[str, int] = {
+            kind: (self.mesh.row_shard_count(site.n)
+                   if kind in ("attn_out", "ffn") else 1)
+            for kind, site in self.sites.items()
         }
         # static `cached` masks re-expressed in SELECTION (reordered) row
         # order: the pre-warmed, pinned portion of the dynamic residency tier
@@ -288,17 +317,21 @@ class SparseExecution:
         self.kernel_k = -(-self.batched.n_max // KERNEL_BLOCK_ROWS)
         # the decode execution backend (reference schedule twin vs DMA
         # kernels) — the planned decode path computes through it
-        self.backend = (
-            backend
-            if isinstance(backend, ExecutionBackend)
-            else ExecutionBackend.create(
+        if isinstance(backend, ExecutionBackend):
+            if self.mesh.is_sharded and backend.mesh is None:
+                # the backend's operand all-gather is what keeps sharded
+                # decode bitwise — never let a pre-built backend skip it
+                backend = dataclasses.replace(backend, mesh=self.mesh.mesh)
+            self.backend = backend
+        else:
+            self.backend = ExecutionBackend.create(
                 backend,
                 prefetch_depth=kernel_prefetch_depth,
                 interpret=kernel_interpret,
                 block_rows=KERNEL_BLOCK_ROWS,
                 max_chunk_rows=KERNEL_MAX_CHUNK_ROWS,
+                mesh=self.mesh.mesh,
             )
-        )
         if self.backend.is_kernel:
             self._validate_kernel_backend(cfg)
 
@@ -347,6 +380,13 @@ class SparseExecution:
             return plan
         from ..core.importance import importance
 
+        # replicate BEFORE the cross-batch reduction inside importance():
+        # on a data-sharded batch an unconstrained mean would let GSPMD
+        # psum partial sums per shard — a different f32 summation order
+        # than the 1x1 mesh, breaking bitwise token identity. With the
+        # explicit constraint every shard reduces the full batch in the
+        # single-device order. No-op on the unsharded path.
+        acts = self.mesh.replicate(acts)
         v = importance(acts)
         if kind in self.reorderings:
             v = self.reorderings[kind].apply_to_acts(v)
@@ -452,6 +492,19 @@ class SparseExecution:
                 hit = jnp.sum(m & res).astype(jnp.float32)
                 miss = jnp.sum(m & ~res).astype(jnp.float32)
                 nbytes = miss * jnp.float32(self.site_row_bytes(kind))
+                ns = self.row_shards[kind]
+                if ns > 1:
+                    # which model shard each miss row streams FROM: shard s
+                    # owns contiguous rows [s*n/S, (s+1)*n/S) — counted here
+                    # in selection (== storage) row order, the order the
+                    # sharded path guarantees (reorderings are rejected)
+                    seg = site.n // ns
+                    hit_shard = jnp.sum(
+                        (m & res).reshape(ns, seg), axis=1
+                    ).astype(jnp.float32)
+                    miss_shard = jnp.sum(
+                        (m & ~res).reshape(ns, seg), axis=1
+                    ).astype(jnp.float32)
                 if cache:
                     # recency/score eviction state: decay all, reinforce selected
                     score = RESIDENCY_DECAY * plan[kind]["score"] + jnp.where(
@@ -471,6 +524,9 @@ class SparseExecution:
                 entry = {"mask": m.astype(jnp.float32), "hit": hit,
                          "miss": miss, "bytes": nbytes,
                          "kstarts": kstarts[i], "ksizes": ksizes[i]}
+                if ns > 1:
+                    entry["hit_shard"] = hit_shard
+                    entry["miss_shard"] = miss_shard
                 if cache:
                     entry["score"] = score
                 outs[kind] = entry
@@ -484,6 +540,10 @@ class SparseExecution:
                          "miss": zero, "bytes": zero,
                          "kstarts": plan[kind]["kstarts"],
                          "ksizes": plan[kind]["ksizes"]}
+                ns = self.row_shards[kind]
+                if ns > 1:
+                    entry["hit_shard"] = jnp.zeros((ns,), jnp.float32)
+                    entry["miss_shard"] = jnp.zeros((ns,), jnp.float32)
                 if cache:
                     entry["score"] = plan[kind]["score"]
                 outs[kind] = entry
@@ -497,6 +557,13 @@ class SparseExecution:
             entry["hit"] = plan[kind]["hit"] + results[kind]["hit"]
             entry["miss"] = plan[kind]["miss"] + results[kind]["miss"]
             entry["bytes"] = plan[kind]["bytes"] + results[kind]["bytes"]
+            if "hit_shard" in results[kind]:
+                entry["hit_shard"] = (
+                    plan[kind]["hit_shard"] + results[kind]["hit_shard"]
+                )
+                entry["miss_shard"] = (
+                    plan[kind]["miss_shard"] + results[kind]["miss_shard"]
+                )
             entry["kstarts"] = results[kind]["kstarts"]
             entry["ksizes"] = results[kind]["ksizes"]
             if cache:
@@ -530,6 +597,9 @@ class SparseExecution:
     def _compute_mask(self, kind: str, site: _Site, acts: jnp.ndarray):
         from ..core.importance import importance
 
+        # same replication-before-reduction contract as record_importance
+        # (this is the unplanned mask() path used by frame append)
+        acts = self.mesh.replicate(acts)
         v = importance(acts)
         if kind in self.reorderings:
             v = self.reorderings[kind].apply_to_acts(v)
@@ -659,6 +729,13 @@ class SparseExecution:
                 "kstarts": jnp.zeros((n_layers, self.kernel_k), jnp.int32),
                 "ksizes": jnp.zeros((n_layers, self.kernel_k), jnp.int32),
             }
+            if self.row_shards[kind] > 1:
+                # per-model-shard hit/miss row counters (sharded serving):
+                # which shard's flash tier each streamed row comes from —
+                # summed over shards these equal the scalar hit/miss lanes
+                ns = self.row_shards[kind]
+                entry["hit_shard"] = jnp.zeros((n_layers, ns), jnp.float32)
+                entry["miss_shard"] = jnp.zeros((n_layers, ns), jnp.float32)
             if self.cache_enabled:
                 score0 = jnp.zeros((n_layers, site.n), jnp.float32)
                 pinned = self.pinned_sel.get(kind)
@@ -667,6 +744,32 @@ class SparseExecution:
                 entry["score"] = score0
             plan[kind] = entry
         return plan
+
+    def plan_shard_bytes(self, plan) -> jnp.ndarray:
+        """Per-model-shard flash→DRAM transfer bytes accumulated in a decode
+        plan pytree, shape (n_shards,). Row-sharded sites contribute their
+        data-dependent ``miss_shard`` counts × per-site row bytes; the
+        col-sharded / replicated sites split their byte totals evenly (each
+        shard streams 1/n_shards of every replicated row's columns).
+        Sums exactly to ``plan_transfer_bytes`` up to f32 round-off —
+        the ISSUE's shard-accounting invariant. jit-safe."""
+        out = jnp.zeros((self.n_shards,), jnp.float32)
+        if not plan:
+            return out
+        if self.n_shards == 1:
+            return out + plan_transfer_bytes(plan)
+        for kind in plan:
+            state = plan[kind]
+            if not isinstance(state, dict) or "bytes" not in state:
+                continue
+            if "miss_shard" in state:
+                rb = jnp.float32(self.site_row_bytes(kind))
+                out = out + jnp.sum(
+                    state["miss_shard"].reshape(-1, self.n_shards), axis=0
+                ) * rb
+            else:
+                out = out + jnp.sum(state["bytes"]) / self.n_shards
+        return out
 
     def dense_total_latency(self) -> float:
         """Full-load I/O latency per layer (all sites dense)."""

@@ -1,3 +1,10 @@
+from .serve import (
+    DECODE_WEIGHT_AXES,
+    ROW_SHARDED_WEIGHTS,
+    ServeMesh,
+    shard_block_tables,
+    validate_serve_mesh,
+)
 from .specs import (
     MeshRules,
     current_rules,

@@ -25,12 +25,15 @@ if str(REPO) not in sys.path:  # make `import benchmarks.*` resolvable
     sys.path.insert(0, str(REPO))
 
 DOC_FILES = ["README.md", "docs/serving.md", "docs/kernels.md",
-             "docs/benchmarks.md"]
+             "docs/benchmarks.md", "docs/sharding.md"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 # --flag tokens: double dash + lowercase word, dash-separated (excludes
-# markdown rules/table borders, em dashes and single-dash pytest flags)
-_FLAG = re.compile(r"--[a-z][a-z0-9]*(?:-[a-z0-9]+)*")
+# markdown rules/table borders, em dashes and single-dash pytest flags);
+# the trailing lookahead rejects underscore continuations so XLA flags the
+# docs quote (--xla_force_host_platform_device_count=8) are not mistaken
+# for a CLI flag named --xla
+_FLAG = re.compile(r"--[a-z][a-z0-9]*(?:-[a-z0-9]+)*(?![_a-z0-9-])")
 
 
 def _doc_paths():

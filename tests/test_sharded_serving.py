@@ -1,0 +1,233 @@
+"""Multi-chip sharded serving: byte-identity vs the single-device engine,
+per-shard byte accounting, block-table partitioning, and ``--mesh``
+validation.
+
+Engine-compiling tests are marked ``slow`` AND skip below 4 devices: the
+tier-1 run (single CPU device — conftest.py deliberately sets no XLA_FLAGS)
+deselects or skips them, while the CI ``test-sharded`` job simulates 8 host
+devices via XLA_FLAGS=--xla_force_host_platform_device_count=8 and runs this
+file with ``-m ""``. The pure-logic tests (mesh validation, block-table
+clipping, simulator shard lanes) run in every tier on one device.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.offload import FlashOffloadSimulator
+from repro.kernels.quantize import QUANT_BLOCK_ROWS
+from repro.launch.serve import resolve_mesh
+from repro.models import build_model
+from repro.models.inputs import make_dummy_batch
+from repro.serving import ServeEngine, SparseExecution, plan_transfer_bytes
+from repro.sharding.serve import (
+    ServeMesh,
+    shard_block_tables,
+    validate_serve_mesh,
+)
+
+slow = pytest.mark.slow
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >= 4 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+SMOKE = InputShape(name="smoke", seq_len=16, global_batch=2, kind="train")
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    cfg = get_config("internvl2-76b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _run(cfg, model, params, mesh, backend, wbits, n_tokens=6):
+    eng = ServeEngine(model, params, max_seq=64, batch_size=2, device="nano",
+                      sparsity=0.5, method="chunk", seed=5,
+                      plan_refresh_interval=2, cache_mb=2.0,
+                      backend=backend, wbits=wbits, mesh=mesh)
+    batch = make_dummy_batch(cfg, SMOKE)
+    last = eng.prefill(batch)
+    tok0 = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    out = eng.decode(tok0, n_tokens)
+    return eng, np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# engine-level invariants (8 simulated devices; the CI test-sharded tier)
+# ---------------------------------------------------------------------------
+
+
+@slow
+@needs_mesh
+@pytest.mark.parametrize("backend", ("reference", "kernel"))
+@pytest.mark.parametrize("wbits", (16, 8))
+def test_sharded_byte_identity(vlm, backend, wbits):
+    """THE sharded-serving acceptance invariant: greedy tokens on a 2×2
+    (data, model) host mesh byte-identical to the single-device engine at
+    equal settings, for both execution backends and both storage widths —
+    plus the accounting half: the mesh repartitions the modeled I/O, it
+    never rescales it (totals equal, per-shard lanes sum to the total)."""
+    cfg, model, params = vlm
+    eng1, out1 = _run(cfg, model, params, ServeMesh.single(), backend, wbits)
+    eng2, out2 = _run(cfg, model, params, ServeMesh.create(2, 2), backend,
+                      wbits)
+    assert np.array_equal(out1, out2), (
+        f"greedy tokens diverged on the 2x2 mesh (backend={backend}, "
+        f"wbits={wbits}):\n{out1}\n{out2}"
+    )
+    b1 = eng1.io_summary()["io_bytes"]
+    b2 = eng2.io_summary()["io_bytes"]
+    assert abs(b1 - b2) <= 1e-6 * max(b1, 1.0)
+    ss = eng2.shard_summary()
+    assert ss["mesh_data"] == 2 and ss["mesh_model"] == 2
+    assert ss["n_shards"] == 2
+    assert len(ss["io_bytes_per_shard"]) == 2
+    assert abs(sum(ss["io_bytes_per_shard"]) - b2) <= 1e-6 * max(b2, 1.0)
+    assert all(b > 0 for b in ss["io_bytes_per_shard"])
+    assert ss["slots_per_data_shard"] == 1  # batch 2 over data=2
+    # single-device engine keeps the unsharded surface: no shard lanes
+    assert eng1.n_shards == 1
+    assert all(e.shard_bytes is None for e in eng1.simulator.log)
+
+
+@slow
+@needs_mesh
+def test_sharded_plan_lanes(vlm):
+    """Per-shard plan accounting internals on the 2×2 mesh: only the
+    row-sharded sites (attn_out streams wo's rows, ffn streams
+    w_down/w_proj's) carry per-shard hit/miss lanes, shaped (layers,
+    n_shards); ``plan_shard_bytes`` prices exactly those lanes plus an even
+    split of the column-sharded sites."""
+    cfg, model, params = vlm
+    eng, _ = _run(cfg, model, params, ServeMesh.create(2, 2), "reference", 16)
+    ctx = eng.sparse_ctx
+    assert ctx.n_shards == 2
+    for kind, site in ctx.sites.items():
+        expect = 2 if kind in ("attn_out", "ffn") else 1
+        assert ctx.row_shards[kind] == expect, kind
+    plan = eng._plan
+    for kind, ns in ctx.row_shards.items():
+        state = plan[kind]
+        if ns > 1:
+            assert state["hit_shard"].shape[-1] == ns
+            assert state["miss_shard"].shape[-1] == ns
+        else:
+            assert "hit_shard" not in state
+    per = np.asarray(ctx.plan_shard_bytes(plan))
+    assert per.shape == (2,)
+    total = float(np.asarray(plan_transfer_bytes(plan)))
+    assert abs(per.sum() - total) <= 1e-6 * max(total, 1.0)
+
+
+@needs_mesh
+def test_sharded_rejects_reorderings(vlm):
+    """Per-shard block tables and byte counters assume selection row order
+    equals storage row order — a reordering under a sharded mesh must fail
+    loudly at construction, not corrupt the accounting."""
+    cfg, _model, _params = vlm
+    with pytest.raises(ValueError, match="reorderings"):
+        SparseExecution(cfg, device="nano", sparsity=0.5, method="chunk",
+                        reorderings={"ffn": object()},
+                        mesh=ServeMesh.create(2, 2))
+
+
+# ---------------------------------------------------------------------------
+# pure-logic invariants (run on one device, every tier)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_block_tables_partition():
+    """Clipping a global chunk table to per-shard row ranges must exactly
+    partition the gathered rows: per-shard sizes sum to the global sum,
+    every surviving chunk lies inside its shard's range, and starts stay
+    quant-block aligned."""
+    n_rows, n_shards = 64, 2
+    starts = jnp.asarray([0, 24, 32, 56], jnp.int32)
+    sizes = jnp.asarray([16, 8, 16, 8], jnp.int32)
+    cs, csz = shard_block_tables(starts, sizes, n_rows, n_shards)
+    assert cs.shape == (n_shards, 4) and csz.shape == (n_shards, 4)
+    assert int(csz.sum()) == int(sizes.sum())
+    seg = n_rows // n_shards
+    for s in range(n_shards):
+        lo, hi = s * seg, (s + 1) * seg
+        keep = np.asarray(csz[s]) > 0
+        assert np.all(np.asarray(cs[s])[keep] >= lo)
+        assert np.all((np.asarray(cs[s]) + np.asarray(csz[s]))[keep] <= hi)
+        assert np.all(np.asarray(cs[s])[keep] % QUANT_BLOCK_ROWS == 0)
+
+
+def test_shard_block_tables_straddling_chunk_splits():
+    # one chunk spanning the shard boundary splits into two halves
+    cs, csz = shard_block_tables(jnp.asarray([24]), jnp.asarray([16]), 64, 2)
+    assert int(csz[0, 0]) == 8 and int(cs[0, 0]) == 24
+    assert int(csz[1, 0]) == 8 and int(cs[1, 0]) == 32
+
+
+def test_shard_block_tables_divisibility_error():
+    with pytest.raises(ValueError, match="whole"):
+        shard_block_tables(jnp.asarray([0]), jnp.asarray([8]), 24, 2)
+
+
+def test_validate_serve_mesh_errors():
+    validate_serve_mesh(1, 1)  # trivial mesh always fine
+    with pytest.raises(ValueError, match=">= 1"):
+        validate_serve_mesh(0, 2)
+    with pytest.raises(ValueError, match="devices"):
+        validate_serve_mesh(2, 2, n_devices=2)
+    with pytest.raises(ValueError, match="batch"):
+        validate_serve_mesh(2, 1, batch=3, n_devices=8)
+    with pytest.raises(ValueError, match="streams"):
+        validate_serve_mesh(2, 1, batch=2, streams=5, n_devices=8)
+    with pytest.raises(ValueError, match="ffn|d_ff"):
+        validate_serve_mesh(1, 3, d_ff=704, n_devices=8)
+
+
+def test_resolve_mesh_cli_validation():
+    """--mesh fails at parse time, before any model is built, with an
+    actionable message (the launcher bugfix this PR pins)."""
+    cfg = get_config("internvl2-76b").reduced()
+    with pytest.raises(ValueError, match="data,model"):
+        resolve_mesh("2", cfg, batch=2, streams=0)
+    with pytest.raises(ValueError, match="integers"):
+        resolve_mesh("a,b", cfg, batch=2, streams=0)
+    # streams must divide the data axis (continuous-batching slots shard
+    # over it); batch likewise
+    if len(jax.devices()) >= 2:
+        with pytest.raises(ValueError, match="streams"):
+            resolve_mesh("2,1", cfg, batch=2, streams=3)
+    else:
+        with pytest.raises(ValueError, match="devices"):
+            resolve_mesh("2,1", cfg, batch=2, streams=3)
+    # the trivial mesh parses to the inert single-device context
+    mesh = resolve_mesh("1,1", cfg, batch=2, streams=0)
+    assert not mesh.is_sharded and mesh.size == 1
+
+
+def test_single_mesh_is_inert():
+    mesh = ServeMesh.single()
+    assert not mesh.is_sharded
+    x = jnp.ones((4, 4))
+    assert mesh.replicate(x) is x
+    assert mesh.put_batch(x) is x
+
+
+def test_simulator_shard_lanes():
+    """``total_bytes_by_shard`` splits recorded lanes exactly and legacy
+    (lane-less) events evenly, always summing to ``total_bytes()``."""
+    sim = FlashOffloadSimulator("nano", seed=0)
+    sim.measure_from_estimate(1e-3, nbytes=10.0)  # legacy event: even split
+    assert sim.total_bytes_by_shard(1) == (sim.total_bytes(),)
+    sim.measure_from_estimate(1e-3, nbytes=100.0, shard_bytes=(60.0, 40.0))
+    per = sim.total_bytes_by_shard(2)
+    assert per == (65.0, 45.0)
+    assert abs(sum(per) - sim.total_bytes()) < 1e-9
+    with pytest.raises(ValueError, match="lanes"):
+        sim.total_bytes_by_shard(3)
+    with pytest.raises(ValueError, match=">= 1"):
+        sim.total_bytes_by_shard(0)

@@ -49,7 +49,14 @@ Eight sections (reduced InternVL2 under the flash simulator):
     every swept budget because the remaining misses are more scattered;
   * serve/batch_<method> — chunk vs topk vs dense vs dense_free under
     concurrent Poisson-arriving streams: simulated tokens/s and p50/p95
-    request latency from the continuous-batching scheduler.
+    request latency from the continuous-batching scheduler;
+  * serve/fault_* — storage-fault robustness (docs/robustness.md):
+    fault-off byte-identity (tokens + io_summary), then sustained thermal
+    throttle with per-request deadlines, DegradationController off vs on —
+    asserts controller-on attainment strictly higher, p99 strictly lower,
+    the degraded baseline preempting a deadline-blown request, and the
+    degraded tokens/s above FAULT_DEGRADED_TPS_FLOOR; fully deterministic
+    under the fixed fault seed.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.serve_throughput
 CI artifact: PYTHONPATH=src python -m benchmarks.serve_throughput \
@@ -109,6 +116,15 @@ OVERLAP_EFFICIENCY_FLOOR = 0.5
 # lane adds 4 bytes per 8 rows) — the CI smoke fails above it so quantized
 # storage can never silently stop paying for itself
 QUANTIZED_BYTES_RATIO_MAX = 0.55
+# the fault-robustness scenario (sustained thermal throttle + deadlines):
+# per-request SLO and arrival spacing picked so the throttled baseline
+# blows deadlines (and preempts) while the degradation controller keeps
+# the same workload inside SLO; the tokens/s floor is ~half the current
+# controller-on throughput so the CI smoke fails if adaptive degradation
+# regresses badly
+FAULT_DEADLINE_S = 0.03
+FAULT_ARRIVAL_GAP_S = 0.002
+FAULT_DEGRADED_TPS_FLOOR = 200.0
 
 
 def _setup():
@@ -560,6 +576,102 @@ def bench_continuous_batching(rows: Rows, cfg, model, params,
         )
 
 
+def bench_fault_robustness(rows: Rows, cfg, model, params,
+                           n_requests: int = 8) -> None:
+    """Storage-fault robustness (ISSUE 8 acceptance rows, deterministic —
+    fixed fault seed, simulator noise 0):
+
+      * serve/fault_identity — fault machinery attached but disabled must
+        be FREE: greedy tokens AND io_summary() byte-identical to an
+        engine without it (select_overhead_s excluded: wall-clock timed);
+      * serve/fault_off|on — sustained thermal throttle + per-request
+        deadlines, DegradationController off vs on: asserts attainment_on
+        strictly above attainment_off, p99_on strictly below p99_off, the
+        degraded baseline preempting >= 1 deadline-blown request, and the
+        controller-on degraded tokens/s above FAULT_DEGRADED_TPS_FLOOR —
+        the floor CI gates on so adaptive degradation can never silently
+        stop paying for itself."""
+    tok0 = jnp.ones((BATCH, 1), jnp.int32)
+    base = _engine(model, params)
+    t_base = base.decode(tok0, 6)
+    eng_none = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                           device="nano", sparsity=0.4, method="chunk",
+                           seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                           fault_profile="none", fault_seed=123)
+    t_none = eng_none.decode(tok0, 6)
+    assert bool(jnp.all(t_base == t_none)), (
+        "fault-off engine changed greedy tokens — injection must be free "
+        "when disabled"
+    )
+    s_base, s_none = base.io_summary(), eng_none.io_summary()
+    s_base.pop("select_overhead_s"), s_none.pop("select_overhead_s")
+    assert s_base == s_none, (
+        f"fault-off engine perturbed io_summary: "
+        f"{ {k: (s_base[k], s_none[k]) for k in s_base if s_base[k] != s_none[k]} }"
+    )
+    rows.add("serve/fault_identity", 0.0,
+             f"tokens_and_io_identical=True events="
+             f"{eng_none.fault_summary()['fault_events']}")
+
+    rng = np.random.default_rng(17)
+    prompts = []
+    for _ in range(n_requests):
+        p = dict(make_dummy_batch(cfg, InputShape("req", PROMPT_LEN, 1, "train")))
+        p["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, p["tokens"].shape), jnp.int32
+        )
+        prompts.append(p)
+
+    results = {}
+    for mode in ("off", "on"):
+        eng = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                          device="nano", sparsity=0.4, method="chunk",
+                          seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                          fault_profile="thermal_throttle", fault_seed=0,
+                          degrade=(mode == "on"))
+        eng.simulator.noise = 0.0
+        sched = Scheduler(eng, round_tokens=2)
+        sched.submit([
+            Request(rid=i, prompt=prompts[i], max_new_tokens=6,
+                    arrival_s=FAULT_ARRIVAL_GAP_S * i,
+                    deadline_s=FAULT_DEADLINE_S)
+            for i in range(n_requests)
+        ])
+        st = sched.run()
+        fs = eng.fault_summary()
+        results[mode] = st
+        rows.add(
+            f"serve/fault_{mode}",
+            st.latency_p50_s * 1e6,
+            f"tokens_per_s={st.tokens_per_s:.1f} "
+            f"p99_ms={st.latency_p99_s*1e3:.2f} "
+            f"slo_attainment={st.slo_attainment:.3f} "
+            f"preempted={st.preempted} "
+            f"degrade_scale={fs['degrade_scale']:.2f} "
+            f"min_throttle_scale={fs['min_throttle_scale']:.2f}",
+        )
+
+    st_off, st_on = results["off"], results["on"]
+    assert st_off.finished == st_on.finished == n_requests
+    assert st_on.slo_attainment > st_off.slo_attainment, (
+        f"degradation controller must lift SLO attainment under throttle: "
+        f"on={st_on.slo_attainment:.3f} off={st_off.slo_attainment:.3f}"
+    )
+    assert st_on.latency_p99_s < st_off.latency_p99_s, (
+        f"controller-on p99 must drop: on={st_on.latency_p99_s:.4f} "
+        f"off={st_off.latency_p99_s:.4f}"
+    )
+    assert st_off.preempted >= 1, (
+        "the degraded baseline must preempt >= 1 deadline-blown request"
+    )
+    assert st_on.tokens_per_s > st_off.tokens_per_s
+    assert st_on.tokens_per_s >= FAULT_DEGRADED_TPS_FLOOR, (
+        f"degraded throughput {st_on.tokens_per_s:.1f} tok/s under the "
+        f"{FAULT_DEGRADED_TPS_FLOOR} floor — adaptive degradation stopped "
+        "paying for itself"
+    )
+
+
 def run(rows: Rows, smoke: bool = False) -> None:
     cfg, model, params, batch = _setup()
     if smoke:
@@ -583,6 +695,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
                           fractions=(0.0, 0.35), decode_tokens=8)
         bench_scheduler_admission(rows, cfg, model, params, n_requests=4,
                                   smoke=True)
+        bench_fault_robustness(rows, cfg, model, params)
         return
     bench_fused_vs_loop(rows, model, params, batch)
     bench_backend_parity(rows, model, params, batch, repeats=3)
@@ -593,6 +706,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
     bench_cache_sweep(rows, model, params, batch, cfg)
     bench_scheduler_admission(rows, cfg, model, params)
     bench_continuous_batching(rows, cfg, model, params)
+    bench_fault_robustness(rows, cfg, model, params)
 
 
 def _emit_json(rows: Rows, path: str, smoke: bool) -> None:

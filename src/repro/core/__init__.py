@@ -36,6 +36,14 @@ from .latency_model import (
     profile_table,
     table_from_measurements,
 )
+from .faults import (
+    FAULT_PROFILES,
+    FaultModel,
+    FaultOutcome,
+    FaultProfile,
+    ThermalTrajectory,
+    get_fault_profile,
+)
 from .offload import ComputeModel, FlashOffloadSimulator, IOEvent
 from .pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from .reorder import (

@@ -1,0 +1,256 @@
+"""Storage fault injection for the flash-offload simulator.
+
+The serve stack plans against the *steady-state* ``LatencyTable`` — but a
+real Jetson NVMe does not stay in steady state: sustained decode traffic
+thermally throttles the controller, queue resonance produces tail-latency
+spikes, and links drop the occasional read outright. This module models
+that turbulence as a seeded, deterministic ``FaultModel`` injected at the
+**measurement boundary** of ``FlashOffloadSimulator`` (core/offload.py):
+chunk selection keeps planning against the clean table, and only the
+simulated *measurement* of each I/O event is perturbed — so plans and
+reality diverge exactly the way they do on hardware, and fault injection
+can NEVER change which neurons are selected or which tokens come out
+(time-only perturbation; pinned by tests/test_faults.py).
+
+Three fault mechanisms compose, applied per logged I/O event in a fixed
+order so a given (profile, seed) replays bit-identically:
+
+  1. **Thermal throttling** — a deterministic ``ThermalTrajectory`` maps
+     cumulative device-busy seconds to a throughput derate ``scale(t) ∈
+     (0, 1]``; the event's clean latency is divided by it. Dividing the
+     total is exactly equivalent to scaling both ``peak_bw`` and ``iops``
+     of the two-regime model by ``scale`` (the Jetson profiles carry no
+     separate ``base_latency`` term).
+  2. **Tail-latency spikes** — with probability ``spike_prob`` the event's
+     latency is multiplied by ``spike_scale`` (controller GC / queue
+     resonance; the heavy tail Fig. 5's lognormal deliberately truncates).
+  3. **Transient read failures** — each attempt fails with probability
+     ``fail_prob``; a failed attempt charges its full (throttled, possibly
+     spiked) read time plus an exponential-backoff delay
+     (``backoff_base_s * backoff_mult**k`` after the k-th failure) and is
+     retried. Attempt ``max_retries`` always succeeds, so the charge is
+     bounded by ``(max_retries+1) * read + Σ backoff``.
+
+The model draws from its OWN ``numpy`` Generator (``fault_seed``), never
+from the simulator's: enabling faults does not shift the simulator's
+lift/jitter RNG stream, and with faults disabled (the default) the
+simulator's event log and RNG consumption are bit-identical to a build
+without this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalTrajectory:
+    """Deterministic throughput-derate trajectory over device-busy time.
+
+    ``scale(t)`` is 1.0 until ``onset_s`` cumulative busy seconds, ramps
+    linearly down to ``floor`` over the next ``ramp_s`` seconds, then
+    holds (sustained throttle). ``period_s > 0`` instead cycles: the
+    pattern repeats every period with a linear recovery back to 1.0 in
+    the second half of each period (thermal sawtooth — throttle under
+    load, recover while the duty cycle drops).
+    """
+
+    onset_s: float = 0.0
+    ramp_s: float = 1.0
+    floor: float = 0.5
+    period_s: float = 0.0
+
+    def __post_init__(self):
+        if not (0.0 < self.floor <= 1.0):
+            raise ValueError(f"floor must be in (0, 1], got {self.floor}")
+        if self.onset_s < 0 or self.ramp_s < 0 or self.period_s < 0:
+            raise ValueError("onset_s/ramp_s/period_s must be >= 0")
+
+    def scale(self, busy_s: float) -> float:
+        """Throughput derate factor at ``busy_s`` cumulative device-busy
+        seconds — 1.0 = full speed, ``floor`` = fully throttled."""
+        t = float(busy_s)
+        if self.period_s > 0.0:
+            t = math.fmod(t, self.period_s)
+            half = self.period_s / 2.0
+            if t >= half:
+                # linear recovery back to full speed over the second half
+                frac = (t - half) / half
+                lowest = self._ramp_value(half)
+                return lowest + (1.0 - lowest) * frac
+        return self._ramp_value(t)
+
+    def _ramp_value(self, t: float) -> float:
+        if t <= self.onset_s:
+            return 1.0
+        if self.ramp_s <= 0.0:
+            return self.floor
+        frac = min((t - self.onset_s) / self.ramp_s, 1.0)
+        return 1.0 - (1.0 - self.floor) * frac
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """One named storage-turbulence scenario (see ``FAULT_PROFILES``)."""
+
+    name: str
+    spike_prob: float = 0.0
+    spike_scale: float = 4.0
+    fail_prob: float = 0.0
+    max_retries: int = 3
+    backoff_base_s: float = 0.5e-3
+    backoff_mult: float = 2.0
+    throttle: Optional[ThermalTrajectory] = None
+
+    def __post_init__(self):
+        if not (0.0 <= self.spike_prob < 1.0):
+            raise ValueError(f"spike_prob must be in [0, 1), got {self.spike_prob}")
+        if self.spike_scale < 1.0:
+            raise ValueError(f"spike_scale must be >= 1, got {self.spike_scale}")
+        if not (0.0 <= self.fail_prob < 1.0):
+            raise ValueError(f"fail_prob must be in [0, 1), got {self.fail_prob}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base_s < 0 or self.backoff_mult < 1.0:
+            raise ValueError("backoff_base_s must be >= 0 and backoff_mult >= 1")
+
+
+# Named profiles, calibrated to be *visible* against the Jetson profiles'
+# per-step decode latencies (hundreds of µs to a few ms) without burying
+# the signal: tail spikes land on ~5% of events, flaky reads retry ~8% of
+# attempts, and the thermal trajectories derate throughput to 25-50%.
+FAULT_PROFILES: Dict[str, FaultProfile] = {
+    p.name: p
+    for p in (
+        FaultProfile("none"),
+        FaultProfile("tail_spikes", spike_prob=0.05, spike_scale=6.0),
+        FaultProfile("flaky_reads", fail_prob=0.08, max_retries=4,
+                     backoff_base_s=0.25e-3, backoff_mult=2.0),
+        # sustained thermal throttle: full speed for the first 2 ms of
+        # device-busy time, then a 10 ms ramp down to 25% throughput that
+        # never recovers — the DegradationController's acceptance scenario
+        FaultProfile("thermal_throttle",
+                     throttle=ThermalTrajectory(onset_s=2e-3, ramp_s=10e-3,
+                                                floor=0.25)),
+        # thermal sawtooth: 40 ms cycle, throttling to 40% then recovering
+        FaultProfile("thermal_cycle",
+                     throttle=ThermalTrajectory(onset_s=0.0, ramp_s=10e-3,
+                                                floor=0.4, period_s=40e-3)),
+        # everything at once: the nightly-sweep worst case
+        FaultProfile("degraded_nvme", spike_prob=0.03, spike_scale=5.0,
+                     fail_prob=0.04, max_retries=4, backoff_base_s=0.25e-3,
+                     throttle=ThermalTrajectory(onset_s=2e-3, ramp_s=10e-3,
+                                                floor=0.35)),
+    )
+}
+
+
+def get_fault_profile(name: str) -> FaultProfile:
+    try:
+        return FAULT_PROFILES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown fault profile {name!r}; have {sorted(FAULT_PROFILES)}"
+        )
+
+
+@dataclasses.dataclass
+class FaultOutcome:
+    """What the fault model did to one I/O event."""
+
+    charged_s: float  # total charged latency, faults included
+    clean_s: float  # the latency the event would have charged fault-free
+    throttle_scale: float = 1.0
+    spiked: bool = False
+    retries: int = 0
+    backoff_s: float = 0.0
+
+    @property
+    def extra_s(self) -> float:
+        return self.charged_s - self.clean_s
+
+
+class FaultModel:
+    """Seeded, deterministic storage-fault injector (see module doc).
+
+    One instance per simulator; call ``perturb(latency_s, busy_s)`` once
+    per positive-latency I/O event, in event order. The draw sequence per
+    event is fixed (spike draw iff ``spike_prob > 0``, then one failure
+    draw per attempt iff ``fail_prob > 0``), so a given (profile, seed)
+    replays bit-identically regardless of which mechanisms are active.
+    """
+
+    def __init__(self, profile: str | FaultProfile = "none", seed: int = 0):
+        self.profile = (
+            profile if isinstance(profile, FaultProfile)
+            else get_fault_profile(profile)
+        )
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        # lifetime accounting (fault_summary surfaces these)
+        self.n_events = 0
+        self.n_spikes = 0
+        self.n_retries = 0
+        self.backoff_s = 0.0
+        self.extra_s = 0.0
+        self.min_throttle_scale = 1.0
+
+    @property
+    def enabled(self) -> bool:
+        p = self.profile
+        return bool(p.spike_prob > 0 or p.fail_prob > 0 or p.throttle is not None)
+
+    def perturb(self, latency_s: float, busy_s: float) -> FaultOutcome:
+        """Perturb one event's clean simulated latency. ``busy_s`` is the
+        device's cumulative charged I/O seconds BEFORE this event (the
+        thermal trajectory's clock). Pure in everything but the seeded RNG
+        stream and the accounting counters."""
+        if latency_s < 0:
+            raise ValueError(f"latency_s must be >= 0, got {latency_s}")
+        p = self.profile
+        out = FaultOutcome(charged_s=float(latency_s), clean_s=float(latency_s))
+        if latency_s == 0.0:
+            return out
+        self.n_events += 1
+        lat = float(latency_s)
+        if p.throttle is not None:
+            out.throttle_scale = p.throttle.scale(busy_s)
+            lat = lat / out.throttle_scale
+            self.min_throttle_scale = min(self.min_throttle_scale,
+                                          out.throttle_scale)
+        if p.spike_prob > 0 and float(self.rng.random()) < p.spike_prob:
+            lat *= p.spike_scale
+            out.spiked = True
+            self.n_spikes += 1
+        charged = lat
+        if p.fail_prob > 0:
+            backoff = p.backoff_base_s
+            for attempt in range(p.max_retries):
+                if float(self.rng.random()) >= p.fail_prob:
+                    break
+                # the failed read is paid in full, then the backoff delay,
+                # then the retry's read time
+                charged += backoff + lat
+                out.retries += 1
+                out.backoff_s += backoff
+                backoff *= p.backoff_mult
+            self.n_retries += out.retries
+            self.backoff_s += out.backoff_s
+        out.charged_s = charged
+        self.extra_s += charged - out.clean_s
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "profile": self.profile.name,
+            "seed": self.seed,
+            "events": self.n_events,
+            "spikes": self.n_spikes,
+            "retries": self.n_retries,
+            "backoff_s": self.backoff_s,
+            "fault_extra_s": self.extra_s,
+            "min_throttle_scale": self.min_throttle_scale,
+        }

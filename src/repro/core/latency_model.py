@@ -273,13 +273,35 @@ def table_from_measurements(
 ) -> LatencyTable:
     """Build a LatencyTable from arbitrary measured (size, latency) points by
     monotone linear interpolation — the path a real deployment would use
-    (App. D microbenchmarks) instead of the synthetic profiles above."""
+    (App. D microbenchmarks) instead of the synthetic profiles above.
+
+    Rejects duplicate sizes and latencies that strictly decrease with size:
+    both are measurement errors (a re-run point or a mis-sorted log) that
+    would otherwise be silently interpolated into a garbage table whose
+    chunk utilities mis-rank every selection downstream. Equal latencies at
+    increasing sizes are fine (IOPS-bound plateau)."""
     sizes_rows = np.asarray(sizes_rows, dtype=np.int64)
     latencies_s = np.asarray(latencies_s, dtype=np.float64)
     if sizes_rows.ndim != 1 or sizes_rows.shape != latencies_s.shape:
         raise ValueError("sizes/latencies must be matching 1-D arrays")
     order = np.argsort(sizes_rows)
     sizes_rows, latencies_s = sizes_rows[order], latencies_s[order]
+    dup = np.flatnonzero(np.diff(sizes_rows) == 0)
+    if dup.size:
+        raise ValueError(
+            f"duplicate measurement sizes {sorted(set(sizes_rows[dup].tolist()))}: "
+            "each size must be measured once (aggregate repeated runs — e.g. "
+            "take the median — before building the table)"
+        )
+    dec = np.flatnonzero(np.diff(latencies_s) < 0)
+    if dec.size:
+        i = int(dec[0])
+        raise ValueError(
+            f"non-monotone latency samples: latency drops from "
+            f"{latencies_s[i]:.3e}s at {int(sizes_rows[i])} rows to "
+            f"{latencies_s[i + 1]:.3e}s at {int(sizes_rows[i + 1])} rows — "
+            "reading more can't be faster; re-measure or drop the outlier"
+        )
     max_rows = int(sizes_rows[-1])
     grid = np.arange(max_rows + 1, dtype=np.float64)
     lat = np.interp(grid, sizes_rows.astype(np.float64), latencies_s)

@@ -22,6 +22,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .contiguity import Chunk, mask_to_chunks_np
+from .faults import FaultModel
 from .latency_model import DeviceProfile, get_profile
 from .pipeline import PipelineModel
 
@@ -45,6 +46,12 @@ class IOEvent:
     transfer volume split by the model shard whose flash tier each byte
     streams from — sums to ``nbytes`` up to f32 round-off. None on the
     unsharded path, so single-device event logs are unchanged.
+
+    ``retries`` / ``fault_s`` (fault injection, core/faults.py): transient
+    read failures retried on this event, and the extra seconds the fault
+    model charged on top of the clean simulated latency (throttle + spikes
+    + retries + backoff). Both stay at their defaults with faults disabled,
+    so fault-off event logs compare equal to pre-fault builds.
     """
 
     name: str
@@ -53,6 +60,8 @@ class IOEvent:
     latency_s: float
     hit_rate: float = 0.0
     shard_bytes: Optional[Tuple[float, ...]] = None
+    retries: int = 0
+    fault_s: float = 0.0
 
 
 class FlashOffloadSimulator:
@@ -70,6 +79,7 @@ class FlashOffloadSimulator:
         seed: int = 0,
         noise: float = 0.04,
         pipeline: Optional[PipelineModel] = None,
+        faults: Optional[FaultModel] = None,
     ):
         self.profile = device if isinstance(device, DeviceProfile) else get_profile(device)
         self.rng = np.random.default_rng(seed)
@@ -78,6 +88,24 @@ class FlashOffloadSimulator:
         # the I/O–compute overlap timeline model the serve engine runs its
         # per-layer simulated latencies through (core/pipeline.py)
         self.pipeline = pipeline or PipelineModel()
+        # storage turbulence (core/faults.py), applied at the measurement
+        # boundary only — estimates keep planning against the clean table.
+        # The model draws from its OWN seeded RNG, so attaching it never
+        # shifts this simulator's lift/jitter stream.
+        self.faults = faults
+        # cumulative charged I/O seconds — the thermal trajectory's clock
+        self.device_time_s = 0.0
+
+    def _charge(self, latency_s: float) -> Tuple[float, int, float]:
+        """Run one clean measured latency through the fault model (if any)
+        and advance the device-busy clock. Returns (charged latency,
+        retries, extra fault seconds) for the event log."""
+        if self.faults is None or not self.faults.enabled or latency_s <= 0.0:
+            self.device_time_s += latency_s
+            return latency_s, 0, 0.0
+        out = self.faults.perturb(latency_s, self.device_time_s)
+        self.device_time_s += out.charged_s
+        return out.charged_s, out.retries, out.extra_s
 
     # -- pure additive model (what the runtime uses) -------------------------
     def estimate_chunks(self, chunks: Sequence[Chunk], row_bytes: int) -> float:
@@ -100,13 +128,15 @@ class FlashOffloadSimulator:
         diversity = float(np.unique(sizes).size) / n
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
-        latency = base * lift * jitter
+        latency, retries, fault_s = self._charge(base * lift * jitter)
         self.log.append(
             IOEvent(
                 name=name,
                 nbytes=float(sizes.sum()) * row_bytes,
                 n_chunks=len(chunks),
                 latency_s=latency,
+                retries=retries,
+                fault_s=fault_s,
             )
         )
         return latency
@@ -136,12 +166,13 @@ class FlashOffloadSimulator:
             return 0.0
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
-        latency = est_s * lift * jitter
+        latency, retries, fault_s = self._charge(est_s * lift * jitter)
         self.log.append(
             IOEvent(name=name, nbytes=float(nbytes), n_chunks=n_chunks,
                     latency_s=latency, hit_rate=float(hit_rate),
                     shard_bytes=(tuple(float(b) for b in shard_bytes)
-                                 if shard_bytes is not None else None))
+                                 if shard_bytes is not None else None),
+                    retries=retries, fault_s=fault_s)
         )
         return latency
 
@@ -179,17 +210,23 @@ class FlashOffloadSimulator:
             mean=0.0, sigma=self.noise, size=int(pos.sum())
         )
         latency = np.where(pos, est * lift * jitter, 0.0)
+        # faults perturb each positive event sequentially, in log order —
+        # the thermal clock advances event by event, as the scalar path does
         for i, lat in enumerate(latency):
             if pos[i]:
+                charged, retries, fault_s = self._charge(float(lat))
+                latency[i] = charged
                 self.log.append(
                     IOEvent(
                         name=f"{name}[{i}]" if name else name,
                         nbytes=float(nbytes[i]) if nbytes is not None else 0.0,
                         n_chunks=n_chunks,
-                        latency_s=float(lat),
+                        latency_s=charged,
                         hit_rate=float(hit_rates[i]) if hit_rates is not None else 0.0,
                         shard_bytes=(tuple(float(b) for b in shard_bytes[i])
                                      if shard_bytes is not None else None),
+                        retries=retries,
+                        fault_s=fault_s,
                     )
                 )
         return latency

@@ -21,6 +21,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..configs.base import InputShape
+from ..core.faults import FAULT_PROFILES
 from ..kernels.backend import BACKENDS
 from ..models import build_model
 from ..models.inputs import make_dummy_batch
@@ -32,6 +33,63 @@ from ..serving import (
     ServeEngine,
 )
 from ..sharding.serve import ServeMesh, validate_serve_mesh
+
+
+def _nonneg_float(name: str):
+    """argparse ``type=`` for flags that must be >= 0 — a bad value fails
+    at parse time with an actionable message (the --mesh treatment),
+    instead of erroring deep inside engine construction."""
+    def parse(text: str) -> float:
+        try:
+            v = float(text)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be a number, got {text!r}"
+            ) from None
+        if not (v >= 0.0):  # also rejects NaN
+            raise argparse.ArgumentTypeError(
+                f"{name} must be >= 0, got {text!r}"
+            )
+        return v
+    return parse
+
+
+def _nonneg_int(name: str):
+    def parse(text: str) -> int:
+        try:
+            v = int(text)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be an integer, got {text!r}"
+            ) from None
+        if v < 0:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be >= 0, got {text!r}"
+            )
+        return v
+    return parse
+
+
+def _positive_int(name: str):
+    def parse(text: str) -> int:
+        try:
+            v = int(text)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be an integer, got {text!r}"
+            ) from None
+        if v < 1:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be >= 1, got {text!r}"
+            )
+        return v
+    return parse
+
+
+def _cache_mb(text: str) -> float:
+    # --cache-mb keeps None as "use the profile default", so the >= 0
+    # check wraps the plain float parse
+    return _nonneg_float("--cache-mb")(text)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -69,7 +127,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--plan-refresh-interval", type=int, default=1,
                     help="recompute chunk selection every k decode steps; "
                          "reuse the resident plan in between")
-    ap.add_argument("--cache-mb", type=float, default=None,
+    ap.add_argument("--cache-mb", type=_cache_mb, default=None,
                     help="DRAM budget (MB) of the dynamic chunk residency "
                          "cache (paper §5); resident rows cost no flash I/O. "
                          "Default: the device profile's dram_cache_mb (0 = off)")
@@ -83,7 +141,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "stream while layer l computes); --no-overlap "
                          "retains the serial Σio+Σcompute baseline charge. "
                          "Tokens are identical either way.")
-    ap.add_argument("--prefetch-depth", type=int, default=1,
+    ap.add_argument("--prefetch-depth", type=_nonneg_int("--prefetch-depth"),
+                    default=1,
                     help="how many layers the prefetch pipeline's fetch "
                          "engine may run ahead of compute (the DMA kernels' "
                          "slot count - 1): 1 = double buffering, 0 = serial "
@@ -104,7 +163,41 @@ def build_parser() -> argparse.ArgumentParser:
                          "Poisson-arriving requests through --batch slots")
     ap.add_argument("--arrival-rate", type=float, default=50.0,
                     help="request arrival rate (requests/sec, sim clock)")
-    ap.add_argument("--round-tokens", type=int, default=4)
+    ap.add_argument("--round-tokens", type=_positive_int("--round-tokens"),
+                    default=4,
+                    help="fused-scan decode round granularity of the "
+                         "continuous-batching scheduler (tokens per jit "
+                         "call per slot); must be >= 1")
+    ap.add_argument("--fault-profile", choices=tuple(FAULT_PROFILES),
+                    default="none",
+                    help="storage-turbulence profile injected at the "
+                         "simulator's measurement boundary (core/faults.py): "
+                         "tail-latency spikes, transient read failures with "
+                         "retry + exponential backoff, thermal-throttle "
+                         "trajectories. Selection keeps planning against "
+                         "the clean latency table; faults only perturb "
+                         "charged time, never tokens. 'none' (default) is "
+                         "bit-identical to a fault-free engine.")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the fault model's own RNG stream — a "
+                         "given (--fault-profile, --fault-seed) replays "
+                         "bit-identically and never shifts the simulator's "
+                         "main jitter stream")
+    ap.add_argument("--degrade", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="enable the adaptive degradation controller: "
+                         "watches the EWMA of measured-vs-estimated step "
+                         "latency at decode-call boundaries and tightens "
+                         "the selector's chunk I/O budget while the device "
+                         "is degraded (leaning on residency-cache hits), "
+                         "recovering when it stabilizes")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request SLO deadline (seconds from arrival, "
+                         "sim clock) for --streams mode: admission becomes "
+                         "earliest-deadline-first and deadline-blown "
+                         "running requests may be preempted "
+                         "(evict-and-requeue); stats gain p99 + SLO "
+                         "attainment. Default: best-effort (no deadlines)")
     return ap
 
 
@@ -147,7 +240,9 @@ def main():
                       plan_refresh_interval=args.plan_refresh_interval,
                       cache_mb=args.cache_mb, overlap=args.overlap,
                       prefetch_depth=args.prefetch_depth,
-                      backend=args.backend, wbits=args.wbits, mesh=mesh)
+                      backend=args.backend, wbits=args.wbits, mesh=mesh,
+                      fault_profile=args.fault_profile,
+                      fault_seed=args.fault_seed, degrade=args.degrade)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -198,6 +293,14 @@ def main():
           f"io_est {s['io_est_s']*1e3:.1f} ms  io_sim {s['io_sim_s']*1e3:.1f} ms  "
           f"io_bytes {s['io_bytes']/1e6:.1f} MB  "
           f"cache_hit_rate {s['cache_hit_rate']:.3f}")
+    fs = eng.fault_summary()
+    if fs["fault_enabled"] or fs["degrade_enabled"]:
+        print(f"[faults] profile={fs['fault_profile']} seed={fs['fault_seed']}  "
+              f"events {fs['fault_events']}  spikes {fs['fault_spikes']}  "
+              f"retries {fs['fault_retries']}  "
+              f"extra {fs['fault_extra_s']*1e3:.2f} ms  "
+              f"min_throttle {fs['min_throttle_scale']:.2f}  "
+              f"degrade_scale {fs['degrade_scale']:.2f}")
 
 
 def _serve_streams(args, cfg, eng):
@@ -212,7 +315,8 @@ def _serve_streams(args, cfg, eng):
         )
         prompt = dict(batch)
         prompt["tokens"] = toks
-        return Request(rid=rid, prompt=prompt, max_new_tokens=args.decode_tokens)
+        return Request(rid=rid, prompt=prompt, max_new_tokens=args.decode_tokens,
+                       deadline_s=args.deadline_s)
 
     driver = PoissonArrivalDriver(args.arrival_rate, make_request, seed=1)
     sched = Scheduler(eng, round_tokens=args.round_tokens)
@@ -230,6 +334,24 @@ def _serve_streams(args, cfg, eng):
     print(f"[serve] admitted_during_stall {s['admitted_during_stall']}  "
           f"stall_hidden {s['stall_hidden_s']*1e3:.2f} ms  "
           f"bubble_utilization {s['bubble_utilization']:.3f}")
+    if args.deadline_s is not None:
+        print(f"[slo] deadline {args.deadline_s*1e3:.1f} ms  "
+              f"attainment {stats.slo_attainment:.3f} "
+              f"({stats.deadlines_met}/{stats.deadlines})  "
+              f"p99 {stats.latency_p99_s*1e3:.2f} ms  "
+              f"preempted {stats.preempted}")
+    fs = eng.fault_summary()
+    if fs["fault_enabled"] or fs["degrade_enabled"]:
+        print(f"[faults] profile={fs['fault_profile']} "
+              f"seed={fs['fault_seed']}  events {fs['fault_events']}  "
+              f"spikes {fs['fault_spikes']}  retries {fs['fault_retries']}  "
+              f"extra {fs['fault_extra_s']*1e3:.2f} ms  "
+              f"min_throttle {fs['min_throttle_scale']:.2f}")
+        print(f"[degrade] on={fs['degrade_enabled']}  "
+              f"scale {fs['degrade_scale']:.2f}  "
+              f"ewma {fs['degrade_ewma_ratio']:.2f}  "
+              f"tighten {fs['degrade_tighten_steps']}  "
+              f"relax {fs['degrade_relax_steps']}")
 
 
 if __name__ == "__main__":

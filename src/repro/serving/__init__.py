@@ -1,3 +1,4 @@
+from .degrade import DegradationController
 from .engine import IO_SUMMARY_KEYS, ServeEngine, StepStats
 from .request import PoissonArrivalDriver, Request, RequestState
 from .scheduler import Scheduler, SchedulerStats
@@ -6,8 +7,10 @@ from .sparse_exec import (
     SPARSE_METHODS,
     WBITS_CHOICES,
     SparseExecution,
+    plan_budget_scale,
     plan_hit_miss,
     plan_transfer_bytes,
     residency_from_score,
+    set_plan_budget_scale,
     validate_method,
 )

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.faults import FaultModel, FaultProfile
 from ..core.latency_model import MB
 from ..core.offload import ComputeModel, FlashOffloadSimulator
 from ..core.pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
@@ -66,12 +67,14 @@ from ..models.transformer import SPARSE_WEIGHT_NAMES
 from ..kernels.backend import validate_backend
 from ..kernels.quantize import quantize_params
 from ..sharding.serve import ServeMesh, validate_serve_mesh
+from .degrade import DegradationController
 from .sparse_exec import (
     WBITS_CHOICES,
     SparseExecution,
     plan_hit_miss,
     plan_transfer_bytes,
     reset_plan_counters,
+    set_plan_budget_scale,
     validate_method,
 )
 
@@ -149,6 +152,9 @@ class ServeEngine:
         backend: str = "reference",
         wbits: int = 16,
         mesh: Optional[ServeMesh] = None,
+        fault_profile: Optional[str | FaultProfile] = None,
+        fault_seed: int = 0,
+        degrade: bool = False,
     ):
         """``backend``: the decode execution backend ("reference" |
         "kernel", see kernels/backend.py). "reference" computes the planned
@@ -192,7 +198,24 @@ class ServeEngine:
         decode-streamed weights, chunk payloads/scales and per-shard block
         tables partition over ``model``; selection stays replicated so
         greedy tokens are byte-identical between the 1×1 mesh and any
-        (d, m) mesh at both wbits. None → unsharded (the default)."""
+        (d, m) mesh at both wbits. None → unsharded (the default).
+
+        ``fault_profile`` / ``fault_seed``: storage fault injection
+        (core/faults.py) — a named ``FAULT_PROFILES`` entry (or a
+        ``FaultProfile``) attached to the simulator's MEASUREMENT boundary
+        with its own seeded RNG. Selection keeps planning against the
+        clean latency table; faults only perturb the charged time of each
+        I/O event, never which neurons are selected or which tokens come
+        out. None (default) or "none" ⇒ bit-identical behavior to an
+        engine without the fault machinery.
+
+        ``degrade``: enable the adaptive ``DegradationController``
+        (serving/degrade.py): at every decode-call boundary the engine
+        observes the measured/estimated step-latency ratio (normalized by
+        the deterministic interleave lift, so healthy ≈ 1.0) and tightens
+        the selector's chunk I/O budget through the plan-carried "bscale"
+        multiplier while the device looks degraded, relaxing on recovery.
+        Requires a selecting method ("chunk" | "topk")."""
         validate_method(method, allow_dense_free=True)
         validate_backend(backend)
         if wbits not in WBITS_CHOICES:
@@ -209,6 +232,11 @@ class ServeEngine:
                       if (self.mesh.model > 1 and model.cfg.d_ff
                           and not model.cfg.has_moe) else 0),
             )
+        if degrade and method not in ("chunk", "topk"):
+            raise ValueError(
+                f"degrade=True needs a selecting method ('chunk' | 'topk') "
+                f"whose budget the controller can tighten, got {method!r}"
+            )
         self.backend = backend
         self.model = model
         self.params = params
@@ -216,9 +244,18 @@ class ServeEngine:
         self.batch_size = batch_size
         # PipelineModel validates prefetch_depth >= 0
         self.prefetch_depth = prefetch_depth
-        self.simulator = FlashOffloadSimulator(
-            device, seed=seed, pipeline=PipelineModel(prefetch_depth=prefetch_depth)
+        # storage turbulence: a seeded FaultModel on the simulator's
+        # measurement boundary (None ⇒ the clean pre-fault simulator)
+        self.faults = (
+            FaultModel(fault_profile, seed=fault_seed)
+            if fault_profile is not None else None
         )
+        self.simulator = FlashOffloadSimulator(
+            device, seed=seed,
+            pipeline=PipelineModel(prefetch_depth=prefetch_depth),
+            faults=self.faults,
+        )
+        self.degrade_controller = DegradationController() if degrade else None
         self.compute_model = ComputeModel()
         self.method = method
         self.plan_refresh_interval = plan_refresh_interval
@@ -236,7 +273,8 @@ class ServeEngine:
                                  method=method, reorderings=reorderings,
                                  cache_mb=self.cache_mb, backend=backend,
                                  kernel_prefetch_depth=prefetch_depth,
-                                 wbits=wbits, mesh=self.mesh)
+                                 wbits=wbits, mesh=self.mesh,
+                                 degradable=degrade)
         )
         self.wbits = wbits
         # per-shard I/O accounting width (1 on the unsharded path — the
@@ -390,6 +428,14 @@ class ServeEngine:
         if self._plan is None:
             self._plan = self._init_plan()
         self._plan = reset_plan_counters(self._plan)
+        if self.degrade_controller is not None:
+            # the controller acts only at decode-call boundaries: write its
+            # current budget scale into the plan's traced "bscale" leaf so
+            # the jitted refresh sees it (mutating engine state after jit
+            # compilation would be a silent no-op)
+            self._plan = set_plan_budget_scale(
+                self._plan, self.degrade_controller.scale
+            )
         tokens = self.mesh.put_batch(tokens)
         t0 = time.perf_counter()
         (toks, self.cache, self._plan, ios, hits, misses, byts,
@@ -439,8 +485,28 @@ class ServeEngine:
                           stall_s=float(tl.stall_s[i]),
                           bubble_s=float(tl.bubble_s[i]))
             )
+        self._observe_degradation(io_steps, sims)
         charged = tl.overlap_s if self.overlap else tl.serial_s
         return toks, charged
+
+    def _decode_lift(self) -> float:
+        """The deterministic lift decode measurements carry
+        (``measure_from_estimate``'s diversity-0.5 factor) — the healthy
+        measured/estimated ratio is jitter-centred at 1.0 after dividing
+        it out, which is the DegradationController's reference point."""
+        return self.simulator.profile.interleave_lift * 1.05
+
+    def _observe_degradation(self, io_est, io_sim) -> None:
+        """Feed one decode call's per-step (estimate, measurement) pairs to
+        the degradation controller (no-op when ``degrade`` is off)."""
+        if self.degrade_controller is None:
+            return
+        est = np.asarray(io_est, np.float64).reshape(-1)
+        sim = np.asarray(io_sim, np.float64).reshape(-1)
+        pos = est > 0.0
+        if not np.any(pos):
+            return
+        self.degrade_controller.observe(sim[pos] / (est[pos] * self._decode_lift()))
 
     @staticmethod
     def _validate_greedy(greedy: bool) -> None:
@@ -476,6 +542,13 @@ class ServeEngine:
         if self._plan is None:
             self._plan = self._init_plan()
         self._plan = reset_plan_counters(self._plan)
+        if self.degrade_controller is not None:
+            # same call-boundary contract as the fused path: one scale for
+            # the whole call, observations folded in once at the end — the
+            # two decode modes see identical control behaviour
+            self._plan = set_plan_budget_scale(
+                self._plan, self.degrade_controller.scale
+            )
         token = self.mesh.put_batch(first_token)
         out = [token]
         start_idx = len(self.stats)
@@ -512,6 +585,10 @@ class ServeEngine:
                                         nbytes=nbytes))
         if not io_rows:  # n_tokens == 0: nothing to time
             return jnp.concatenate(out, axis=1)
+        recent = self.stats[start_idx:]
+        self._observe_degradation(
+            [s.io_est_s for s in recent], [s.io_sim_s for s in recent]
+        )
         # backfill the overlap-pipeline accounting for the whole loop
         self._log_layer_io(np.asarray(io_rows))
         tl = self.simulator.pipeline.timeline(
@@ -692,6 +769,58 @@ class ServeEngine:
             "cache_mb_per_shard": self.cache_mb / self.n_shards,
             "slots_per_data_shard": self.batch_size // self.mesh.data,
         }
+
+    def fault_summary(self) -> Dict[str, Any]:
+        """Fault-injection + degradation rollup. Lives NEXT TO
+        ``io_summary`` — whose key set is pinned bit-identical across the
+        fault-off/on switch — exactly like ``shard_summary``. With no
+        fault model and no controller it reports the quiescent defaults
+        (profile "none", scale 1.0), so callers can read it
+        unconditionally.
+
+        Fault lanes (core/faults.py): the profile/seed, perturbed event
+        count, tail-spike count, transient-failure retries and their total
+        backoff seconds, the total extra charged seconds, and the deepest
+        thermal-throttle derate seen. ``device_time_s`` is the simulator's
+        cumulative charged I/O clock (the throttle trajectory's input).
+        Degradation lanes (serving/degrade.py, "degrade_" prefix): current
+        budget scale, EWMA ratio, observation/tighten/relax counters."""
+        out: Dict[str, Any] = {
+            "fault_profile": "none",
+            "fault_seed": 0,
+            "fault_enabled": False,
+            "device_time_s": self.simulator.device_time_s,
+            "fault_events": 0,
+            "fault_spikes": 0,
+            "fault_retries": 0,
+            "fault_backoff_s": 0.0,
+            "fault_extra_s": 0.0,
+            "min_throttle_scale": 1.0,
+            "degrade_enabled": self.degrade_controller is not None,
+            "degrade_scale": 1.0,
+            "degrade_ewma_ratio": 1.0,
+            "degrade_observations": 0,
+            "degrade_tighten_steps": 0,
+            "degrade_relax_steps": 0,
+            "degrade_calls_degraded": 0,
+        }
+        if self.faults is not None:
+            fs = self.faults.summary()
+            out.update({
+                "fault_profile": fs["profile"],
+                "fault_seed": fs["seed"],
+                "fault_enabled": self.faults.enabled,
+                "fault_events": fs["events"],
+                "fault_spikes": fs["spikes"],
+                "fault_retries": fs["retries"],
+                "fault_backoff_s": fs["backoff_s"],
+                "fault_extra_s": fs["fault_extra_s"],
+                "min_throttle_scale": fs["min_throttle_scale"],
+            })
+        if self.degrade_controller is not None:
+            ds = self.degrade_controller.summary()
+            out.update({f"degrade_{k}": v for k, v in ds.items()})
+        return out
 
     def io_summary(self) -> Dict[str, float]:
         """Engine-lifetime I/O / pipeline / cache / admission rollup.

@@ -32,6 +32,12 @@ class Request:
     prompt: Dict[str, jnp.ndarray]
     max_new_tokens: int
     arrival_s: float = 0.0
+    # SLO deadline: the request should finish within deadline_s of arrival
+    # (None = best-effort). The scheduler admits earliest-deadline-first
+    # when deadlines are present, counts attainment in SchedulerStats, and
+    # may preempt a deadline-blown request (evict-and-requeue) to free its
+    # slot for one that can still make its deadline.
+    deadline_s: Optional[float] = None
 
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
@@ -41,6 +47,8 @@ class Request:
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
+    # times this request was preempted (evicted mid-decode and requeued)
+    preemptions: int = 0
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
@@ -65,6 +73,20 @@ class Request:
         if self.first_token_s is None:
             raise ValueError(f"request {self.rid} has no first token yet")
         return self.first_token_s - self.arrival_s
+
+    @property
+    def deadline_abs_s(self) -> float:
+        """Absolute deadline on the simulated clock (inf = best-effort)."""
+        if self.deadline_s is None:
+            return float("inf")
+        return self.arrival_s + self.deadline_s
+
+    def met_deadline(self) -> bool:
+        """Whether the finished request met its SLO deadline. Best-effort
+        requests (no deadline) trivially meet it."""
+        if self.deadline_s is None:
+            return True
+        return self.latency_s() <= self.deadline_s
 
 
 class PoissonArrivalDriver:

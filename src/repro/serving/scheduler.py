@@ -2,10 +2,14 @@
 
 vLLM-style iteration-level scheduling, adapted to the flash-offload
 simulator: the engine's batch dimension is a fixed array of request slots;
-requests are admitted FCFS into free slots (prefill scatters their KV into
+requests are admitted into free slots earliest-deadline-first (plain FCFS
+when no request carries a ``deadline_s``; prefill scatters their KV into
 the shared cache), every decode round runs the engine's fused ``lax.scan``
 loop across ALL slots at once, and slots are recycled the moment their
 request hits its token budget — no waiting for the rest of the batch.
+Deadline-blown running requests can be preempted (evict-and-requeue) to
+free their slot for a request that can still meet its SLO; see the
+``Scheduler`` docstring for the exact policy.
 
 Time is simulated: the clock advances by the engine's charged per-step
 latency — the overlapped I/O–compute pipeline's critical path by default
@@ -49,7 +53,15 @@ from .request import Request, RequestState
 
 @dataclasses.dataclass
 class SchedulerStats:
-    """Aggregate serving metrics over one ``run``."""
+    """Aggregate serving metrics over one ``run``.
+
+    With zero finished requests every percentile is NaN (not a fabricated
+    0.0) so downstream asserts can never pass vacuously. The SLO lanes:
+    ``deadlines`` counts finished requests that carried a ``deadline_s``,
+    ``deadlines_met`` how many met it, ``slo_attainment`` their ratio (NaN
+    when no finished request had a deadline), and ``preempted`` how many
+    evict-and-requeue preemptions of deadline-blown requests occurred.
+    """
 
     finished: int
     sim_time_s: float
@@ -62,18 +74,26 @@ class SchedulerStats:
     # stall windows, and the prefill seconds those windows absorbed
     admitted_during_stall: int = 0
     stall_hidden_s: float = 0.0
+    # SLO / deadline accounting
+    latency_p99_s: float = float("nan")
+    deadlines: int = 0
+    deadlines_met: int = 0
+    slo_attainment: float = float("nan")
+    preempted: int = 0
 
     def row(self) -> str:
         return (
             f"{self.finished:4d} req  {self.decode_tokens:5d} tok  "
             f"{self.tokens_per_s:8.1f} tok/s  "
             f"p50 {self.latency_p50_s*1e3:7.2f} ms  "
-            f"p95 {self.latency_p95_s*1e3:7.2f} ms"
+            f"p95 {self.latency_p95_s*1e3:7.2f} ms  "
+            f"p99 {self.latency_p99_s*1e3:7.2f} ms  "
+            f"slo {self.slo_attainment:5.3f}"
         )
 
 
 class Scheduler:
-    """FCFS continuous batching over ``engine.batch_size`` slots.
+    """Continuous batching over ``engine.batch_size`` slots.
 
     ``round_tokens`` is the fused-scan granularity: each round decodes that
     many tokens for every running slot in ONE jit call, then reconciles
@@ -81,6 +101,24 @@ class Scheduler:
     more host overhead but over-decode up to round_tokens-1 tokens for a
     request that finishes mid-round (the tokens are dropped; the slot is
     recycled at the round boundary).
+
+    **Deadline-aware scheduling.** Admission is earliest-deadline-first
+    over the arrived waiting requests: feasible deadline-carrying requests
+    first (by absolute deadline), then best-effort requests (no deadline —
+    their deadline is +inf, so the order among them is FCFS by arrival:
+    a workload without deadlines schedules exactly as the original FCFS
+    scheduler), then already-blown requests last (readmitting a blown
+    request ahead of a feasible one would just spread the miss). At each
+    round boundary a deadline-blown RUNNING request may be **preempted**:
+    evicted from its slot and requeued WAITING, freeing the slot for an
+    arrived request that can still make its deadline. Eviction is cheap
+    here because chunk plans and residency state live in the decode carry
+    per *slot*, not per request — the readmitted request simply prefills
+    into whatever slot frees up. Preemption restarts the request's
+    generation (greedy decode reproduces the same tokens deterministically)
+    and is capped at once per request, so every request still drains. A
+    preempted-and-requeued request keeps its original ``arrival_s`` (its
+    latency accounts the full story) and counts in ``stats().preempted``.
     """
 
     def __init__(
@@ -109,6 +147,7 @@ class Scheduler:
         self.finished: List[Request] = []
         self.now_s = 0.0
         self.decode_tokens = 0
+        self.preempted = 0
         # per-slot current input token fed to the next decode round
         self._slot_tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         engine.enable_slots()
@@ -124,17 +163,38 @@ class Scheduler:
     def num_running(self) -> int:
         return self.n_slots - len(self.free_slots())
 
+    def _admission_key(self, req: Request):
+        """EDF admission order over arrived waiting requests: feasible
+        deadline requests by absolute deadline, then best-effort (inf
+        deadline ⇒ FCFS by arrival among them), then already-blown
+        requests last. Deterministic tie-break by arrival then rid."""
+        dl = req.deadline_abs_s
+        blown = dl < self.now_s
+        return (blown, dl, req.arrival_s, req.rid)
+
+    def _pop_next_waiting(self) -> Optional[Request]:
+        """The next arrived waiting request under the admission order, or
+        None if nothing has arrived yet. With no deadlines anywhere this is
+        exactly the FCFS head (all keys are (False, inf, arrival, rid))."""
+        arrived = [r for r in self.waiting if r.arrival_s <= self.now_s]
+        if not arrived:
+            return None
+        req = min(arrived, key=self._admission_key)
+        self.waiting.remove(req)
+        return req
+
     def _admit_ready(self) -> int:
-        """Admit WAITING requests that have arrived into free slots (FCFS).
-        Prefill advances the clock by the request's simulated weight-stream
-        time, minus whatever fits into banked decode-stall credit (the
-        admission rode an earlier round's I/O bubbles — see module doc).
-        Returns the number admitted."""
+        """Admit WAITING requests that have arrived into free slots
+        (earliest-deadline-first; pure FCFS when no request carries a
+        deadline). Prefill advances the clock by the request's simulated
+        weight-stream time, minus whatever fits into banked decode-stall
+        credit (the admission rode an earlier round's I/O bubbles — see
+        module doc). Returns the number admitted."""
         admitted = 0
         for slot in self.free_slots():
-            if not self.waiting or self.waiting[0].arrival_s > self.now_s:
+            req = self._pop_next_waiting()
+            if req is None:
                 break
-            req = self.waiting.popleft()
             last, prefill_sim = self.engine.admit_slot(slot, req.prompt)
             prefill_sim = float(prefill_sim)
             if self.admit_in_bubbles and self.stall_credit_s > 0.0:
@@ -162,15 +222,53 @@ class Scheduler:
         req.slot = None
         self.finished.append(req)
 
+    def _preempt_blown(self) -> int:
+        """Preempt deadline-blown RUNNING requests: evict from the slot and
+        requeue WAITING (the slot-local decode carry makes this a pure slot
+        recycle — the readmission prefills fresh, and greedy decode
+        regenerates the same tokens deterministically). Only fires when an
+        arrived waiting request can still make its own deadline (otherwise
+        the swap buys nothing), preempts at most that many slots, and never
+        preempts the same request twice — so every request still drains.
+        Returns the number preempted."""
+        feasible = sum(
+            1 for r in self.waiting
+            if r.arrival_s <= self.now_s and self.now_s <= r.deadline_abs_s
+        )
+        n = 0
+        for req in list(self.running):
+            if n >= feasible:
+                break
+            if req is None or req.done:
+                continue
+            if req.deadline_abs_s < self.now_s and req.preemptions < 1:
+                self.running[req.slot] = None
+                req.slot = None
+                req.state = RequestState.WAITING
+                req.preemptions += 1
+                # restart generation on readmission — greedy decode is
+                # deterministic, so the regenerated tokens are identical.
+                # first_token_s keeps the original first-token mark (the
+                # stream already started once); latency runs to the final
+                # finish, accounting the preemption's full cost.
+                req.tokens_out = []
+                self.waiting.append(req)
+                self.preempted += 1
+                n += 1
+        return n
+
     # -- decode rounds -------------------------------------------------------
     def step(self) -> bool:
         """One scheduler iteration: admit, decode a round, reconcile.
         Returns False when there is nothing left to do."""
-        # fast-forward an idle engine to the next arrival
+        # fast-forward an idle engine to the next arrival (requeued
+        # preemptees can put the deque out of arrival order — scan it)
         if self.num_running() == 0:
             if not self.waiting:
                 return False
-            self.now_s = max(self.now_s, self.waiting[0].arrival_s)
+            self.now_s = max(
+                self.now_s, min(r.arrival_s for r in self.waiting)
+            )
         self._admit_ready()
         if self.num_running() == 0:
             return bool(self.waiting)
@@ -204,6 +302,7 @@ class Scheduler:
         for req in list(active):
             if req.done:
                 self._evict(req)
+        self._preempt_blown()
         return bool(self.waiting) or self.num_running() > 0
 
     def run(self, max_rounds: int = 100_000) -> SchedulerStats:
@@ -216,16 +315,32 @@ class Scheduler:
         return self.stats()
 
     def stats(self) -> SchedulerStats:
-        lats = np.array([r.latency_s() for r in self.finished]) if self.finished else np.array([0.0])
-        ttfts = np.array([r.ttft_s() for r in self.finished]) if self.finished else np.array([0.0])
+        if self.finished:
+            lats = np.array([r.latency_s() for r in self.finished])
+            ttfts = np.array([r.ttft_s() for r in self.finished])
+            p50, p95, p99 = (
+                float(np.percentile(lats, q)) for q in (50, 95, 99)
+            )
+            ttft_p50 = float(np.percentile(ttfts, 50))
+        else:
+            # no finished requests → NaN percentiles, never a fabricated
+            # 0.0 a bench floor could pass vacuously
+            p50 = p95 = p99 = ttft_p50 = float("nan")
+        with_dl = [r for r in self.finished if r.deadline_s is not None]
+        met = sum(1 for r in with_dl if r.met_deadline())
         return SchedulerStats(
             finished=len(self.finished),
             sim_time_s=self.now_s,
             decode_tokens=self.decode_tokens,
             tokens_per_s=self.decode_tokens / max(self.now_s, 1e-12),
-            latency_p50_s=float(np.percentile(lats, 50)),
-            latency_p95_s=float(np.percentile(lats, 95)),
-            ttft_p50_s=float(np.percentile(ttfts, 50)),
+            latency_p50_s=p50,
+            latency_p95_s=p95,
+            ttft_p50_s=ttft_p50,
             admitted_during_stall=self.admitted_during_stall,
             stall_hidden_s=self.stall_hidden_s,
+            latency_p99_s=p99,
+            deadlines=len(with_dl),
+            deadlines_met=met,
+            slo_attainment=(met / len(with_dl)) if with_dl else float("nan"),
+            preempted=self.preempted,
         )

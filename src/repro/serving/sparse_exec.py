@@ -139,6 +139,40 @@ def plan_transfer_bytes(plan) -> jnp.ndarray:
     return total
 
 
+def set_plan_budget_scale(plan, scale: float):
+    """Rewrite the decode plan's carried budget-scale leaf ("bscale",
+    present only on degradable plans — see ``SparseExecution.init_plan``)
+    to ``scale`` for every layer and site. Host-side helper the engine
+    calls between decode invocations with the DegradationController's
+    current scale: because the scale rides the plan pytree it reaches the
+    jitted refresh as a TRACED value — mutating a closed-over array on the
+    SparseExecution instance would be a silent no-op once the scan is
+    compiled. No-op (returns ``plan`` unchanged) on non-degradable plans."""
+    if not plan:
+        return plan
+    s = float(scale)
+    if not (0.0 < s <= 1.0):
+        raise ValueError(f"budget scale must be in (0, 1], got {scale}")
+    out = {}
+    changed = False
+    for kind, state in plan.items():
+        if isinstance(state, dict) and "bscale" in state:
+            state = dict(state)
+            state["bscale"] = jnp.full_like(state["bscale"], s)
+            changed = True
+        out[kind] = state
+    return out if changed else plan
+
+
+def plan_budget_scale(plan) -> Optional[float]:
+    """The (uniform) budget scale currently carried by a degradable plan,
+    or None for plans without the "bscale" leaf. Host-side accessor."""
+    for state in (plan or {}).values():
+        if isinstance(state, dict) and "bscale" in state:
+            return float(np.asarray(state["bscale"]).reshape(-1)[0])
+    return None
+
+
 def reset_plan_counters(plan):
     """Zero the hit/miss/bytes accumulators of a decode plan state. Called
     by the engine at the start of each decode invocation so the float32
@@ -211,6 +245,7 @@ class SparseExecution:
         kernel_interpret: Optional[bool] = None,
         wbits: int = 16,
         mesh: Optional[ServeMesh] = None,
+        degradable: bool = False,
     ):
         """``backend``: the decode EXECUTION backend for the planned decode
         path (kernels/backend.py) — ``"reference"`` computes the masked
@@ -245,6 +280,16 @@ class SparseExecution:
         tables, residency budget, ``IOEvent.nbytes``) prices the quantized
         row, so the same I/O budget admits ~2x the rows.
 
+        ``degradable``: adaptive-degradation support (serving/degrade.py).
+        When True, ``init_plan`` adds a per-layer "bscale" leaf to every
+        site entry — a traced multiplier on the selection budgets that the
+        engine's ``DegradationController`` tightens while the storage
+        device is degraded (fewer selected rows ⇒ fewer streamed bytes,
+        leaning on residency-cache hits) and relaxes on recovery. At the
+        default scale 1.0 the effective budgets are bit-exact the static
+        ones, and with ``degradable=False`` (default) the plan pytree
+        structure is exactly the pre-degradation one.
+
         ``mesh``: the serve-stack (data, model) mesh context
         (sharding/serve.py). Selection stays REPLICATED — importance
         vectors are constrained to full replication before any cross-batch
@@ -272,6 +317,7 @@ class SparseExecution:
             )
         self.reorderings = reorderings or {}
         self.cached = cached or {}
+        self.degradable = bool(degradable)
         self.cache_mb = float(cache_mb)
         self.cache_caps: Optional[Dict[str, int]] = None  # set by init_plan
         sp = normalize_site_sparsity(sparsity)
@@ -455,13 +501,29 @@ class SparseExecution:
                     res_pad = res_pad.at[i, : self.sites[kind].n].set(residents[i])
             else:
                 res_pad = None
+            # degradable plans carry a traced per-layer budget multiplier
+            # ("bscale"): the DegradationController's lever on the selected
+            # row count. floor(b × 1.0) == b exactly (site sizes ≪ 2^24 are
+            # f32-exact), so scale 1.0 is bit-identical to the static
+            # budgets; the clip keeps at least one row selected per site.
+            bscale = plan[order[0]].get("bscale")
+            if bscale is None:
+                budgets = self._budgets
+            else:
+                budgets = jnp.clip(
+                    jnp.floor(
+                        self._budgets.astype(jnp.float32) * bscale
+                    ).astype(jnp.int32),
+                    jnp.minimum(self._budgets, 1),
+                    self._budgets,
+                )
             if self.method == "topk":
                 # LLM-in-a-flash-style baseline: selection ignores residency
                 # (pure importance rank); only the I/O charge sees the cache.
-                masks = jax.vmap(topk_mask)(vs, self._budgets)
+                masks = jax.vmap(topk_mask)(vs, budgets)
                 masks = masks & self.batched.row_valid
             else:
-                masks, _ = self.batched.select(vs, self._budgets, res_pad)
+                masks, _ = self.batched.select(vs, budgets, res_pad)
 
             # the kernel gather plan: every site's COMPUTE mask (selection /
             # storage row order; legacy static-resident rows participate in
@@ -742,6 +804,11 @@ class SparseExecution:
                 if pinned is not None:
                     score0 = jnp.where(pinned[None, :], PIN_SCORE, score0)
                 entry["score"] = score0
+            if self.degradable:
+                # the DegradationController's traced budget multiplier —
+                # rewritten between decode calls by set_plan_budget_scale,
+                # consumed inside the jitted refresh (1.0 = full budgets)
+                entry["bscale"] = jnp.ones((n_layers,), jnp.float32)
             plan[kind] = entry
         return plan
 

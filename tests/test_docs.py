@@ -25,7 +25,7 @@ if str(REPO) not in sys.path:  # make `import benchmarks.*` resolvable
     sys.path.insert(0, str(REPO))
 
 DOC_FILES = ["README.md", "docs/serving.md", "docs/kernels.md",
-             "docs/benchmarks.md", "docs/sharding.md"]
+             "docs/benchmarks.md", "docs/sharding.md", "docs/robustness.md"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 # --flag tokens: double dash + lowercase word, dash-separated (excludes

@@ -94,3 +94,26 @@ def test_profile_registry():
     assert get_profile("tpu") is TPU_V5E_HBM
     with pytest.raises(KeyError):
         get_profile("nonexistent")
+
+
+def test_table_from_measurements_rejects_bad_measurements():
+    """Duplicate sizes and latencies that shrink as size grows are
+    measurement errors — reject them instead of interpolating a garbage
+    table (ISSUE 8 satellite)."""
+    with pytest.raises(ValueError, match="duplicate measurement sizes"):
+        table_from_measurements(
+            "custom", 512, np.array([1, 4, 4, 64]),
+            np.array([1e-4, 2e-4, 2.1e-4, 8e-4]),
+        )
+    with pytest.raises(ValueError, match="reading more can't be faster"):
+        table_from_measurements(
+            "custom", 512, np.array([1, 4, 16, 64]),
+            np.array([1e-4, 3e-4, 2e-4, 8e-4]),
+        )
+    # validation runs on the size-sorted view: an unsorted but monotone
+    # log is fine, and an IOPS-bound plateau (equal latencies) is fine
+    t = table_from_measurements(
+        "custom", 512, np.array([64, 1, 16, 4]),
+        np.array([8e-4, 1e-4, 1e-4, 1e-4]),
+    )
+    assert float(t.lookup(jnp.asarray(16))) == pytest.approx(1e-4, rel=1e-5)

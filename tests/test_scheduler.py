@@ -271,3 +271,89 @@ def test_slot_decode_matches_single_stream(lm):
     eng_c.cache = cache
     out_c = eng_c.decode(tok0, 4)
     assert bool(jnp.all(slot_toks == out_c[:, 1:]))
+
+
+# -- failure paths and SLO machinery (ISSUE 8 satellites) --------------------
+
+
+def test_stats_empty_is_nan_not_zero(lm):
+    """Zero finished requests must yield NaN percentiles (and finished=0),
+    never a fabricated 0.0 a bench latency floor could pass vacuously."""
+    cfg, model, params = lm
+    sched = Scheduler(_engine(model, params), round_tokens=2)
+    s = sched.stats()
+    assert s.finished == 0 and s.decode_tokens == 0
+    assert np.isnan(s.latency_p50_s) and np.isnan(s.latency_p95_s)
+    assert np.isnan(s.latency_p99_s) and np.isnan(s.ttft_p50_s)
+    assert np.isnan(s.slo_attainment) and s.deadlines == 0
+    assert s.preempted == 0
+
+
+def test_run_drain_timeout_raises(lm):
+    """run(max_rounds) must fail loudly when the workload cannot drain in
+    the allotted rounds instead of spinning forever."""
+    cfg, model, params = lm
+    sched = Scheduler(_engine(model, params), round_tokens=1)
+    sched.submit(_requests(cfg, 1, max_new=8))  # needs >= 8 rounds
+    with pytest.raises(RuntimeError, match="did not drain in 2 rounds"):
+        sched.run(max_rounds=2)
+
+
+def test_over_decode_tokens_dropped(lm):
+    """A request finishing mid-round must not keep the round's filler
+    tokens: max_new is exact even when round_tokens over-decodes."""
+    cfg, model, params = lm
+    sched = Scheduler(_engine(model, params), round_tokens=4)
+    reqs = _requests(cfg, 2, max_new=3)
+    sched.submit(reqs)
+    stats = sched.run()
+    assert stats.finished == 2
+    assert all(len(r.tokens_out) == 3 for r in reqs)
+    assert stats.decode_tokens == 6  # dropped filler never counted
+
+
+def test_edf_admission_orders_by_deadline(lm):
+    """With deadlines attached, admission is earliest-deadline-first; the
+    latest-deadline request waits for a recycled slot."""
+    cfg, model, params = lm
+    sched = Scheduler(_engine(model, params, batch=2), round_tokens=2)
+    reqs = _requests(cfg, 3, max_new=4)
+    deadlines = [10.0, 1.0, 5.0]
+    for r, d in zip(reqs, deadlines):
+        r.deadline_s = d  # all arrive at t=0
+    sched.submit(reqs)
+    assert sched.step()  # 4 tokens at round_tokens=2: nobody finishes yet
+    running = sorted(r.rid for r in sched.running if r is not None)
+    assert running == [1, 2]  # tightest two deadlines admitted first
+    stats = sched.run()
+    assert stats.finished == 3 and stats.deadlines == 3
+    assert [r.rid for r in sched.finished] == [1, 2, 0]
+
+
+def test_preemption_recycles_slots_and_drains(lm):
+    """Deadline-blown requests are evicted-and-requeued (at most once), the
+    freed slots are reused, and every request still finishes with exactly
+    its max_new tokens — preemption can never wedge the drain loop."""
+    cfg, model, params = lm
+    eng = ServeEngine(model, params, max_seq=64, batch_size=2, device="nano",
+                      sparsity=0.4, method="chunk", seed=1,
+                      fault_profile="thermal_throttle", fault_seed=0)
+    eng.simulator.noise = 0.0
+    sched = Scheduler(eng, round_tokens=2)
+    reqs = _requests(cfg, 8, max_new=6)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.002 * i
+        r.deadline_s = 0.03
+    sched.submit(reqs)
+    stats = sched.run()
+    assert stats.finished == 8
+    assert stats.preempted >= 1
+    pre = [r for r in reqs if r.preemptions > 0]
+    assert pre and all(r.preemptions == 1 for r in pre)  # capped at one
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert all(len(r.tokens_out) == 6 for r in reqs)
+    # slots fully recycled after the drain
+    assert sched.free_slots() == [0, 1]
+    # requeue kept arrival bookkeeping causally ordered
+    for r in pre:
+        assert r.arrival_s <= r.admitted_s <= r.finished_s

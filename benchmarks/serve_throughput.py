@@ -672,6 +672,85 @@ def bench_fault_robustness(rows: Rows, cfg, model, params,
     )
 
 
+def bench_integrity(rows: Rows, cfg, model, params,
+                    decode_tokens: int = 6) -> None:
+    """End-to-end chunk integrity (PR 9 acceptance rows, deterministic —
+    seeded corruption, simulator noise irrelevant to tokens):
+
+      * serve/integrity_recovered_w{16,8} — bit_rot (every corruption
+        transient, hence recoverable) + the recovery ladder: greedy tokens
+        must be BYTE-IDENTICAL to the corruption-off engine and the
+        detection rate must be exactly 1.0 (detected == recovered, nothing
+        substituted or dropped) — the CI smoke fails if a corrupted block
+        ever slips past the checksum or a recovery rung leaks into compute;
+      * serve/integrity_norecover — same seed with recovery off must
+        CHANGE the tokens (the injection is real, not a counter);
+      * serve/integrity_ladder — degraded_nand retention errors exhaust
+        the re-read budget and walk the substitute/drop rungs; the counters
+        land in the artifact so the ladder's mix is tracked over time."""
+    tok0 = jnp.ones((BATCH, 1), jnp.int32)
+    for wbits, backend in ((16, "reference"), (8, "kernel")):
+        base = _engine(model, params, backend=backend, wbits=wbits)
+        t_base = np.asarray(base.decode(tok0, decode_tokens))
+        eng = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                          device="nano", sparsity=0.4, method="chunk",
+                          seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                          backend=backend, wbits=wbits,
+                          corruption_profile="bit_rot", corruption_seed=7)
+        t = np.asarray(eng.decode(tok0, decode_tokens))
+        s = eng.io_summary()
+        det, rec = s["corruptions_detected"], s["corruptions_recovered"]
+        assert det > 0, (
+            f"wbits={wbits}: bit_rot drew no corruption — the integrity "
+            "rows are vacuous; raise decode_tokens or change the seed"
+        )
+        assert det == rec and not s["corruptions_substituted"] \
+            and not s["corruptions_dropped"], (
+            f"wbits={wbits}: bit_rot recovery rate must be exactly 1.0 "
+            f"(detected={det} recovered={rec})"
+        )
+        assert np.array_equal(t_base, t), (
+            f"wbits={wbits}: recovered corruption changed greedy tokens — "
+            "a damaged block reached compute"
+        )
+        rows.add(f"serve/integrity_recovered_w{wbits}",
+                 s["integrity_reread_s"] * 1e6,
+                 f"backend={backend} detected={det:.0f} recovered={rec:.0f} "
+                 f"detection_rate=1.0 tokens_identical=True")
+    # recovery off: the same seed must measurably corrupt the output
+    eng_off = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                          device="nano", sparsity=0.4, method="chunk",
+                          seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                          corruption_profile="bit_rot", corruption_seed=7,
+                          recover=False)
+    t_off = np.asarray(eng_off.decode(tok0, decode_tokens))
+    base16 = _engine(model, params)
+    assert not np.array_equal(
+        np.asarray(base16.decode(tok0, decode_tokens)), t_off
+    ), "recovery-off corruption left tokens untouched — injection inert?"
+    s_off = eng_off.io_summary()
+    rows.add("serve/integrity_norecover", 0.0,
+             f"detected={s_off['corruptions_detected']:.0f} "
+             f"tokens_corrupted=True")
+    # the full ladder: persistent retention errors → substitute/drop rungs
+    eng_nand = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                           device="nano", sparsity=0.4, method="chunk",
+                           seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                           corruption_profile="degraded_nand",
+                           corruption_seed=3, max_reread=1)
+    eng_nand.decode(tok0, decode_tokens)
+    s_n = eng_nand.io_summary()
+    assert s_n["corruptions_substituted"] > 0, (
+        "degraded_nand never reached the substitution rung — the ladder "
+        "below re-read is untested"
+    )
+    rows.add("serve/integrity_ladder", s_n["integrity_reread_s"] * 1e6,
+             f"detected={s_n['corruptions_detected']:.0f} "
+             f"recovered={s_n['corruptions_recovered']:.0f} "
+             f"substituted={s_n['corruptions_substituted']:.0f} "
+             f"dropped={s_n['corruptions_dropped']:.0f}")
+
+
 def run(rows: Rows, smoke: bool = False) -> None:
     cfg, model, params, batch = _setup()
     if smoke:
@@ -696,6 +775,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
         bench_scheduler_admission(rows, cfg, model, params, n_requests=4,
                                   smoke=True)
         bench_fault_robustness(rows, cfg, model, params)
+        bench_integrity(rows, cfg, model, params)
         return
     bench_fused_vs_loop(rows, model, params, batch)
     bench_backend_parity(rows, model, params, batch, repeats=3)
@@ -707,6 +787,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
     bench_scheduler_admission(rows, cfg, model, params)
     bench_continuous_batching(rows, cfg, model, params)
     bench_fault_robustness(rows, cfg, model, params)
+    bench_integrity(rows, cfg, model, params, decode_tokens=8)
 
 
 def _emit_json(rows: Rows, path: str, smoke: bool) -> None:

@@ -215,27 +215,42 @@ class FaultModel:
         if latency_s == 0.0:
             return out
         self.n_events += 1
-        lat = float(latency_s)
-        if p.throttle is not None:
-            out.throttle_scale = p.throttle.scale(busy_s)
-            lat = lat / out.throttle_scale
-            self.min_throttle_scale = min(self.min_throttle_scale,
-                                          out.throttle_scale)
+        # spike draw first (fixed draw order — replay depends on it); the
+        # spike multiplier applies to every attempt's read: controller GC /
+        # queue resonance persists for the duration of the event
+        spike_mult = 1.0
         if p.spike_prob > 0 and float(self.rng.random()) < p.spike_prob:
-            lat *= p.spike_scale
+            spike_mult = p.spike_scale
             out.spiked = True
             self.n_spikes += 1
-        charged = lat
+        base = float(latency_s) * spike_mult
+
+        def attempt_read(elapsed_s: float) -> tuple:
+            """One attempt's read time at the throttle scale the busy clock
+            has ADVANCED to ``elapsed_s`` seconds into this event — retries
+            must not re-pay the read at the scale frozen from the first
+            attempt (the failed reads and backoffs heat the device too)."""
+            if p.throttle is None:
+                return base, 1.0
+            s = p.throttle.scale(busy_s + elapsed_s)
+            self.min_throttle_scale = min(self.min_throttle_scale, s)
+            return base / s, s
+
+        read, out.throttle_scale = attempt_read(0.0)
+        charged = read
         if p.fail_prob > 0:
             backoff = p.backoff_base_s
             for attempt in range(p.max_retries):
                 if float(self.rng.random()) >= p.fail_prob:
                     break
-                # the failed read is paid in full, then the backoff delay,
-                # then the retry's read time
-                charged += backoff + lat
+                # the failed read was paid in full; after the backoff delay
+                # the retry re-reads at the throttle scale of the advanced
+                # busy clock (charged so far + this backoff)
                 out.retries += 1
                 out.backoff_s += backoff
+                charged += backoff
+                retry_read, _ = attempt_read(charged)
+                charged += retry_read
                 backoff *= p.backoff_mult
             self.n_retries += out.retries
             self.backoff_s += out.backoff_s
@@ -254,3 +269,210 @@ class FaultModel:
             "fault_extra_s": self.extra_s,
             "min_throttle_scale": self.min_throttle_scale,
         }
+
+
+# ---------------------------------------------------------------------------
+# data-plane corruption (PR 9): faults that change BYTES, not just time
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptionProfile:
+    """One named data-corruption scenario (see ``CORRUPTION_PROFILES``).
+
+    Unlike ``FaultProfile`` (time-only), corruption perturbs the *payload*
+    of fetched chunk blocks: with probability ``p_block`` per fetched
+    8-row block per plan-refresh epoch, the block's bytes are damaged —
+    ``mode="flip"`` flips one uniformly-drawn bit (NAND retention /
+    read-disturb), ``mode="zero"`` zeroes the whole block (a torn read).
+    A detected corruption is re-read up to ``max_reread`` times (model
+    parameter, CLI ``--max-reread``); each re-read independently comes back
+    corrupt again with probability ``p_stuck`` (0 = transient, re-read is
+    always clean; high = retention damage that persists). Re-reads charge
+    the block's read time plus exponential backoff
+    (``backoff_base_s * backoff_mult**k``) through the I/O accounting.
+    """
+
+    name: str
+    p_block: float = 0.0
+    mode: str = "flip"
+    p_stuck: float = 0.0
+    backoff_base_s: float = 5e-5
+    backoff_mult: float = 2.0
+
+    def __post_init__(self):
+        if not (0.0 <= self.p_block < 1.0):
+            raise ValueError(f"p_block must be in [0, 1), got {self.p_block}")
+        if self.mode not in ("flip", "zero"):
+            raise ValueError(f"mode must be 'flip' or 'zero', got {self.mode!r}")
+        if not (0.0 <= self.p_stuck < 1.0):
+            raise ValueError(f"p_stuck must be in [0, 1), got {self.p_stuck}")
+        if self.backoff_base_s < 0 or self.backoff_mult < 1.0:
+            raise ValueError("backoff_base_s must be >= 0 and backoff_mult >= 1")
+
+
+# Calibrated so short CI decode runs (a few thousand fetched blocks) see
+# corruption events without drowning in them: bit_rot's flips are always
+# transient (the recovered-byte-identity CI floor needs every corruption
+# recoverable), degraded_nand's retention errors frequently survive the
+# re-read budget and exercise the full degradation ladder.
+CORRUPTION_PROFILES: Dict[str, CorruptionProfile] = {
+    p.name: p
+    for p in (
+        CorruptionProfile("none"),
+        # transient read-disturb bit flips: always clean on re-read
+        CorruptionProfile("bit_rot", p_block=0.02, mode="flip", p_stuck=0.0),
+        # torn reads: a block arrives zeroed; usually clean on re-read
+        CorruptionProfile("torn_read", p_block=0.01, mode="zero", p_stuck=0.35),
+        # worn-out NAND: frequent flips that often persist across re-reads
+        CorruptionProfile("degraded_nand", p_block=0.05, mode="flip",
+                          p_stuck=0.65),
+    )
+}
+
+
+def get_corruption_profile(name: str) -> CorruptionProfile:
+    try:
+        return CORRUPTION_PROFILES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown corruption profile {name!r}; "
+            f"have {sorted(CORRUPTION_PROFILES)}"
+        )
+
+
+def corruption_key(base_key, lid, epoch, site_idx: int, matrix_idx: int):
+    """The integrity subsystem's key schedule: one jax PRNG key per
+    (layer, refresh epoch, site, matrix). ``lid``/``epoch`` are traced
+    plan-carry values (serving/sparse_exec.py), so the SAME corruption
+    pattern replays for a given (profile, seed) regardless of backend,
+    wbits, prefetch depth or scan/per-token decode path."""
+    import jax
+
+    k = jax.random.fold_in(base_key, lid)
+    k = jax.random.fold_in(k, epoch)
+    return jax.random.fold_in(k, site_idx * 8 + matrix_idx)
+
+
+class CorruptionModel:
+    """Seeded, deterministic data-plane corruption injector.
+
+    Pure configuration plus traced jnp draw/apply helpers — unlike
+    ``FaultModel`` there is no host-side RNG stream: every draw derives
+    from ``jax.random`` keys folded over (seed, layer, epoch, site,
+    matrix) via ``corruption_key``, so the injector composes with the
+    scan-fused decode path and replays bit-identically. Counters live in
+    the decode plan (detected/recovered/substituted/dropped lanes) and
+    surface through ``ServeEngine.io_summary()``.
+    """
+
+    def __init__(
+        self,
+        profile: str | CorruptionProfile = "none",
+        seed: int = 0,
+        max_reread: int = 2,
+        recover: bool = True,
+    ):
+        self.profile = (
+            profile if isinstance(profile, CorruptionProfile)
+            else get_corruption_profile(profile)
+        )
+        self.seed = int(seed)
+        if max_reread < 0:
+            raise ValueError(f"max_reread must be >= 0, got {max_reread}")
+        self.max_reread = int(max_reread)
+        self.recover = bool(recover)
+
+    @property
+    def enabled(self) -> bool:
+        return self.profile.p_block > 0.0
+
+    def base_key(self):
+        import jax
+
+        return jax.random.key(self.seed)
+
+    # -- traced draw/apply helpers (safe inside the decode lax.scan) --------
+    def draw_blocks(self, key, fetched_blocks):
+        """(NB,) bool: which of the blocks actually read from flash this
+        epoch arrive corrupted. ``fetched_blocks`` masks the draw to blocks
+        with at least one selected non-resident row — resident rows never
+        touch the storage data plane."""
+        import jax
+        import jax.numpy as jnp
+
+        u = jax.random.uniform(jax.random.fold_in(key, 0),
+                               fetched_blocks.shape)
+        return fetched_blocks & (u < jnp.float32(self.profile.p_block))
+
+    def draw_rereads(self, key, corrupt):
+        """Per corrupted block: (re-reads charged (NB,) i32, recovered
+        (NB,) bool). The number of consecutive still-corrupt re-reads is a
+        geometric draw with persistence ``p_stuck``; a block recovers iff
+        a clean re-read lands within the ``max_reread`` budget. Recovery
+        off (or budget 0) charges no re-reads and recovers nothing."""
+        import jax
+        import jax.numpy as jnp
+
+        zeros = jnp.zeros(corrupt.shape, jnp.int32)
+        if not self.recover or self.max_reread == 0:
+            return zeros, jnp.zeros(corrupt.shape, bool)
+        p = self.profile
+        if p.p_stuck <= 0.0:
+            fails = zeros
+        else:
+            u = jax.random.uniform(
+                jax.random.fold_in(key, 1), corrupt.shape,
+                minval=jnp.float32(1e-12),
+            )
+            fails = jnp.floor(
+                jnp.log(u) / jnp.log(jnp.float32(p.p_stuck))
+            ).astype(jnp.int32)
+        rereads = jnp.where(corrupt,
+                            jnp.minimum(fails + 1, self.max_reread), 0)
+        recovered = corrupt & (fails < self.max_reread)
+        return rereads, recovered
+
+    def backoff_seconds(self, rereads):
+        """Total exponential-backoff seconds for ``rereads`` attempts per
+        block — the same ``base * mult**k`` ladder ``FaultModel`` charges
+        transient read failures."""
+        import jax.numpy as jnp
+
+        p = self.profile
+        r = rereads.astype(jnp.float32)
+        if p.backoff_mult == 1.0:
+            return jnp.float32(p.backoff_base_s) * r
+        m = jnp.float32(p.backoff_mult)
+        return jnp.float32(p.backoff_base_s) * (m**r - 1.0) / (m - 1.0)
+
+    def corrupt_payload(self, w, corrupt_blocks, key, block_rows: int = 8):
+        """Apply the drawn corruption to an (N, D) payload matrix — the
+        bytes the fetch actually delivered. ``mode="zero"`` zeroes every
+        row of a corrupted block; ``mode="flip"`` XORs one drawn bit of
+        one drawn element per corrupted block (via bitcast, so int8 and
+        fp payloads corrupt identically at the bit level). Deterministic
+        in ``key``; both execution backends apply the identical function,
+        so even corrupted tokens stay byte-identical across backends."""
+        import jax
+        import jax.numpy as jnp
+
+        n, d = w.shape
+        nb = n // block_rows
+        if self.profile.mode == "zero":
+            keep = ~jnp.repeat(corrupt_blocks, block_rows)
+            return jnp.where(keep[:, None], w, jnp.zeros((), w.dtype))
+        itemsize = jnp.dtype(w.dtype).itemsize
+        uint = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[itemsize]
+        elem = jax.random.randint(jax.random.fold_in(key, 2), (nb,), 0,
+                                  block_rows * d)
+        bit = jax.random.randint(jax.random.fold_in(key, 3), (nb,), 0,
+                                 itemsize * 8)
+        xor_word = (jnp.uint32(1) << bit.astype(jnp.uint32)).astype(uint)
+        u = jax.lax.bitcast_convert_type(w, uint).reshape(nb, block_rows * d)
+        flips = jnp.zeros_like(u).at[jnp.arange(nb), elem].set(
+            jnp.where(corrupt_blocks, xor_word, jnp.zeros((), uint))
+        )
+        return jax.lax.bitcast_convert_type(
+            (u ^ flips).reshape(n, d), w.dtype
+        )

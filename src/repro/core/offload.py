@@ -52,6 +52,12 @@ class IOEvent:
     model charged on top of the clean simulated latency (throttle + spikes
     + retries + backoff). Both stay at their defaults with faults disabled,
     so fault-off event logs compare equal to pre-fault builds.
+
+    ``integrity_s`` (chunk integrity, PR 9): the checksum-verified re-read
+    seconds the integrity subsystem charged on this event — detected
+    payload corruptions re-pay their 8-row-block reads plus exponential
+    backoff (serving/sparse_exec.py). 0.0 with corruption injection off,
+    so integrity-off event logs compare equal to pre-integrity builds.
     """
 
     name: str
@@ -62,6 +68,7 @@ class IOEvent:
     shard_bytes: Optional[Tuple[float, ...]] = None
     retries: int = 0
     fault_s: float = 0.0
+    integrity_s: float = 0.0
 
 
 class FlashOffloadSimulator:
@@ -153,6 +160,7 @@ class FlashOffloadSimulator:
         hit_rate: float = 0.0,
         nbytes: float = 0.0,
         shard_bytes: Optional[Sequence[float]] = None,
+        integrity_s: float = 0.0,
     ) -> float:
         """Turn an additive-model estimate (computed inside jit by the
         runtime) into a simulated measurement — same lift + jitter model as
@@ -161,18 +169,33 @@ class FlashOffloadSimulator:
         active; ``hit_rate`` records the tier's hit fraction on the event and
         ``nbytes`` the step's estimated transfer volume (miss rows × row
         bytes, from the decode-plan counters) so ``total_bytes()`` stays
-        meaningful on the estimate-driven paths."""
-        if est_s <= 0.0:
+        meaningful on the estimate-driven paths.
+
+        ``integrity_s``: checksum-verified re-read seconds from the chunk
+        integrity subsystem, added verbatim on top of the fault-perturbed
+        latency (re-reads are deterministic per (profile, seed), so they
+        must not consume this simulator's jitter stream). 0.0 leaves the
+        charged time — and the RNG stream — bit-identical to pre-integrity
+        behaviour; ``io_est_s`` stays the clean planning estimate either
+        way."""
+        if est_s <= 0.0 and integrity_s <= 0.0:
             return 0.0
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
-        jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
-        latency, retries, fault_s = self._charge(est_s * lift * jitter)
+        if est_s > 0.0:
+            jitter = self.rng.lognormal(mean=0.0, sigma=self.noise)
+            latency, retries, fault_s = self._charge(est_s * lift * jitter)
+        else:
+            latency, retries, fault_s = 0.0, 0, 0.0
+        if integrity_s > 0.0:
+            latency += float(integrity_s)
+            self.device_time_s += float(integrity_s)
         self.log.append(
             IOEvent(name=name, nbytes=float(nbytes), n_chunks=n_chunks,
                     latency_s=latency, hit_rate=float(hit_rate),
                     shard_bytes=(tuple(float(b) for b in shard_bytes)
                                  if shard_bytes is not None else None),
-                    retries=retries, fault_s=fault_s)
+                    retries=retries, fault_s=fault_s,
+                    integrity_s=float(integrity_s))
         )
         return latency
 
@@ -185,6 +208,7 @@ class FlashOffloadSimulator:
         hit_rates: Optional[np.ndarray] = None,
         nbytes: Optional[np.ndarray] = None,
         shard_bytes: Optional[np.ndarray] = None,
+        integrity_s: Optional[np.ndarray] = None,
     ) -> np.ndarray:
         """Vectorized ``measure_from_estimate`` for the scan-fused decode
         path: one call consumes the whole (n_steps,) on-device estimate
@@ -199,8 +223,15 @@ class FlashOffloadSimulator:
         counters, recorded on the events for ``total_bytes()``.
         ``shard_bytes`` (optional, (n_steps, n_shards)): each step's volume
         split by source model shard (sharded serving), recorded on the
-        events for ``total_bytes_by_shard()``."""
+        events for ``total_bytes_by_shard()``.
+        ``integrity_s`` (optional, (n_steps,)): per-step checksum-verified
+        re-read seconds from the chunk integrity subsystem, added verbatim
+        AFTER the fault perturbation (re-reads are deterministic per
+        (profile, seed) and must not consume the jitter or fault RNG
+        streams). None keeps pre-integrity behaviour bit-identical."""
         est = np.asarray(est_s, dtype=np.float64).reshape(-1)
+        extra = (np.zeros_like(est) if integrity_s is None
+                 else np.asarray(integrity_s, dtype=np.float64).reshape(-1))
         lift = self.profile.interleave_lift * (1.0 + 0.1 * diversity)
         # consume the RNG stream and the event log exactly as the scalar
         # path would: one draw + one IOEvent per POSITIVE estimate, in order
@@ -213,8 +244,14 @@ class FlashOffloadSimulator:
         # faults perturb each positive event sequentially, in log order —
         # the thermal clock advances event by event, as the scalar path does
         for i, lat in enumerate(latency):
-            if pos[i]:
-                charged, retries, fault_s = self._charge(float(lat))
+            if pos[i] or extra[i] > 0.0:
+                if pos[i]:
+                    charged, retries, fault_s = self._charge(float(lat))
+                else:
+                    charged, retries, fault_s = 0.0, 0, 0.0
+                if extra[i] > 0.0:
+                    charged += float(extra[i])
+                    self.device_time_s += float(extra[i])
                 latency[i] = charged
                 self.log.append(
                     IOEvent(
@@ -227,6 +264,7 @@ class FlashOffloadSimulator:
                                      if shard_bytes is not None else None),
                         retries=retries,
                         fault_s=fault_s,
+                        integrity_s=float(extra[i]),
                     )
                 )
         return latency
@@ -265,6 +303,27 @@ class FlashOffloadSimulator:
 
     def reset(self) -> None:
         self.log.clear()
+
+
+def pack_checksums(layers, names, block_rows: int = 8):
+    """Pack-time integrity lane for fp (unquantized, wbits=16) offloaded
+    storage: one ``block_checksums`` uint32 per ``block_rows`` row block of
+    each named stacked (L, N, D) fp weight leaf, returned as new
+    ``<name>_ck`` leaves (leading L dim preserved so they ride the decode
+    ``lax.scan``). The wbits=8 twin is ``quantize_params(checksums=True)``,
+    which checksums the int8 payload instead — each width checksums exactly
+    the bytes its DMA lane streams. Missing names are skipped."""
+    import jax
+
+    from ..kernels.quantize import QUANT_SUFFIX_CHECKSUM, block_checksums
+
+    ck = jax.vmap(lambda w: block_checksums(w, block_rows))
+    out = {}
+    for name in names:
+        if name not in layers:
+            continue
+        out[name + QUANT_SUFFIX_CHECKSUM] = ck(layers[name])
+    return out
 
 
 SITE_KINDS = ("hidden_attn", "hidden_mlp", "ffn", "attn_out")

@@ -196,18 +196,23 @@ class ExecutionBackend:
         starts: jnp.ndarray,  # (K,) block-aligned chunk table (kernel lane)
         sizes: jnp.ndarray,  # (K,)
         scales: jnp.ndarray | None = None,  # (N // block_rows,) f32
+        checksums: jnp.ndarray | None = None,  # (N // block_rows,) u32
     ) -> jnp.ndarray:
         """y (B, D) f32 = (x · mask) @ w. The input is pre-masked by the
         EXACT mask for both backends, so the kernel's outward block rounding
         gathers only zeroed extra rows — masked-matmul semantics hold and
         the two implementations agree bitwise. With ``scales`` (8-bit chunk
         storage) both backends dequantize per block before the identical
-        f32 contraction, preserving the bitwise twin property."""
+        f32 contraction, preserving the bitwise twin property. With
+        ``checksums`` the kernel path fetches each block's integrity word
+        through a third DMA lane (verification happens at the selection
+        boundary); the reference path — whose operands never leave device
+        memory — ignores it. Output is bit-identical either way."""
         xm = (x * mask.astype(x.dtype)).astype(jnp.float32)
         w, scales = self._gather(w), self._gather(scales)
         if self.is_kernel:
             return chunk_gather_matmul_dma(
-                w, xm, starts, sizes, scales,
+                w, xm, starts, sizes, scales, self._gather(checksums),
                 block_rows=self.block_rows,
                 tile_d=pick_tile(w.shape[1], self.tile_cap),
                 max_chunk_rows=self.max_chunk_rows,
@@ -228,13 +233,16 @@ class ExecutionBackend:
         starts: jnp.ndarray,  # (2, K) plan lanes: hidden_mlp, ffn
         sizes: jnp.ndarray,  # (2, K)
         scales: Optional[Tuple] = None,  # (sg, su, sd) per-block f32 lanes
+        checksums: Optional[Tuple] = None,  # (cg, cu, cd) per-block u32 lanes
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Returns (y (B, D) f32, h (B, F) f32) where h is the UNMASKED
         SwiGLU intermediate swish(xm @ w_gate) * (xm @ w_up) — the decode
         path records |h| as the next refresh's ffn-lane importance, so it
         must be the pre-mask value on both backends. ``scales`` switches
         all three weights to the quantized chunk format (int8 payloads +
-        per-block scale lanes), dequantized identically on both backends."""
+        per-block scale lanes), dequantized identically on both backends.
+        ``checksums`` adds the kernel path's per-block integrity-word DMA
+        lanes (fetch-only; see ``project``) — bit-identical either way."""
         xm = (x * hidden_mask.astype(x.dtype)).astype(jnp.float32)
         fm = ffn_mask.astype(jnp.float32)
         w_gate, w_up, w_down = (
@@ -242,9 +250,11 @@ class ExecutionBackend:
         )
         if scales is not None:
             scales = tuple(self._gather(s) for s in scales)
+        if checksums is not None:
+            checksums = tuple(self._gather(c) for c in checksums)
         if self.is_kernel:
             return chunk_gather_mlp_dma(
-                w_gate, w_up, w_down, xm, starts, sizes, fm, scales,
+                w_gate, w_up, w_down, xm, starts, sizes, fm, scales, checksums,
                 block_rows=self.block_rows,
                 tile_f=pick_tile(w_gate.shape[1], self.tile_cap),
                 tile_d=pick_tile(w_down.shape[1], self.tile_cap),

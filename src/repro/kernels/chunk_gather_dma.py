@@ -165,18 +165,38 @@ def _matmul_dma_kernel(
     sizes_ref,  # scalar prefetch (K,)
     x_ref,  # (B, N) VMEM
     w_hbm,  # (N, D) ANY/HBM — fetched by explicit DMA only
-    *rest,  # [s_hbm,] out_ref, wslots, [sslots,] sems, [sems_s]
+    *rest,  # [s_hbm,] [c_hbm,] out_ref, wslots, [sslots,] [cslots,]
+    #         sems, [sems_s,] [sems_c]
     block_rows: int,
     tile_d: int,
     blocks_per_chunk: int,
     n_slots: int,
     quantized: bool,
+    checksummed: bool,
 ):
+    idx = 0
+    s_hbm = c_hbm = sslots = cslots = sems_s = sems_c = None
     if quantized:
-        s_hbm, out_ref, wslots, sslots, sems, sems_s = rest
-    else:
-        out_ref, wslots, sems = rest
-        s_hbm = sslots = sems_s = None
+        s_hbm = rest[idx]
+        idx += 1
+    if checksummed:
+        c_hbm = rest[idx]
+        idx += 1
+    out_ref, wslots = rest[idx], rest[idx + 1]
+    idx += 2
+    if quantized:
+        sslots = rest[idx]
+        idx += 1
+    if checksummed:
+        cslots = rest[idx]
+        idx += 1
+    sems = rest[idx]
+    idx += 1
+    if quantized:
+        sems_s = rest[idx]
+        idx += 1
+    if checksummed:
+        sems_c = rest[idx]
     dj = pl.program_id(0)
     k = starts_ref.shape[0]
     total = k * blocks_per_chunk
@@ -204,6 +224,14 @@ def _matmul_dma_kernel(
                     sslots.at[slot],
                     sems_s.at[slot],
                 ).start()
+            if checksummed:
+                # the checksum lane rides the rotation the same way: one
+                # uint32 per block, fetched with the block it covers
+                pltpu.make_async_copy(
+                    c_hbm.at[pl.ds(off // block_rows, 1)],
+                    cslots.at[slot],
+                    sems_c.at[slot],
+                ).start()
 
     def wait_and_compute(step, slot):
         off, active = offset(step)
@@ -226,6 +254,16 @@ def _matmul_dma_kernel(
                 # multiply per element before the identical dot, so the
                 # reference twin's elementwise dequant stays bitwise equal
                 wb = wb * sslots[slot][0]
+            if checksummed:
+                # checksums span full (block_rows, D) storage blocks while
+                # this kernel sees (block_rows, tile_d) tiles, so the word
+                # is fetched (charging the lane's DMA) but verified at the
+                # selection boundary where whole blocks are visible
+                pltpu.make_async_copy(
+                    c_hbm.at[pl.ds(off // block_rows, 1)],
+                    cslots.at[slot],
+                    sems_c.at[slot],
+                ).wait()
             xb = pl.load(x_ref, (slice(None), pl.ds(off, block_rows)))
             out_ref[...] += jnp.dot(
                 xb.astype(jnp.float32),
@@ -249,6 +287,7 @@ def chunk_gather_matmul_dma(
     starts: jnp.ndarray,  # (K,) int32, multiples of block_rows
     sizes: jnp.ndarray,  # (K,) int32, multiples of block_rows (0 = padded)
     scales: jnp.ndarray | None = None,  # (N // block_rows,) f32 per-block
+    checksums: jnp.ndarray | None = None,  # (N // block_rows,) u32 per-block
     *,
     block_rows: int = 8,
     tile_d: int = 128,
@@ -265,7 +304,18 @@ def chunk_gather_matmul_dma(
     ``w`` is the int8 payload and each DMA step additionally fetches its
     block's f32 scale through the same slot rotation, dequantizing in VMEM
     (``q.astype(f32) * scale``) before the identical f32 accumulation —
-    matching ``blocked_masked_matmul(..., scales=...)`` bitwise."""
+    matching ``blocked_masked_matmul(..., scales=...)`` bitwise.
+
+    With ``checksums`` (``kernels/quantize.block_checksums`` /
+    ``core/offload.pack_checksums``): each DMA step additionally fetches
+    its block's uint32 checksum through a third lane of the same slot
+    rotation, so integrity metadata travels with the payload it covers at
+    kernel granularity. The words are fetched and waited on but not
+    verified here — a checksum covers the full (block_rows, D) storage
+    block while the kernel fetches (block_rows, tile_d) tiles; the honest
+    re-verification happens at the selection boundary
+    (``serving/sparse_exec.refresh_layer``), identically on both backends.
+    Output is bit-identical with and without the lane."""
     n, d = w.shape
     b = x.shape[0]
     if prefetch_depth < 0:
@@ -281,25 +331,30 @@ def chunk_gather_matmul_dma(
         raise ValueError(
             f"scales must be ({n // block_rows},), got {scales.shape}"
         )
+    checksummed = checksums is not None
+    if checksummed and checksums.shape != (n // block_rows,):
+        raise ValueError(
+            f"checksums must be ({n // block_rows},), got {checksums.shape}"
+        )
     n_slots = prefetch_depth + 1
     in_specs = [
         pl.BlockSpec((b, n), lambda dj, *_: (0, 0)),  # x resident in VMEM
         pl.BlockSpec(memory_space=_ANY),  # w stays in HBM; DMA'd manually
     ]
-    scratch = [
-        pltpu.VMEM((n_slots, block_rows, tile_d), w.dtype),
-        pltpu.SemaphoreType.DMA((n_slots,)),
-    ]
     operands = [starts, sizes, x, w]
+    slots = [pltpu.VMEM((n_slots, block_rows, tile_d), w.dtype)]
+    sem_lanes = [pltpu.SemaphoreType.DMA((n_slots,))]
     if quantized:
         in_specs.append(pl.BlockSpec(memory_space=_ANY))  # scales lane in HBM
-        scratch = [
-            scratch[0],
-            pltpu.VMEM((n_slots, 1), jnp.float32),  # sslots
-            scratch[1],
-            pltpu.SemaphoreType.DMA((n_slots,)),  # sems_s
-        ]
         operands.append(scales.astype(jnp.float32))
+        slots.append(pltpu.VMEM((n_slots, 1), jnp.float32))  # sslots
+        sem_lanes.append(pltpu.SemaphoreType.DMA((n_slots,)))  # sems_s
+    if checksummed:
+        in_specs.append(pl.BlockSpec(memory_space=_ANY))  # checksum lane
+        operands.append(checksums.astype(jnp.uint32))
+        slots.append(pltpu.VMEM((n_slots, 1), jnp.uint32))  # cslots
+        sem_lanes.append(pltpu.SemaphoreType.DMA((n_slots,)))  # sems_c
+    scratch = slots + sem_lanes
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(d // tile_d,),
@@ -315,6 +370,7 @@ def chunk_gather_matmul_dma(
             blocks_per_chunk=max_chunk_rows // block_rows,
             n_slots=n_slots,
             quantized=quantized,
+            checksummed=checksummed,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
@@ -336,7 +392,8 @@ def _mlp_dma_kernel(
     wu_hbm,  # (N, F) ANY
     wd_hbm,  # (F, D) ANY
     fmask_ref,  # (1, F) VMEM f32 — exact ffn row mask (all-ones = table only)
-    *rest,  # [sg/su/sd_hbm,] out_ref, h?, slots..., [scale slots,] sems...
+    *rest,  # [sg/su/sd_hbm,] [cg/cu/cd_hbm,] out_ref, h?, slots...,
+    #         [scale slots,] [ck slots,] sems..., [scale sems,] [ck sems]
     block_rows: int,
     tile_f: int,
     tile_d: int,
@@ -345,16 +402,34 @@ def _mlp_dma_kernel(
     n_f_tiles: int,
     n_d_tiles: int,
     quantized: bool,
+    checksummed: bool,
 ):
+    idx = 0
+    sg_hbm = su_hbm = sd_hbm = gsc = usc = dsc = None
+    sems_gs = sems_us = sems_ds = None
+    cg_hbm = cu_hbm = cd_hbm = gck = uck = dck = None
+    sems_gc = sems_uc = sems_dc = None
     if quantized:
-        (sg_hbm, su_hbm, sd_hbm, out_ref, h_ref, gslots, uslots, dslots,
-         gsc, usc, dsc, acc_g, acc_u, sems_g, sems_u, sems_d,
-         sems_gs, sems_us, sems_ds) = rest
-    else:
-        (out_ref, h_ref, gslots, uslots, dslots, acc_g, acc_u,
-         sems_g, sems_u, sems_d) = rest
-        sg_hbm = su_hbm = sd_hbm = gsc = usc = dsc = None
-        sems_gs = sems_us = sems_ds = None
+        sg_hbm, su_hbm, sd_hbm = rest[idx:idx + 3]
+        idx += 3
+    if checksummed:
+        cg_hbm, cu_hbm, cd_hbm = rest[idx:idx + 3]
+        idx += 3
+    out_ref, h_ref, gslots, uslots, dslots = rest[idx:idx + 5]
+    idx += 5
+    if quantized:
+        gsc, usc, dsc = rest[idx:idx + 3]
+        idx += 3
+    if checksummed:
+        gck, uck, dck = rest[idx:idx + 3]
+        idx += 3
+    acc_g, acc_u, sems_g, sems_u, sems_d = rest[idx:idx + 5]
+    idx += 5
+    if quantized:
+        sems_gs, sems_us, sems_ds = rest[idx:idx + 3]
+        idx += 3
+    if checksummed:
+        sems_gc, sems_uc, sems_dc = rest[idx:idx + 3]
     k = starts_ref.shape[1]
     total = k * blocks_per_chunk
 
@@ -389,6 +464,14 @@ def _mlp_dma_kernel(
                     pltpu.make_async_copy(
                         su_hbm.at[pl.ds(bk, 1)], usc.at[slot], sems_us.at[slot]
                     ).start()
+                if checksummed:
+                    bk = off // block_rows
+                    pltpu.make_async_copy(
+                        cg_hbm.at[pl.ds(bk, 1)], gck.at[slot], sems_gc.at[slot]
+                    ).start()
+                    pltpu.make_async_copy(
+                        cu_hbm.at[pl.ds(bk, 1)], uck.at[slot], sems_uc.at[slot]
+                    ).start()
 
         def wait_and_compute(step, slot):
             off, active = offset(0, step)
@@ -417,6 +500,16 @@ def _mlp_dma_kernel(
                     ).wait()
                     gb = gb * gsc[slot][0]
                     ub = ub * usc[slot][0]
+                if checksummed:
+                    # fetched with the payload, verified at the selection
+                    # boundary (see chunk_gather_matmul_dma docstring)
+                    bk = off // block_rows
+                    pltpu.make_async_copy(
+                        cg_hbm.at[pl.ds(bk, 1)], gck.at[slot], sems_gc.at[slot]
+                    ).wait()
+                    pltpu.make_async_copy(
+                        cu_hbm.at[pl.ds(bk, 1)], uck.at[slot], sems_uc.at[slot]
+                    ).wait()
                 xb = pl.load(x_ref, (slice(None), pl.ds(off, block_rows)))
                 xb = xb.astype(jnp.float32)
                 acc_g[...] += jnp.dot(xb, gb,
@@ -458,6 +551,12 @@ def _mlp_dma_kernel(
                         dsc.at[slot],
                         sems_ds.at[slot],
                     ).start()
+                if checksummed:
+                    pltpu.make_async_copy(
+                        cd_hbm.at[pl.ds(off // block_rows, 1)],
+                        dck.at[slot],
+                        sems_dc.at[slot],
+                    ).start()
 
         def wait_and_compute(step, slot):
             off, active = offset(1, step)
@@ -477,6 +576,12 @@ def _mlp_dma_kernel(
                         sems_ds.at[slot],
                     ).wait()
                     db = db * dsc[slot][0]
+                if checksummed:
+                    pltpu.make_async_copy(
+                        cd_hbm.at[pl.ds(off // block_rows, 1)],
+                        dck.at[slot],
+                        sems_dc.at[slot],
+                    ).wait()
                 # the exact ffn mask applies at the gather, NOT to the h
                 # output: block-rounding may pull in rows outside the
                 # selected mask, and those must contribute zero for the
@@ -518,6 +623,7 @@ def chunk_gather_mlp_dma(
     sizes: jnp.ndarray,  # (2, K)
     ffn_mask: jnp.ndarray | None = None,  # (F,) exact down-input row mask
     scales: tuple | None = None,  # (sg (N//br,), su (N//br,), sd (F//br,)) f32
+    checksums: tuple | None = None,  # (cg (N//br,), cu (N//br,), cd (F//br,)) u32
     *,
     block_rows: int = 8,
     tile_f: int = 128,
@@ -553,7 +659,12 @@ def chunk_gather_mlp_dma(
     the quantized chunk format; each lane's DMA step fetches its block's
     f32 scale through the same slot rotation and dequantizes in VMEM
     before the identical f32 accumulation (bitwise equal to the reference
-    backend's quantized schedule twin)."""
+    backend's quantized schedule twin).
+
+    With ``checksums = (cg, cu, cd)`` each lane's DMA step additionally
+    fetches its block's uint32 checksum through the rotation —
+    fetch-and-wait only, verified at the selection boundary (see
+    ``chunk_gather_matmul_dma``); output is bit-identical either way."""
     n, f = w_gate.shape
     fd, d = w_down.shape
     b = x.shape[0]
@@ -589,6 +700,18 @@ def chunk_gather_mlp_dma(
             raise ValueError(
                 f"down scales must be ({f // block_rows},), got {sd.shape}"
             )
+    checksummed = checksums is not None
+    if checksummed:
+        cg, cu, cd = checksums
+        if cg.shape != (n // block_rows,) or cu.shape != (n // block_rows,):
+            raise ValueError(
+                f"gate/up checksums must be ({n // block_rows},), "
+                f"got {cg.shape}/{cu.shape}"
+            )
+        if cd.shape != (f // block_rows,):
+            raise ValueError(
+                f"down checksums must be ({f // block_rows},), got {cd.shape}"
+            )
     n_slots = prefetch_depth + 1
     # h (B, F) occupies the same positional kernel-ref slot either way:
     # second OUTPUT when the caller wants it, first SCRATCH when not (so a
@@ -613,6 +736,12 @@ def chunk_gather_mlp_dma(
         operands += [s.astype(jnp.float32) for s in (sg, su, sd)]
         scale_slots = [pltpu.VMEM((n_slots, 1), jnp.float32)] * 3
         scale_sems = [pltpu.SemaphoreType.DMA((n_slots,))] * 3
+    ck_slots, ck_sems = [], []
+    if checksummed:
+        in_specs += [pl.BlockSpec(memory_space=_ANY)] * 3  # checksum lanes
+        operands += [c.astype(jnp.uint32) for c in (cg, cu, cd)]
+        ck_slots = [pltpu.VMEM((n_slots, 1), jnp.uint32)] * 3
+        ck_sems = [pltpu.SemaphoreType.DMA((n_slots,))] * 3
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(),
@@ -622,13 +751,13 @@ def chunk_gather_mlp_dma(
             pltpu.VMEM((n_slots, block_rows, tile_f), w_gate.dtype),
             pltpu.VMEM((n_slots, block_rows, tile_f), w_up.dtype),
             pltpu.VMEM((n_slots, block_rows, tile_d), w_down.dtype),
-        ] + scale_slots + [
+        ] + scale_slots + ck_slots + [
             pltpu.VMEM((b, tile_f), jnp.float32),
             pltpu.VMEM((b, tile_f), jnp.float32),
             pltpu.SemaphoreType.DMA((n_slots,)),
             pltpu.SemaphoreType.DMA((n_slots,)),
             pltpu.SemaphoreType.DMA((n_slots,)),
-        ] + scale_sems,
+        ] + scale_sems + ck_sems,
     )
     out = pl.pallas_call(
         functools.partial(
@@ -641,6 +770,7 @@ def chunk_gather_mlp_dma(
             n_f_tiles=f // tile_f,
             n_d_tiles=d // tile_d,
             quantized=quantized,
+            checksummed=checksummed,
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 INT8_QMAX = 127.0
 SCALE_BYTES = 4.0  # one f32 scale per block_rows rows
+CHECKSUM_BYTES = 4.0  # one u32 checksum per block_rows rows (PR 9)
 
 # the quantization block granularity — one scale per this many weight rows,
 # matching the DMA kernels' chunk-table alignment (KERNEL_BLOCK_ROWS in
@@ -39,6 +40,12 @@ QUANT_BLOCK_ROWS = 8
 # stacked-param leaves produced by quantize_params: "<name>_q8" / "<name>_sc"
 QUANT_SUFFIX_PAYLOAD = "_q8"
 QUANT_SUFFIX_SCALE = "_sc"
+
+# pack-time integrity lane (PR 9): "<name>_ck" — one uint32 checksum per
+# block_rows row block of the STORED payload (the int8 leaf at wbits=8, the
+# fp leaf at wbits=16), verified against the fetched bytes at the gather
+# boundary by the integrity subsystem (serving/sparse_exec.py)
+QUANT_SUFFIX_CHECKSUM = "_ck"
 
 # fp decode-copy leaves created by the sharded serve path at wbits=16
 # ("<name>_dec"): a model-axis-sharded copy of the fp original that ONLY the
@@ -82,19 +89,69 @@ def dequantize_rows(
     return (blocks * scales[:, None, None]).reshape(n, d)
 
 
+def _payload_words(w: jnp.ndarray) -> jnp.ndarray:
+    """Reinterpret a payload matrix as uint32 words elementwise (no value
+    conversion): int8 → uint8 bytes, 16-bit floats → uint16, f32 → uint32.
+    The checksum runs over exactly the bits the DMA lane streams, so any
+    bit-level perturbation of the stored payload moves the sum."""
+    itemsize = jnp.dtype(w.dtype).itemsize
+    if itemsize == 1:
+        u = jax.lax.bitcast_convert_type(w, jnp.uint8)
+    elif itemsize == 2:
+        u = jax.lax.bitcast_convert_type(w, jnp.uint16)
+    elif itemsize == 4:
+        u = jax.lax.bitcast_convert_type(w, jnp.uint32)
+    else:
+        raise ValueError(f"unsupported payload dtype {w.dtype}")
+    return u.astype(jnp.uint32)
+
+
+def block_checksums(w: jnp.ndarray, block_rows: int = 8) -> jnp.ndarray:
+    """Per-``block_rows``-block payload checksum, (N // block_rows,) uint32.
+
+    Each block's bytes are bitcast to uint32 words and folded as a
+    position-weighted sum mod 2^32 with odd weights ``2*pos + 1``. Odd
+    weights make every single-element change detectable: flipping element
+    ``p`` moves the sum by ``delta * (2p+1)`` with ``0 < |delta| < 2^32``
+    and an odd multiplier, which is never 0 mod 2^32. Position weighting
+    also catches reorderings within a block (equal-weight sums would not).
+    One u32 per block rides the DMA slot rotation next to the PR 6 scales
+    lane (kernels/chunk_gather_dma.py)."""
+    n, d = w.shape
+    if n % block_rows != 0:
+        raise ValueError(
+            f"rows ({n}) must be a multiple of block_rows ({block_rows})"
+        )
+    u = _payload_words(w).reshape(n // block_rows, block_rows * d)
+    pos = jnp.arange(block_rows * d, dtype=jnp.uint32)
+    weights = pos * jnp.uint32(2) + jnp.uint32(1)
+    return jnp.sum(u * weights[None, :], axis=1, dtype=jnp.uint32)
+
+
 def quantize_params(
-    layers: Dict[str, jnp.ndarray], names: Tuple[str, ...], block_rows: int = 8
+    layers: Dict[str, jnp.ndarray],
+    names: Tuple[str, ...],
+    block_rows: int = 8,
+    checksums: bool = False,
 ) -> Dict[str, jnp.ndarray]:
     """Quantize the named stacked (L, N, D) weight leaves of a layer-stack
     param dict; returns the new ``<name>_q8`` / ``<name>_sc`` leaves (with
     the leading L dim preserved, so they ride the decode ``lax.scan``
-    unchanged). Missing names are skipped (arch families differ)."""
+    unchanged). Missing names are skipped (arch families differ).
+
+    ``checksums=True`` additionally emits the ``<name>_ck`` integrity lane
+    (``block_checksums`` over the int8 payload — the exact bytes the DMA
+    lane streams at wbits=8). The fp16 pack path's checksum twin lives in
+    ``core/offload.py::pack_checksums``."""
     out: Dict[str, jnp.ndarray] = {}
     quant = jax.vmap(lambda w: quantize_rows(w, block_rows))
+    ck = jax.vmap(lambda q: block_checksums(q, block_rows))
     for name in names:
         if name not in layers:
             continue
         q, s = quant(layers[name])
         out[name + QUANT_SUFFIX_PAYLOAD] = q
         out[name + QUANT_SUFFIX_SCALE] = s
+        if checksums:
+            out[name + QUANT_SUFFIX_CHECKSUM] = ck(q)
     return out

@@ -21,7 +21,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..configs.base import InputShape
-from ..core.faults import FAULT_PROFILES
+from ..core.faults import CORRUPTION_PROFILES, FAULT_PROFILES
 from ..kernels.backend import BACKENDS
 from ..models import build_model
 from ..models.inputs import make_dummy_batch
@@ -183,6 +183,40 @@ def build_parser() -> argparse.ArgumentParser:
                          "given (--fault-profile, --fault-seed) replays "
                          "bit-identically and never shifts the simulator's "
                          "main jitter stream")
+    ap.add_argument("--corruption-profile", choices=tuple(CORRUPTION_PROFILES),
+                    default="none",
+                    help="data-plane corruption profile injected into "
+                         "fetched chunk blocks (core/faults.py): 'bit_rot' "
+                         "flips one stored bit per corrupted 8-row block, "
+                         "'torn_read' zeroes blocks, 'degraded_nand' "
+                         "combines a high corruption rate with mostly-stuck "
+                         "re-reads. Unlike --fault-profile this damages the "
+                         "DATA — with --no-recover tokens can change. Every "
+                         "fetched block is checksum-verified at the gather "
+                         "boundary; detections climb the recovery ladder "
+                         "(re-read → resident DRAM copy → substitute → "
+                         "drop), counted in io_summary(). 'none' (default) "
+                         "is bit-identical to a corruption-free engine.")
+    ap.add_argument("--corruption-seed", type=int, default=0,
+                    help="seed of the corruption model's own RNG stream — a "
+                         "given (--corruption-profile, --corruption-seed) "
+                         "draws the same corrupt blocks every replay; "
+                         "requires a corruption profile other than 'none'")
+    ap.add_argument("--max-reread", type=_nonneg_int("--max-reread"),
+                    default=2,
+                    help="recovery ladder rung 0: how many times a "
+                         "checksum-mismatched block may be re-read (each "
+                         "charged the block's latency + exponential "
+                         "backoff) before escalating to the resident-copy / "
+                         "substitute / drop rungs; 0 skips straight to "
+                         "escalation")
+    ap.add_argument("--recover", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run the corruption recovery ladder (default). "
+                         "--no-recover detects and counts corruption but "
+                         "lets the damaged payloads flow into compute — the "
+                         "measurable-corruption baseline (tokens CAN "
+                         "change, deterministically per seed)")
     ap.add_argument("--degrade", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="enable the adaptive degradation controller: "
@@ -199,6 +233,31 @@ def build_parser() -> argparse.ArgumentParser:
                          "(evict-and-requeue); stats gain p99 + SLO "
                          "attainment. Default: best-effort (no deadlines)")
     return ap
+
+
+def validate_seed_flags(ap: argparse.ArgumentParser, args) -> None:
+    """Reject seed flags whose matching profile is off, at argparse time.
+
+    ``--fault-seed 7`` with ``--fault-profile none`` (and likewise
+    ``--corruption-seed`` with ``--corruption-profile none``) used to parse
+    fine and silently run a fault-free engine — the seed did nothing. That
+    is always a typo (the user expected perturbation); fail with the
+    standard argparse usage error instead of quietly measuring the wrong
+    thing. Seed 0 is each stream's default and stays valid either way."""
+    if args.fault_seed != 0 and args.fault_profile == "none":
+        ap.error(
+            f"--fault-seed {args.fault_seed} has no effect with "
+            "--fault-profile none; pick a profile "
+            f"({', '.join(p for p in FAULT_PROFILES if p != 'none')}) "
+            "or drop the seed"
+        )
+    if args.corruption_seed != 0 and args.corruption_profile == "none":
+        ap.error(
+            f"--corruption-seed {args.corruption_seed} has no effect with "
+            "--corruption-profile none; pick a profile "
+            f"({', '.join(p for p in CORRUPTION_PROFILES if p != 'none')}) "
+            "or drop the seed"
+        )
 
 
 def resolve_mesh(spec: str, cfg, batch: int, streams: int) -> ServeMesh:
@@ -226,7 +285,9 @@ def resolve_mesh(spec: str, cfg, batch: int, streams: int) -> ServeMesh:
 
 
 def main():
-    args = build_parser().parse_args()
+    ap = build_parser()
+    args = ap.parse_args()
+    validate_seed_flags(ap, args)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -242,7 +303,10 @@ def main():
                       prefetch_depth=args.prefetch_depth,
                       backend=args.backend, wbits=args.wbits, mesh=mesh,
                       fault_profile=args.fault_profile,
-                      fault_seed=args.fault_seed, degrade=args.degrade)
+                      fault_seed=args.fault_seed, degrade=args.degrade,
+                      corruption_profile=args.corruption_profile,
+                      corruption_seed=args.corruption_seed,
+                      max_reread=args.max_reread, recover=args.recover)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -301,6 +365,21 @@ def main():
               f"extra {fs['fault_extra_s']*1e3:.2f} ms  "
               f"min_throttle {fs['min_throttle_scale']:.2f}  "
               f"degrade_scale {fs['degrade_scale']:.2f}")
+    _print_integrity(args, s)
+
+
+def _print_integrity(args, s) -> None:
+    """The [integrity] rollup line (corruption injection runs only)."""
+    if args.corruption_profile == "none":
+        return
+    print(f"[integrity] profile={args.corruption_profile} "
+          f"seed={args.corruption_seed} recover={args.recover} "
+          f"max_reread={args.max_reread}  "
+          f"detected {s['corruptions_detected']:.0f}  "
+          f"recovered {s['corruptions_recovered']:.0f}  "
+          f"substituted {s['corruptions_substituted']:.0f}  "
+          f"dropped {s['corruptions_dropped']:.0f}  "
+          f"reread {s['integrity_reread_s']*1e3:.2f} ms")
 
 
 def _serve_streams(args, cfg, eng):
@@ -352,6 +431,7 @@ def _serve_streams(args, cfg, eng):
               f"ewma {fs['degrade_ewma_ratio']:.2f}  "
               f"tighten {fs['degrade_tighten_steps']}  "
               f"relax {fs['degrade_relax_steps']}")
+    _print_integrity(args, s)
 
 
 if __name__ == "__main__":

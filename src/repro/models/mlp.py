@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from ..kernels.quantize import (
     DECODE_COPY_SUFFIX,
+    QUANT_SUFFIX_CHECKSUM,
     QUANT_SUFFIX_PAYLOAD,
     QUANT_SUFFIX_SCALE,
 )
@@ -44,6 +45,13 @@ def _stored(params, name: str, quantized: bool):
         # copy; the replicated fp original stays for prefill/frame append
         return params[name + DECODE_COPY_SUFFIX], None
     return params[name], None
+
+
+def _stored_checksum(params, name: str):
+    """The matrix's per-block integrity-checksum leaf (engine-emitted when
+    corruption injection is on), or None — a static presence check, so the
+    checksum DMA lane compiles in only for integrity-enabled engines."""
+    return params.get(name + QUANT_SUFFIX_CHECKSUM)
 
 
 def mlp_param_defs(d_model: int, d_ff: int, prefix: str = "") -> Dict[str, ParamDef]:
@@ -100,9 +108,12 @@ def swiglu_mlp_planned(
     wu, su = _stored(params, f"{p}w_up", quantized)
     wd, sd = _stored(params, f"{p}w_down", quantized)
     scales = (sg, su, sd) if quantized else None
+    cks = tuple(_stored_checksum(params, f"{p}{nm}")
+                for nm in ("w_gate", "w_up", "w_down"))
     y, h = backend.swiglu_mlp(
         wg, wu, wd,
         x.reshape(b * s, d), hidden_mask, ffn_mask, starts, sizes, scales,
+        cks if all(c is not None for c in cks) else None,
     )
     return y.astype(x.dtype).reshape(b, s, -1), h
 
@@ -128,11 +139,13 @@ def gelu_mlp_planned(
     w_fc, s_fc = _stored(params, f"{p}w_fc", quantized)
     w_proj, s_proj = _stored(params, f"{p}w_proj", quantized)
     mid = backend.project(
-        w_fc, x.reshape(b * s, d), hidden_mask, *hidden_table, s_fc
+        w_fc, x.reshape(b * s, d), hidden_mask, *hidden_table, s_fc,
+        _stored_checksum(params, f"{p}w_fc"),
     ) + params[f"{p}b_fc"].astype(jnp.float32)
     mid = jax.nn.gelu(mid)
     y = backend.project(
-        w_proj, mid, ffn_mask, *ffn_table, s_proj
+        w_proj, mid, ffn_mask, *ffn_table, s_proj,
+        _stored_checksum(params, f"{p}w_proj"),
     ) + params[f"{p}b_proj"].astype(jnp.float32)
     return y.astype(x.dtype).reshape(b, s, -1), mid
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..kernels.quantize import (
     DECODE_COPY_SUFFIX,
+    QUANT_SUFFIX_CHECKSUM,
     QUANT_SUFFIX_PAYLOAD,
     QUANT_SUFFIX_SCALE,
 )
@@ -100,6 +101,44 @@ SPARSE_WEIGHT_NAMES = (
     "w_gate", "w_up", "w_down",  # swiglu family
     "w_fc", "w_proj",  # non-gated gelu family
 )
+
+
+def site_matrix_names(cfg: ModelConfig) -> Dict[str, Tuple[str, ...]]:
+    """Which stored matrices stream through each sparsification site, in
+    site matrix order — the integrity subsystem's twin of
+    ``core.offload.decode_site_shapes`` (must agree with
+    ``SparseExecution.site_matrix_count``)."""
+    names: Dict[str, Tuple[str, ...]] = {
+        "hidden_attn": ("wq", "wk", "wv"),
+        "attn_out": ("wo",),
+    }
+    if cfg.d_ff and not cfg.has_moe:
+        if cfg.mlp == "gelu":
+            names["hidden_mlp"] = ("w_fc",)
+            names["ffn"] = ("w_proj",)
+        else:
+            names["hidden_mlp"] = ("w_gate", "w_up")
+            names["ffn"] = ("w_down",)
+    return names
+
+
+def _integrity_weights(params, sparse_ctx, cfg: ModelConfig, plan):
+    """The per-site ((payload, checksums), ...) matrices ``refresh_layer``
+    verifies fetched blocks against (corruption injection only): the same
+    stored payload leaf the execution backend streams, paired with its
+    pack-time ``_ck`` lane. None when integrity is off — the refresh is
+    then bit-identical to a build without the subsystem."""
+    if not getattr(sparse_ctx, "integrity_enabled", False):
+        return None
+    names = site_matrix_names(cfg)
+    return {
+        kind: tuple(
+            (_site_weight(params, sparse_ctx, nm)[0],
+             params[nm + QUANT_SUFFIX_CHECKSUM])
+            for nm in names[kind]
+        )
+        for kind in plan
+    }
 
 
 def _site_weight(params, sparse_ctx, name):
@@ -189,6 +228,18 @@ def _planned_mlp(h, params, cfg: ModelConfig, sparse_ctx, plan):
         getattr(sparse_ctx, "wbits", 16) == 8
         and qname + QUANT_SUFFIX_PAYLOAD in params
     )
+    if getattr(sparse_ctx, "integrity_corrupting", False):
+        # recovery-OFF corruption: damage the MLP payload leaves the
+        # planned functions stream, in a shallow params copy (both
+        # backends consume the identical damaged operands)
+        names = site_matrix_names(cfg)
+        params = dict(params)
+        for kind in ("hidden_mlp", "ffn"):
+            for mi, nm in enumerate(names[kind]):
+                leaf = nm + QUANT_SUFFIX_PAYLOAD if quantized else nm
+                params[leaf] = sparse_ctx.apply_corruption(
+                    plan, kind, mi, params[leaf]
+                )
     if cfg.mlp == "gelu":
         y, mid = gelu_mlp_planned(
             h, params, backend, mask_g, mask_f,
@@ -297,8 +348,13 @@ def block_decode(
     io = jnp.float32(0.0)
     if sparse_ctx is not None and plan:
         # planned path: ONE batched selection dispatch refreshes every
-        # site's mask for this layer (or reuses them at zero I/O)
-        plan, sel_lat = sparse_ctx.refresh_layer(plan, refresh)
+        # site's mask for this layer (or reuses them at zero I/O); with
+        # corruption injection on, the refresh also draws/verifies corrupt
+        # blocks against the stored payloads' checksum lanes
+        plan, sel_lat = sparse_ctx.refresh_layer(
+            plan, refresh,
+            weights=_integrity_weights(params, sparse_ctx, cfg, plan),
+        )
         io += sel_lat
     h = apply_norm(x, params, cfg, "ln1")
 
@@ -315,9 +371,15 @@ def block_decode(
         hs, hz = sparse_ctx.kernel_tables(plan, "hidden_attn")
         hflat = h.reshape(b * s, -1)
         outs = []
-        for name in ("wq", "wk", "wv"):
+        for mi, name in enumerate(("wq", "wk", "wv")):
             w, sc = _site_weight(params, sparse_ctx, name)
-            y = sparse_ctx.backend.project(w, hflat, mask_q, hs, hz, sc)
+            # recovery-OFF corruption: the damaged payload flows into the
+            # gather on BOTH backends (no-op unless integrity_corrupting)
+            w = sparse_ctx.apply_corruption(plan, "hidden_attn", mi, w)
+            y = sparse_ctx.backend.project(
+                w, hflat, mask_q, hs, hz, sc,
+                params.get(name + QUANT_SUFFIX_CHECKSUM),
+            )
             outs.append(y.astype(h.dtype).reshape(b, s, -1))
         q_pre, k_pre, v_pre = outs
         kv_pre = (k_pre, v_pre)
@@ -356,9 +418,11 @@ def block_decode(
             # or chunk_gather_matmul_dma — bitwise identical)
             b, s, _ = attn_raw.shape
             w_o, sc_o = _site_weight(params, sparse_ctx, "wo")
+            w_o = sparse_ctx.apply_corruption(plan, "attn_out", 0, w_o)
             y_o = sparse_ctx.backend.project(
                 w_o, attn_raw.reshape(b * s, -1), mask_o,
                 *sparse_ctx.kernel_tables(plan, "attn_out"), sc_o,
+                params.get("wo" + QUANT_SUFFIX_CHECKSUM),
             )
             attn_raw = y_o.astype(attn_raw.dtype).reshape(b, s, -1)
         else:

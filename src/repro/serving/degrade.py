@@ -8,7 +8,11 @@ latency ratio at each decode-call boundary and, while the device looks
 degraded, tightens the selector's chunk I/O budget (via the plan-carried
 "bscale" multiplier, ``sparse_exec.set_plan_budget_scale``) so each step
 streams fewer bytes and leans harder on residency-cache hits — then walks
-the budget back up once the device stabilizes.
+the budget back up once the device stabilizes. Data corruption (see
+``CorruptionModel``) feeds the same loop as a second signal: the engine
+maps each call's detected-corruption rate onto the ratio axis via
+``observe_corruption``, so a device shedding corrupt blocks tightens the
+budget exactly like one shedding latency.
 
 State machine (two thresholds give hysteresis):
 
@@ -49,6 +53,7 @@ class DegradationController:
         alpha: float = 0.5,
         step: float = 0.2,
         min_scale: float = 0.4,
+        corruption_ratio_gain: float = 20.0,
     ):
         if not (recover_ratio < degrade_ratio):
             raise ValueError(
@@ -61,11 +66,16 @@ class DegradationController:
             raise ValueError(f"step must be in (0, 1], got {step}")
         if not (0.0 < min_scale <= 1.0):
             raise ValueError(f"min_scale must be in (0, 1], got {min_scale}")
+        if corruption_ratio_gain < 0.0:
+            raise ValueError(
+                f"corruption_ratio_gain must be >= 0, got {corruption_ratio_gain}"
+            )
         self.degrade_ratio = float(degrade_ratio)
         self.recover_ratio = float(recover_ratio)
         self.alpha = float(alpha)
         self.step = float(step)
         self.min_scale = float(min_scale)
+        self.corruption_ratio_gain = float(corruption_ratio_gain)
         self.scale = 1.0
         self.ewma = 1.0
         # lifetime accounting (engine.fault_summary surfaces these)
@@ -103,6 +113,20 @@ class DegradationController:
         if self.degraded:
             self.calls_degraded += 1
         return self.scale
+
+    def observe_corruption(self, rate: float) -> float:
+        """Fold one decode call's corruption rate (detected corrupt blocks
+        per fetched block, see engine._observe_corruption) in as a SECOND
+        degrade signal, mapped onto the latency-ratio axis: a clean call
+        (rate 0) observes the healthy 1.0, a corrupting device observes
+        ``1.0 + corruption_ratio_gain * rate`` — with the default gain of
+        20.0, a sustained ~3% block-corruption rate crosses the default
+        degrade threshold (1.6) and tightens the budget, which shrinks the
+        fetch footprint and with it the exposure to further corruption.
+        Non-finite or negative rates are ignored. Returns the new scale."""
+        if not np.isfinite(rate) or rate < 0.0:
+            return self.scale
+        return self.observe([1.0 + self.corruption_ratio_gain * rate])
 
     def summary(self) -> Dict[str, float]:
         return {

@@ -58,9 +58,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.faults import FaultModel, FaultProfile
+from ..core.faults import (
+    CorruptionModel,
+    CorruptionProfile,
+    FaultModel,
+    FaultProfile,
+)
 from ..core.latency_model import MB
-from ..core.offload import ComputeModel, FlashOffloadSimulator
+from ..core.offload import ComputeModel, FlashOffloadSimulator, pack_checksums
 from ..core.pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from ..models.model import Model
 from ..models.transformer import SPARSE_WEIGHT_NAMES
@@ -69,9 +74,12 @@ from ..kernels.quantize import quantize_params
 from ..sharding.serve import ServeMesh, validate_serve_mesh
 from .degrade import DegradationController
 from .sparse_exec import (
+    INTEGRITY_COUNTER_KEYS,
+    KERNEL_BLOCK_ROWS,
     WBITS_CHOICES,
     SparseExecution,
     plan_hit_miss,
+    plan_integrity_counters,
     plan_transfer_bytes,
     reset_plan_counters,
     set_plan_budget_scale,
@@ -126,6 +134,17 @@ IO_SUMMARY_KEYS = (
     "admitted_during_stall",
     "stall_hidden_s",
     "bubble_utilization",
+    "fault_events",
+    "fault_spikes",
+    "fault_retries",
+    "fault_backoff_s",
+    "fault_extra_s",
+    "min_throttle_scale",
+    "corruptions_detected",
+    "corruptions_recovered",
+    "corruptions_substituted",
+    "corruptions_dropped",
+    "integrity_reread_s",
 )
 
 
@@ -155,6 +174,10 @@ class ServeEngine:
         fault_profile: Optional[str | FaultProfile] = None,
         fault_seed: int = 0,
         degrade: bool = False,
+        corruption_profile: Optional[str | CorruptionProfile] = None,
+        corruption_seed: int = 0,
+        max_reread: int = 2,
+        recover: bool = True,
     ):
         """``backend``: the decode execution backend ("reference" |
         "kernel", see kernels/backend.py). "reference" computes the planned
@@ -209,6 +232,23 @@ class ServeEngine:
         out. None (default) or "none" ⇒ bit-identical behavior to an
         engine without the fault machinery.
 
+        ``corruption_profile`` / ``corruption_seed`` / ``max_reread`` /
+        ``recover``: data-plane corruption injection (core/faults.py
+        ``CORRUPTION_PROFILES``). Unlike ``fault_profile`` (time-only),
+        corruption damages the BYTES of fetched chunk blocks; plan
+        refreshes verify them against pack-time checksum lanes the engine
+        emits at construction (``_ck`` leaves — ``quantize_params`` over
+        the int8 payload at wbits=8, ``pack_checksums`` over the fp leaves
+        at 16). With ``recover=True`` (default) the detection/recovery
+        ladder keeps greedy tokens byte-identical to a fault-off engine
+        whenever every corruption is recoverable; re-read + backoff
+        seconds are charged through ``IOEvent.integrity_s``. With
+        ``recover=False`` the corruption flows into the gather and tokens
+        CAN change (identically on both backends). Counters surface in
+        ``io_summary()``. Requires a selecting method, no reorderings and
+        the unsharded mesh; None/"none" ⇒ bit-identical to a build
+        without the integrity subsystem.
+
         ``degrade``: enable the adaptive ``DegradationController``
         (serving/degrade.py): at every decode-call boundary the engine
         observes the measured/estimated step-latency ratio (normalized by
@@ -236,6 +276,20 @@ class ServeEngine:
             raise ValueError(
                 f"degrade=True needs a selecting method ('chunk' | 'topk') "
                 f"whose budget the controller can tighten, got {method!r}"
+            )
+        # data-plane corruption injection (PR 9): resolve/validate the
+        # profile up front — dense_free has no flash data plane to corrupt
+        # (SparseExecution validates the sparse-method constraints itself)
+        _corruption_probe = (
+            CorruptionModel(corruption_profile, seed=corruption_seed,
+                            max_reread=max_reread, recover=recover)
+            if corruption_profile is not None else None
+        )
+        if (method == "dense_free" and _corruption_probe is not None
+                and _corruption_probe.enabled):
+            raise ValueError(
+                "corruption injection needs an offloaded data plane — "
+                "method='dense_free' streams nothing from flash"
             )
         self.backend = backend
         self.model = model
@@ -274,9 +328,19 @@ class ServeEngine:
                                  cache_mb=self.cache_mb, backend=backend,
                                  kernel_prefetch_depth=prefetch_depth,
                                  wbits=wbits, mesh=self.mesh,
-                                 degradable=degrade)
+                                 degradable=degrade,
+                                 corruption_profile=corruption_profile,
+                                 corruption_seed=corruption_seed,
+                                 max_reread=max_reread,
+                                 corruption_recover=recover)
         )
         self.wbits = wbits
+        # the resolved corruption model (None when off) + engine-lifetime
+        # integrity counter totals, ordered like INTEGRITY_COUNTER_KEYS
+        self.corruption = (
+            self.sparse_ctx.corruption if self.sparse_ctx is not None else None
+        )
+        self._integrity_totals = np.zeros(len(INTEGRITY_COUNTER_KEYS))
         # per-shard I/O accounting width (1 on the unsharded path — the
         # shard lanes stay out of the logs entirely so single-device
         # StepStats/IOEvents are byte-identical to pre-mesh engines)
@@ -284,13 +348,22 @@ class ServeEngine:
             self.sparse_ctx.n_shards if self.sparse_ctx is not None
             else (self.mesh.model if self.mesh.is_sharded else 1)
         )
+        integrity_on = self.corruption is not None
         if self.sparse_ctx is not None and wbits == 8:
             # quantize the offloaded matrices once: the int8 payload +
             # per-block scale leaves (leading L dim preserved) join the
             # stacked layer params so they ride the decode scan unchanged;
-            # prefill / append / the unplanned paths keep the fp originals
+            # prefill / append / the unplanned paths keep the fp originals.
+            # Corruption injection adds the pack-time checksum lane (_ck)
+            # over the int8 payload — the exact bytes the DMA lane streams
             layers = dict(self.params["layers"])
-            layers.update(quantize_params(layers, SPARSE_WEIGHT_NAMES))
+            layers.update(quantize_params(layers, SPARSE_WEIGHT_NAMES,
+                                          checksums=integrity_on))
+            self.params = {**self.params, "layers": layers}
+        elif self.sparse_ctx is not None and integrity_on:
+            # fp pack path (wbits=16): checksum the fp payload leaves
+            layers = dict(self.params["layers"])
+            layers.update(pack_checksums(layers, SPARSE_WEIGHT_NAMES))
             self.params = {**self.params, "layers": layers}
         if self.mesh.is_sharded:
             # commit params to the mesh: decode-streamed leaves shard over
@@ -334,7 +407,11 @@ class ServeEngine:
             h1, m1 = plan_hit_miss(new_plan)
             db = plan_transfer_bytes(new_plan) - plan_transfer_bytes(plan)
             dsb = self._plan_shard_bytes(new_plan) - self._plan_shard_bytes(plan)
-            return logits, cache, io, new_plan, h1 - h0, m1 - m0, db, dsb
+            # per-step integrity counter deltas ((6,) zeros with
+            # corruption off — see INTEGRITY_COUNTER_KEYS)
+            dci = (plan_integrity_counters(new_plan)
+                   - plan_integrity_counters(plan))
+            return logits, cache, io, new_plan, h1 - h0, m1 - m0, db, dsb, dci
 
         self._decode_one = jax.jit(_decode_one_impl)
         self._append = jax.jit(
@@ -372,10 +449,12 @@ class ServeEngine:
         """One jit: scan ``decode_step_planned`` over n_tokens greedy steps.
 
         Returns (tokens (b, n), final cache, final plan, io (n, n_layers),
-        hits (n,), misses (n,), bytes (n,), shard_bytes (n, n_shards)) —
-        per-step per-layer I/O estimates plus residency-cache row/byte
-        counters and per-model-shard byte splits ride along. Everything
-        stays on device until the caller syncs once.
+        hits (n,), misses (n,), bytes (n,), shard_bytes (n, n_shards),
+        integrity (n, 6)) — per-step per-layer I/O estimates plus
+        residency-cache row/byte counters, per-model-shard byte splits and
+        integrity-counter deltas (INTEGRITY_COUNTER_KEYS order; zeros with
+        corruption off) ride along. Everything stays on device until the
+        caller syncs once.
         """
         k = self.plan_refresh_interval
 
@@ -389,16 +468,19 @@ class ServeEngine:
             h1, m1 = plan_hit_miss(new_plan)
             db = plan_transfer_bytes(new_plan) - plan_transfer_bytes(plan)
             dsb = self._plan_shard_bytes(new_plan) - self._plan_shard_bytes(plan)
+            dci = (plan_integrity_counters(new_plan)
+                   - plan_integrity_counters(plan))
             nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             return (nxt, cache, new_plan), (
-                nxt[:, 0], io, h1 - h0, m1 - m0, db, dsb
+                nxt[:, 0], io, h1 - h0, m1 - m0, db, dsb, dci
             )
 
-        (_, cache, plan), (toks, ios, hits, misses, byts, sbyts) = jax.lax.scan(
+        (_, cache, plan), (toks, ios, hits, misses, byts, sbyts,
+                           civ) = jax.lax.scan(
             step, (token, cache, plan), jnp.arange(n_tokens)
         )
         # toks: (n, b) -> (b, n)
-        return toks.T, cache, plan, ios, hits, misses, byts, sbyts
+        return toks.T, cache, plan, ios, hits, misses, byts, sbyts, civ
 
     def _selection_seconds_per_refresh(self) -> float:
         """Wall seconds one refresh step spends on chunk selection: the
@@ -439,18 +521,20 @@ class ServeEngine:
         tokens = self.mesh.put_batch(tokens)
         t0 = time.perf_counter()
         (toks, self.cache, self._plan, ios, hits, misses, byts,
-         sbyts) = self._decode_scan(
+         sbyts, civ) = self._decode_scan(
             self.params, tokens, self.cache, n_tokens, self._plan
         )
         # ONE blocking host transfer for the whole scan (per-layer estimates
-        # + residency counters)
-        ios, hits, misses, byts, sbyts = jax.device_get(
-            (ios, hits, misses, byts, sbyts)
+        # + residency/integrity counters)
+        ios, hits, misses, byts, sbyts, civ = jax.device_get(
+            (ios, hits, misses, byts, sbyts, civ)
         )
         ios = np.asarray(ios, np.float64)  # (n, n_layers)
         hits, misses = np.asarray(hits, np.float64), np.asarray(misses, np.float64)
         byts = np.asarray(byts, np.float64)
         sbyts = np.asarray(sbyts, np.float64)  # (n, n_shards)
+        civ = np.asarray(civ, np.float64)  # (n, len(INTEGRITY_COUNTER_KEYS))
+        self._integrity_totals += civ.sum(axis=0)
         if self.method == "dense":
             byts = np.full_like(byts, self._dense_step_bytes())
             sbyts = np.full_like(sbyts, self._dense_step_bytes() / self.n_shards)
@@ -461,6 +545,7 @@ class ServeEngine:
         sims = self.simulator.measure_from_estimate_batch(
             io_steps, name="decode", hit_rates=hit_rates, nbytes=byts,
             shard_bytes=sbyts if self.n_shards > 1 else None,
+            integrity_s=civ[:, 5],
         )
         # the simulator's lift+jitter applies per step; spread it over the
         # step's layers proportionally so the pipeline sees simulated time
@@ -486,6 +571,7 @@ class ServeEngine:
                           bubble_s=float(tl.bubble_s[i]))
             )
         self._observe_degradation(io_steps, sims)
+        self._observe_corruption(float(civ[:, 0].sum()), float(misses.sum()))
         charged = tl.overlap_s if self.overlap else tl.serial_s
         return toks, charged
 
@@ -507,6 +593,16 @@ class ServeEngine:
         if not np.any(pos):
             return
         self.degrade_controller.observe(sim[pos] / (est[pos] * self._decode_lift()))
+
+    def _observe_corruption(self, detected: float, miss_rows: float) -> None:
+        """Feed one decode call's corruption rate — detected corrupt blocks
+        per fetched block (miss rows / KERNEL_BLOCK_ROWS) — to the
+        degradation controller as its second degrade signal. No-op when
+        degradation control or corruption injection is off."""
+        if self.degrade_controller is None or self.corruption is None:
+            return
+        blocks = max(miss_rows / KERNEL_BLOCK_ROWS, 1.0)
+        self.degrade_controller.observe_corruption(detected / blocks)
 
     @staticmethod
     def _validate_greedy(greedy: bool) -> None:
@@ -553,14 +649,18 @@ class ServeEngine:
         out = [token]
         start_idx = len(self.stats)
         io_rows = []
+        det_call = 0.0
         select_per_refresh = self._selection_seconds_per_refresh()
         for i in range(n_tokens):
             t0 = time.perf_counter()
             (logits, self.cache, io_vec, self._plan, dh, dm, db,
-             dsb) = self._decode_one(
+             dsb, dci) = self._decode_one(
                 self.params, token, self.cache, self._plan, jnp.int32(i)
             )
             io_vec = np.asarray(io_vec, np.float64)  # the per-token host sync
+            dci = np.asarray(dci, np.float64)
+            self._integrity_totals += dci
+            det_call += float(dci[0])
             io = float(io_vec.sum())
             hit, miss = float(dh), float(dm)
             nbytes = self._dense_step_bytes() if self.method == "dense" else float(db)
@@ -576,7 +676,8 @@ class ServeEngine:
             out.append(token)
             rate = hit / (hit + miss) if (hit + miss) > 0 else 0.0
             sim = self.simulator.measure_from_estimate(
-                io, name="decode", hit_rate=rate, nbytes=nbytes, shard_bytes=sb
+                io, name="decode", hit_rate=rate, nbytes=nbytes, shard_bytes=sb,
+                integrity_s=float(dci[5]),
             )
             io_rows.append(io_vec * (sim / io if io > 0 else 1.0))
             sel = select_per_refresh if (i % self.plan_refresh_interval) == 0 else 0.0
@@ -588,6 +689,9 @@ class ServeEngine:
         recent = self.stats[start_idx:]
         self._observe_degradation(
             [s.io_est_s for s in recent], [s.io_sim_s for s in recent]
+        )
+        self._observe_corruption(
+            det_call, float(sum(s.miss_rows for s in recent))
         )
         # backfill the overlap-pipeline accounting for the whole loop
         self._log_layer_io(np.asarray(io_rows))
@@ -848,6 +952,22 @@ class ServeEngine:
         | ``admitted_during_stall`` | scheduler admissions hidden in idle windows   | PR 4  |
         | ``stall_hidden_s``     | Σ prefill seconds those admissions hid           | PR 4  |
         | ``bubble_utilization`` | stall_hidden_s / (stall + bubble), ≤ 1           | PR 4  |
+        | ``fault_events``       | I/O events the fault model perturbed             | PR 9  |
+        | ``fault_spikes``       | tail-latency spikes the fault model injected     | PR 9  |
+        | ``fault_retries``      | transient-failure re-reads (fault model)         | PR 9  |
+        | ``fault_backoff_s``    | Σ retry backoff seconds charged                  | PR 9  |
+        | ``fault_extra_s``      | Σ extra charged seconds vs the clean clock       | PR 9  |
+        | ``min_throttle_scale`` | deepest thermal-throttle derate seen (≤ 1)       | PR 9  |
+        | ``corruptions_detected``    | checksum-mismatched (matrix, block) fetches | PR 9  |
+        | ``corruptions_recovered``   | detections healed by re-read or DRAM copy   | PR 9  |
+        | ``corruptions_substituted`` | unreadable rows swapped for next-best rows  | PR 9  |
+        | ``corruptions_dropped``     | unreadable rows dropped (no substitute)     | PR 9  |
+        | ``integrity_reread_s``      | Σ re-read + backoff seconds charged         | PR 9  |
+
+        The fault lanes mirror ``fault_summary()`` (quiescent defaults —
+        0 counts, throttle scale 1.0 — with no fault model); the corruption
+        lanes total the plan's INTEGRITY_COUNTER_KEYS accumulators over the
+        engine lifetime (all zero with corruption injection off).
         """
         tot_est = sum(s.io_est_s for s in self.stats)
         tot_sim = sum(s.io_sim_s for s in self.stats)
@@ -858,6 +978,8 @@ class ServeEngine:
         overlap = sum(s.overlap_s for s in dec)
         stall = sum(s.stall_s for s in dec)
         bubble = sum(s.bubble_s for s in dec)
+        fs = self.fault_summary()
+        it = self._integrity_totals
         return {
             "io_est_s": tot_est,
             "io_sim_s": tot_sim,
@@ -888,4 +1010,17 @@ class ServeEngine:
                 min(self.stall_hidden_s / (stall + bubble), 1.0)
                 if (stall + bubble) > 0 else 0.0
             ),
+            # storage-fault + corruption-integrity lanes (PR 9): numeric
+            # fault_summary() mirrors + lifetime integrity-counter totals
+            "fault_events": fs["fault_events"],
+            "fault_spikes": fs["fault_spikes"],
+            "fault_retries": fs["fault_retries"],
+            "fault_backoff_s": fs["fault_backoff_s"],
+            "fault_extra_s": fs["fault_extra_s"],
+            "min_throttle_scale": fs["min_throttle_scale"],
+            "corruptions_detected": float(it[0]),
+            "corruptions_recovered": float(it[1]),
+            "corruptions_substituted": float(it[2]),
+            "corruptions_dropped": float(it[3]),
+            "integrity_reread_s": float(it[5]),
         }

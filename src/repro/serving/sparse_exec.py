@@ -43,8 +43,10 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.baselines import topk_mask
 from ..core.chunking import BatchedChunkSelector, ChunkConfig, ChunkSelector
+from ..core.faults import CorruptionModel, CorruptionProfile, corruption_key
 from ..kernels.backend import ExecutionBackend, pick_tile
 from ..kernels.chunk_gather_dma import masks_to_block_tables
+from ..kernels.quantize import block_checksums
 from ..core.latency_model import (
     DeviceProfile,
     LatencyTable,
@@ -173,18 +175,43 @@ def plan_budget_scale(plan) -> Optional[float]:
     return None
 
 
+# per-(layer, site) integrity counter lanes carried by the decode plan when
+# corruption injection is on (PR 9): detected corrupt block-events, events
+# recovered (clean re-read or rung-1 resident DRAM copy), substituted rows
+# (rung 2), dropped rows (rung 3), re-reads charged, and the re-read +
+# backoff seconds the engine routes through IOEvent.integrity_s
+INTEGRITY_COUNTER_KEYS = ("cdet", "crec", "csub", "cdrop", "crr", "crr_s")
+
+
+def plan_integrity_counters(plan) -> jnp.ndarray:
+    """Total integrity counters accumulated in a decode plan pytree, as one
+    (6,) float32 vector ordered like ``INTEGRITY_COUNTER_KEYS``. All-zero
+    when the plan carries no integrity lanes (corruption off), so the
+    engine can emit the vector unconditionally. jit-safe."""
+    out = jnp.zeros((len(INTEGRITY_COUNTER_KEYS),), jnp.float32)
+    if not plan:
+        return out
+    for state in plan.values():
+        if isinstance(state, dict) and "cdet" in state:
+            out = out + jnp.stack(
+                [jnp.sum(state[k]) for k in INTEGRITY_COUNTER_KEYS]
+            )
+    return out
+
+
 def reset_plan_counters(plan):
-    """Zero the hit/miss/bytes accumulators of a decode plan state. Called
-    by the engine at the start of each decode invocation so the float32
-    counters only ever accumulate one call's rows — exact far beyond any
-    realistic n_tokens."""
+    """Zero the hit/miss/bytes (and integrity-counter) accumulators of a
+    decode plan state. Called by the engine at the start of each decode
+    invocation so the float32 counters only ever accumulate one call's
+    rows — exact far beyond any realistic n_tokens."""
     if not plan:
         return plan
     out = {}
     for kind, state in plan.items():
         if isinstance(state, dict):
             state = dict(state)
-            for key in ("hit", "miss", "bytes", "hit_shard", "miss_shard"):
+            for key in ("hit", "miss", "bytes", "hit_shard",
+                        "miss_shard") + INTEGRITY_COUNTER_KEYS:
                 if key in state:
                     state[key] = jnp.zeros_like(state[key])
         out[kind] = state
@@ -246,6 +273,10 @@ class SparseExecution:
         wbits: int = 16,
         mesh: Optional[ServeMesh] = None,
         degradable: bool = False,
+        corruption_profile: Optional[str | CorruptionProfile] = None,
+        corruption_seed: int = 0,
+        max_reread: int = 2,
+        corruption_recover: bool = True,
     ):
         """``backend``: the decode EXECUTION backend for the planned decode
         path (kernels/backend.py) — ``"reference"`` computes the masked
@@ -290,6 +321,23 @@ class SparseExecution:
         ones, and with ``degradable=False`` (default) the plan pytree
         structure is exactly the pre-degradation one.
 
+        ``corruption_profile`` / ``corruption_seed`` / ``max_reread`` /
+        ``corruption_recover``: data-plane corruption injection
+        (core/faults.py CorruptionModel). When the named profile actually
+        corrupts (``p_block > 0``), every plan refresh draws per-matrix
+        corrupt blocks among the rows FETCHED from flash, verifies them
+        against the pack-time checksum lane (``block_checksums``), and —
+        with recovery on — walks the detection/recovery ladder: bounded
+        re-reads (seconds surfaced through the plan's ``crr_s`` lane),
+        then the resident DRAM copy from the previous refresh epoch, then
+        next-best-chunk substitution with a budget rebate, then drop.
+        With recovery OFF the drawn corruption pattern is carried in the
+        plan ("cblk") and applied to the weight payload at the gather
+        boundary by ``apply_corruption`` — tokens CAN change, identically
+        on both backends. Requires a selecting method, no reorderings and
+        the unsharded mesh. ``None``/"none" ⇒ bit-identical behavior to a
+        build without the integrity subsystem.
+
         ``mesh``: the serve-stack (data, model) mesh context
         (sharding/serve.py). Selection stays REPLICATED — importance
         vectors are constrained to full replication before any cross-batch
@@ -318,6 +366,35 @@ class SparseExecution:
         self.reorderings = reorderings or {}
         self.cached = cached or {}
         self.degradable = bool(degradable)
+        # data-plane corruption injection (PR 9): profile "none" (or None)
+        # resolves to NO model at all, so the integrity-off refresh path is
+        # bit-identical to a build without the subsystem
+        self.corruption: Optional[CorruptionModel] = None
+        if corruption_profile is not None:
+            cm = CorruptionModel(
+                corruption_profile, seed=corruption_seed,
+                max_reread=max_reread, recover=corruption_recover,
+            )
+            if cm.enabled:
+                if method not in ("chunk", "topk"):
+                    raise ValueError(
+                        "corruption injection needs a selecting method "
+                        "('chunk' | 'topk') whose recovery ladder can edit "
+                        f"the chunk plan, got {method!r}"
+                    )
+                if self.mesh.is_sharded:
+                    raise ValueError(
+                        "corruption injection does not support sharded "
+                        "serving: the recovery ladder edits per-shard block "
+                        "tables it cannot see (serve on the 1x1 mesh)"
+                    )
+                if reorderings:
+                    raise ValueError(
+                        "corruption injection does not support reorderings: "
+                        "the rung-1 resident-copy check assumes selection "
+                        "row order equals storage row order"
+                    )
+                self.corruption = cm
         self.cache_mb = float(cache_mb)
         self.cache_caps: Optional[Dict[str, int]] = None  # set by init_plan
         sp = normalize_site_sparsity(sparsity)
@@ -328,6 +405,17 @@ class SparseExecution:
             kind: _site(n, cols, device, sp[kind], self.wbits)
             for kind, n, cols in decode_site_shapes(cfg)
         }
+        if self.corruption is not None:
+            # the checksum lane is one u32 per KERNEL_BLOCK_ROWS rows — the
+            # integrity draw/verify needs whole blocks on EVERY backend
+            # (the kernel backend validates this anyway; reference doesn't)
+            for kind, site in self.sites.items():
+                if site.n % KERNEL_BLOCK_ROWS:
+                    raise ValueError(
+                        f"corruption injection needs site {kind!r} input "
+                        f"dim {site.n} divisible by "
+                        f"block_rows={KERNEL_BLOCK_ROWS}"
+                    )
         # per-shard I/O geometry: the sites whose STREAMED row dim shards
         # over the model axis ('attn_out' streams wo rows, 'ffn' streams
         # w_down/w_proj rows) get data-dependent per-shard miss counters —
@@ -408,6 +496,53 @@ class SparseExecution:
             for c in cols:
                 pick_tile(c)  # raises if no power-of-two tile >= 8 divides
 
+    # -- chunk integrity (PR 9) ------------------------------------------------
+    @property
+    def integrity_enabled(self) -> bool:
+        """True when data-plane corruption injection is active: plan
+        refreshes draw/verify corrupt blocks and carry integrity lanes."""
+        return self.corruption is not None
+
+    @property
+    def integrity_corrupting(self) -> bool:
+        """True in the recovery-OFF mode: the drawn corruption pattern is
+        carried in the plan ("cblk") and must be applied to the weight
+        payloads at the gather boundary (``apply_corruption``)."""
+        return self.corruption is not None and not self.corruption.recover
+
+    def site_matrix_count(self, kind: str) -> int:
+        """How many stored matrices actually stream through a site — the
+        width of the integrity lanes. The non-gated gelu family's
+        hidden_mlp site streams ONE matrix (w_fc) even though the latency
+        geometry prices two lanes (decode_site_shapes)."""
+        if kind == "hidden_attn":
+            return 3  # wq, wk, wv
+        if kind == "hidden_mlp" and self.cfg.mlp == "gelu":
+            return 1  # w_fc
+        if kind == "hidden_mlp":
+            return 2  # w_gate, w_up
+        return 1  # attn_out: wo; ffn: w_down / w_proj
+
+    def apply_corruption(self, plan, kind: str, matrix_idx: int, w):
+        """Recovery-OFF data plane: damage one (N, D) weight payload with
+        the corruption pattern the last refresh drew for it (the plan's
+        "cblk" lane) — re-deriving the exact bit/element draws from the
+        same (seed, layer, epoch, site, matrix) key. Both execution
+        backends consume the identical damaged operand, so even corrupted
+        tokens stay byte-identical across backends. No-op (returns ``w``)
+        unless ``integrity_corrupting``."""
+        if not self.integrity_corrupting or kind not in plan:
+            return w
+        cm = self.corruption
+        entry = plan[kind]
+        key = corruption_key(
+            cm.base_key(), entry["lid"], entry["epoch"],
+            self.site_order.index(kind), matrix_idx,
+        )
+        return cm.corrupt_payload(
+            w, entry["cblk"][matrix_idx], key, KERNEL_BLOCK_ROWS
+        )
+
     def mask(self, kind: str, acts: jnp.ndarray):
         """acts (..., N) → (mask (N,) float or None, est latency seconds)."""
         site = self.sites.get(kind)
@@ -442,7 +577,7 @@ class SparseExecution:
         new_plan[kind] = entry
         return new_plan
 
-    def refresh_layer(self, plan, refresh: jnp.ndarray):
+    def refresh_layer(self, plan, refresh: jnp.ndarray, weights=None):
         """One batched refresh for ALL of a layer's sites — the planned
         decode path's replacement for per-site selection calls.
 
@@ -460,6 +595,21 @@ class SparseExecution:
         I/O — their chunks are still resident from the refresh that
         selected them.
 
+        ``weights`` (integrity mode only): {site: ((payload, checksums),
+        ...)} — each site's stored payload matrices with their pack-time
+        checksum lanes, in site matrix order. Each refresh draws corrupt
+        blocks among the FETCHED rows, re-verifies the damaged payload
+        against the checksums (identical jnp verdict computation for both
+        execution backends), and with recovery on walks the ladder:
+        re-read (charged through the "crr_s" plan lane, never the returned
+        estimate — plan-vs-reality separation, exactly like FaultModel) →
+        rung-1 resident DRAM copy (every fetched row of the block was in
+        the previous epoch's mask, so the working copy still holds it) →
+        rung-2 substitution of the next-best non-selected rows by pending
+        importance (the budget rebate: row count never grows) → rung-3
+        drop. Substituted rows are charged as fresh fetches; removed rows'
+        wasted reads stay charged (they really streamed).
+
         Returns (new_plan, est_io_latency_seconds for this layer).
         """
         if not plan:
@@ -474,6 +624,22 @@ class SparseExecution:
             )
         order = self.site_order
         cache = self.cache_enabled
+        integ = self.integrity_enabled
+        if integ:
+            if weights is None:
+                raise ValueError(
+                    "corruption injection is on but refresh_layer got no "
+                    "weights — the planned decode path must pass each "
+                    "site's (payload, checksums) matrices"
+                )
+            for kind in order:
+                want = self.site_matrix_count(kind)
+                got = len(weights.get(kind, ()))
+                if got != want:
+                    raise ValueError(
+                        f"site {kind!r} streams {want} matrices, integrity "
+                        f"weights carry {got}"
+                    )
 
         def _refresh(_):
             vs = jnp.zeros((self.batched.n_sites, self.batched.n_max), jnp.float32)
@@ -525,6 +691,123 @@ class SparseExecution:
             else:
                 masks, _ = self.batched.select(vs, budgets, res_pad)
 
+            # -- chunk integrity (PR 9): draw → verify → recovery ladder ----
+            # Runs between selection and the chunk-table build so rung 2/3
+            # edits land in the tables both backends consume. Everything is
+            # shared jnp — the verdicts are bitwise identical across
+            # backends by construction.
+            icnt: Dict[str, Dict[str, jnp.ndarray]] = {}
+            fetch_masks = {}
+            if integ:
+                cm = self.corruption
+                base = cm.base_key()
+                lid = plan[order[0]]["lid"]
+                epoch_new = plan[order[0]]["epoch"] + jnp.int32(1)
+                for i, kind in enumerate(order):
+                    site = self.sites[kind]
+                    n = site.n
+                    nb = n // KERNEL_BLOCK_ROWS
+                    m = masks[i, :n]
+                    res = (residents[i] if cache
+                           else jnp.zeros((n,), bool))
+                    # only rows that actually touch the storage data plane
+                    # this epoch can arrive corrupted
+                    fetched = m & ~res
+                    fetched_blk = jnp.any(
+                        fetched.reshape(nb, KERNEL_BLOCK_ROWS), axis=1
+                    )
+                    # rung-1 eligibility: every fetched row of the block was
+                    # in the previous epoch's mask, so its clean bytes are
+                    # still in the DRAM working copy (weights are static)
+                    prev = plan[kind]["mask"] > 0.0
+                    prev_cover = jnp.all(
+                        (~fetched | prev).reshape(nb, KERNEL_BLOCK_ROWS),
+                        axis=1,
+                    )
+                    cdet = jnp.float32(0.0)
+                    crec = jnp.float32(0.0)
+                    crr = jnp.float32(0.0)
+                    crr_s = jnp.float32(0.0)
+                    unrec_bad = jnp.zeros((nb,), bool)
+                    cblks = []
+                    for mi, (w_m, ck_m) in enumerate(weights[kind]):
+                        key = corruption_key(base, lid, epoch_new, i, mi)
+                        corrupt = cm.draw_blocks(key, fetched_blk)
+                        damaged = cm.corrupt_payload(
+                            w_m, corrupt, key, KERNEL_BLOCK_ROWS
+                        )
+                        # the honest verify: checksum the bytes the fetch
+                        # delivered against the pack-time lane (a zeroed
+                        # all-zero block is undetectable AND harmless)
+                        det = corrupt & (
+                            block_checksums(damaged, KERNEL_BLOCK_ROWS)
+                            != ck_m
+                        )
+                        cdet += jnp.sum(det).astype(jnp.float32)
+                        if cm.recover:
+                            rr, rec = cm.draw_rereads(key, det)
+                            tbl = site.tables[
+                                min(mi, len(site.tables) - 1)
+                            ]
+                            crr += jnp.sum(rr).astype(jnp.float32)
+                            crr_s += (
+                                jnp.sum(rr).astype(jnp.float32)
+                                * tbl.lookup(KERNEL_BLOCK_ROWS).astype(
+                                    jnp.float32
+                                )
+                                + jnp.sum(cm.backoff_seconds(rr))
+                            )
+                            crec += jnp.sum(rec).astype(jnp.float32)
+                            unrec = det & ~rec
+                            # rung 1: serve the resident DRAM copy
+                            crec += jnp.sum(
+                                unrec & prev_cover
+                            ).astype(jnp.float32)
+                            unrec_bad = unrec_bad | (unrec & ~prev_cover)
+                        else:
+                            # recovery off: the damage flows to compute —
+                            # carry the drawn pattern for apply_corruption
+                            cblks.append(corrupt)
+                    csub = jnp.float32(0.0)
+                    cdrop = jnp.float32(0.0)
+                    m_fetch = m
+                    if cm.recover:
+                        # rungs 2/3: a block unreadable in ANY matrix takes
+                        # the whole site's rows with it (matrices share the
+                        # mask); substitute the next-best non-selected rows
+                        # by pending importance — candidates exclude the
+                        # unreadable blocks themselves — and drop whatever
+                        # the candidate pool cannot cover
+                        removed = fetched & jnp.repeat(
+                            unrec_bad, KERNEL_BLOCK_ROWS
+                        )
+                        k = jnp.sum(removed).astype(jnp.int32)
+                        cand = ~m & ~jnp.repeat(
+                            unrec_bad, KERNEL_BLOCK_ROWS
+                        )
+                        rank = (
+                            jnp.zeros((n,), jnp.int32)
+                            .at[jnp.argsort(jnp.where(
+                                cand, -plan[kind]["pending"], jnp.inf
+                            ))]
+                            .set(jnp.arange(n, dtype=jnp.int32))
+                        )
+                        sub = cand & (rank < k)
+                        csub = jnp.sum(sub).astype(jnp.float32)
+                        cdrop = k.astype(jnp.float32) - csub
+                        # the budget rebate: |final| = |m| - dropped ≤ |m|
+                        masks = masks.at[i, :n].set((m & ~removed) | sub)
+                        # substitutes are fresh fetches; the removed rows'
+                        # wasted reads really streamed, so both stay charged
+                        m_fetch = m | sub
+                    fetch_masks[kind] = m_fetch
+                    entry = {"epoch": epoch_new, "cdet": cdet,
+                             "crec": crec, "csub": csub, "cdrop": cdrop,
+                             "crr": crr, "crr_s": crr_s}
+                    if not cm.recover:
+                        entry["cblk"] = jnp.stack(cblks)
+                    icnt[kind] = entry
+
             # the kernel gather plan: every site's COMPUTE mask (selection /
             # storage row order; legacy static-resident rows participate in
             # compute, so they join the gather) → block-aligned chunk tables
@@ -547,12 +830,17 @@ class SparseExecution:
                 site = self.sites[kind]
                 m = masks[i, : site.n]
                 res = residents[i] if cache else jnp.zeros((site.n,), bool)
+                # integrity mode: I/O is charged for the rows that actually
+                # streamed (original selection + rung-2 substitutes; the
+                # dropped rows' wasted reads included) while ``m`` is the
+                # post-ladder COMPUTE mask; identical to ``m`` otherwise
+                mf = fetch_masks[kind] if integ else m
                 for t in site.tables:
                     # one coalesced request per selected run, charged for
                     # miss rows only (resident rows never fragment it)
-                    lat += t.mask_latency_miss(m, res) if cache else t.mask_latency(m)
+                    lat += t.mask_latency_miss(mf, res) if cache else t.mask_latency(mf)
                 hit = jnp.sum(m & res).astype(jnp.float32)
-                miss = jnp.sum(m & ~res).astype(jnp.float32)
+                miss = jnp.sum(mf & ~res).astype(jnp.float32)
                 nbytes = miss * jnp.float32(self.site_row_bytes(kind))
                 ns = self.row_shards[kind]
                 if ns > 1:
@@ -591,6 +879,8 @@ class SparseExecution:
                     entry["miss_shard"] = miss_shard
                 if cache:
                     entry["score"] = score
+                if integ:
+                    entry.update(icnt[kind])
                 outs[kind] = entry
             return outs, lat
 
@@ -608,6 +898,15 @@ class SparseExecution:
                     entry["miss_shard"] = jnp.zeros((ns,), jnp.float32)
                 if cache:
                     entry["score"] = plan[kind]["score"]
+                if integ:
+                    # no fetch ⇒ no new corruption: the epoch (and, with
+                    # recovery off, the damaged DRAM copy's "cblk" pattern)
+                    # carries over unchanged until the next refresh
+                    entry["epoch"] = plan[kind]["epoch"]
+                    for key in INTEGRITY_COUNTER_KEYS:
+                        entry[key] = zero
+                    if "cblk" in plan[kind]:
+                        entry["cblk"] = plan[kind]["cblk"]
                 outs[kind] = entry
             return outs, jnp.float32(0.0)
 
@@ -630,6 +929,12 @@ class SparseExecution:
             entry["ksizes"] = results[kind]["ksizes"]
             if cache:
                 entry["score"] = results[kind]["score"]
+            if integ:
+                entry["epoch"] = results[kind]["epoch"]
+                for key in INTEGRITY_COUNTER_KEYS:
+                    entry[key] = plan[kind][key] + results[kind][key]
+                if "cblk" in results[kind]:
+                    entry["cblk"] = results[kind]["cblk"]
             new_plan[kind] = entry
         return new_plan, lat
 
@@ -772,6 +1077,14 @@ class SparseExecution:
         (L, N) eviction state rides along (decayed importance; the resident
         set is its top cap_rows); pre-warmed ``cached`` rows start at
         PIN_SCORE.
+
+        With corruption injection on, every site also carries the
+        integrity lanes: "lid" (L,) layer ids + "epoch" (L,) refresh
+        counters (the corruption key schedule's traced inputs), the six
+        ``INTEGRITY_COUNTER_KEYS`` (L,) accumulators, and — recovery OFF
+        only — the drawn corrupt-block pattern "cblk"
+        (L, n_matrices, n_blocks) that ``apply_corruption`` replays at the
+        gather boundary.
         """
         if self.method == "dense":
             return {}
@@ -809,6 +1122,17 @@ class SparseExecution:
                 # rewritten between decode calls by set_plan_budget_scale,
                 # consumed inside the jitted refresh (1.0 = full budgets)
                 entry["bscale"] = jnp.ones((n_layers,), jnp.float32)
+            if self.integrity_enabled:
+                entry["lid"] = jnp.arange(n_layers, dtype=jnp.int32)
+                entry["epoch"] = jnp.zeros((n_layers,), jnp.int32)
+                for key in INTEGRITY_COUNTER_KEYS:
+                    entry[key] = jnp.zeros((n_layers,), jnp.float32)
+                if self.integrity_corrupting:
+                    entry["cblk"] = jnp.zeros(
+                        (n_layers, self.site_matrix_count(kind),
+                         site.n // KERNEL_BLOCK_ROWS),
+                        bool,
+                    )
             plan[kind] = entry
         return plan
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.faults import (
@@ -197,6 +198,30 @@ def test_fault_profiles_registry():
     assert not FAULT_PROFILES["none"].spike_prob
 
 
+def test_fault_model_retries_reprice_at_advanced_clock():
+    """Regression (PR 9 satellite): each retry's read must be priced at
+    the throttle scale of the ADVANCED busy clock — first-attempt read +
+    backoffs heat the device — not at the scale frozen from attempt 0.
+    With a steep ramp the three reads land at three different scales; the
+    frozen-scale bug would charge 3 × clean + backoff."""
+    tr = ThermalTrajectory(onset_s=0.0, ramp_s=2e-3, floor=0.25)
+    p = FaultProfile("steep", fail_prob=0.999999, max_retries=2,
+                     backoff_base_s=1e-6, backoff_mult=1.0, throttle=tr)
+    out = FaultModel(p, seed=0).perturb(1e-3, 0.0)
+    assert out.retries == 2
+    # hand-walk the clock: read0 at scale(0)=1.0, each retry re-reads at
+    # the trajectory's scale of everything charged before it
+    expect = 1e-3
+    for _ in range(2):
+        expect += 1e-6
+        expect += 1e-3 / tr.scale(expect)
+    assert out.charged_s == pytest.approx(expect)
+    # strictly above what the frozen first-attempt scale would charge
+    assert out.charged_s > 3e-3 + out.backoff_s + 1e-4
+    # first attempt ran unthrottled; the outcome records attempt-0's scale
+    assert out.throttle_scale == 1.0
+
+
 # -- simulator measurement boundary ------------------------------------------
 
 
@@ -269,6 +294,133 @@ def test_controller_ignores_non_finite_and_validates():
         DegradationController(degrade_ratio=1.0, recover_ratio=1.2)
     with pytest.raises(ValueError, match="alpha"):
         DegradationController(alpha=0.0)
+
+
+def test_controller_hysteresis_never_oscillates_between_thresholds():
+    """A ratio held anywhere in (recover_ratio, degrade_ratio) moves the
+    scale in NEITHER direction — from healthy it never tightens, from
+    degraded it never relaxes. The dead band is what keeps a borderline
+    device from flapping budgets every call."""
+    c = DegradationController()  # recover 1.25 < 1.4 < degrade 1.6
+    for _ in range(100):
+        c.observe([1.4])
+    assert c.scale == 1.0
+    assert c.summary()["tighten_steps"] == 0
+    c.observe(np.full(32, 4.0))  # force a degrade
+    assert c.scale < 1.0
+    # let the EWMA decay into the dead band (it converges to 1.4 — while it
+    # is still above degrade_ratio the controller keeps tightening, which
+    # is correct: the dead band is a property of the FILTERED signal)
+    while c.ewma >= c.degrade_ratio:
+        c.observe([1.4])
+    held = c.scale
+    assert held < 1.0
+    for _ in range(100):
+        c.observe([1.4])
+    assert c.scale == held  # parked: no relax, no further tighten
+    assert c.summary()["relax_steps"] == 0
+
+
+def test_controller_monotone_tightening_clamps_at_floor():
+    """Under a sustained 4× ratio the scale walks DOWN monotonically in
+    exact ``step`` decrements, clamps at min_scale, and tighten_steps
+    counts only real moves (not the saturated observations)."""
+    c = DegradationController()
+    seen = [c.scale]
+    for _ in range(20):
+        c.observe([4.0])
+        seen.append(c.scale)
+    assert all(b <= a for a, b in zip(seen, seen[1:]))
+    assert seen[-1] == c.min_scale
+    moves = [a - b for a, b in zip(seen, seen[1:]) if a != b]
+    assert all(m == pytest.approx(c.step) for m in moves[:-1])
+    assert c.summary()["tighten_steps"] == len(moves)
+    # parked at the floor: more bad observations change nothing
+    c.observe(np.full(16, 4.0))
+    assert c.scale == c.min_scale
+
+
+def test_controller_recovery_lands_exactly_on_one():
+    """Relaxation must terminate at exactly 1.0 even when min_scale is not
+    step-aligned (0.5 with step 0.2 walks 0.7 → 0.9 → 1.0, the last move
+    a truncated half-step) — a 0.9999… scale would silently shave every
+    future budget."""
+    c = DegradationController(min_scale=0.5)
+    while c.scale > c.min_scale:
+        c.observe([4.0])
+    assert c.scale == 0.5
+    seen = []
+    for _ in range(20):
+        c.observe([1.0])
+        seen.append(c.scale)
+    assert seen[-1] == 1.0  # exact, not approx
+    lifts = [b - a for a, b in zip([0.5] + seen, seen) if b != a]
+    assert lifts == pytest.approx([0.2, 0.2, 0.1])
+    assert not c.degraded
+
+
+def test_controller_random_streams_keep_invariants():
+    """Deterministic sweep over seeded random ratio streams (NaN/inf/zero
+    spiked in): the scale stays inside [min_scale, 1.0], only moves in
+    ≤ step increments, and non-finite entries never count as
+    observations."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        c = DegradationController()
+        finite_seen = 0
+        prev = c.scale
+        for _ in range(60):
+            r = rng.gamma(2.0, rng.choice([0.4, 1.2]), size=6)
+            r[rng.integers(0, 6)] = rng.choice([np.nan, np.inf, 0.0, -2.0])
+            finite_seen += int(np.sum(np.isfinite(r) & (r > 0)))
+            c.observe(r)
+            assert c.min_scale <= c.scale <= 1.0
+            assert abs(c.scale - prev) <= c.step + 1e-12
+            assert c.degraded == (c.scale < 1.0)
+            prev = c.scale
+        assert c.observations == finite_seen
+
+
+def test_controller_observe_corruption_maps_rate_to_ratio():
+    """The second degrade signal: rate 0 observes the healthy 1.0 (inert),
+    a sustained rate above (degrade_ratio-1)/gain tightens, and non-finite
+    or negative rates are ignored entirely."""
+    c = DegradationController()  # gain 20: rate 0.05 → ratio 2.0 > 1.6
+    for _ in range(50):
+        c.observe_corruption(0.0)
+    assert c.scale == 1.0 and c.observations == 50
+    before = c.observations
+    c.observe_corruption(np.nan)
+    c.observe_corruption(-0.1)
+    assert c.observations == before and c.scale == 1.0
+    for _ in range(10):
+        c.observe_corruption(0.05)
+    assert c.scale < 1.0
+    with pytest.raises(ValueError, match="corruption_ratio_gain"):
+        DegradationController(corruption_ratio_gain=-1.0)
+    # gain 0 turns the signal off no matter how corrupt the device is
+    c0 = DegradationController(corruption_ratio_gain=0.0)
+    for _ in range(20):
+        c0.observe_corruption(0.5)
+    assert c0.scale == 1.0
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1.61, 64.0), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_controller_bounds_property(seed, ratio, steps):
+    """Property: any sustained ratio above the degrade threshold drives the
+    scale monotonically toward (never past) min_scale; a subsequent healthy
+    stream always returns it to exactly 1.0."""
+    rng = np.random.default_rng(seed)
+    c = DegradationController()
+    prev = 1.0
+    for _ in range(steps):
+        c.observe(np.full(rng.integers(1, 8), ratio))
+        assert c.min_scale <= c.scale <= prev
+        prev = c.scale
+    for _ in range(40):
+        c.observe(np.full(4, 1.0))
+    assert c.scale == 1.0
 
 
 def test_set_plan_budget_scale_validates():

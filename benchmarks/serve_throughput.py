@@ -40,6 +40,12 @@ Eight sections (reduced InternVL2 under the flash simulator):
     baseline; asserts the feature fires (admitted_during_stall ≥ 1,
     positive bubble utilization — the smoke floor) and never slows the
     simulated clock;
+  * serve/paged_kv_* — the paged KV cache (``--kv-page-tokens``): slot-mode
+    greedy tokens byte-identical to the dense per-slot cache across
+    backend × wbits and on the 2×2 mesh, strictly more concurrent
+    shared-prefix streams than the dense slot cap at equal KV memory, and
+    the shared-prefix resident-byte reduction at or above
+    PAGED_KV_SHARING_FLOOR — the PR-10 acceptance rows CI gates on;
   * serve/plan_reuse — I/O per token as ``plan_refresh_interval`` grows
     (selection reruns every k steps, resident chunks are free in between);
   * serve/cache_sweep — steady-state decode I/O vs DRAM residency budget
@@ -125,6 +131,11 @@ QUANTIZED_BYTES_RATIO_MAX = 0.55
 FAULT_DEADLINE_S = 0.03
 FAULT_ARRIVAL_GAP_S = 0.002
 FAULT_DEGRADED_TPS_FLOOR = 200.0
+# floor for the shared-prefix KV-byte reduction (resident pages, 4 streams
+# sharing a 4-page prefix vs 4 unique same-length prompts: 20/8 = 2.5x at
+# current geometry) — the CI smoke fails below 2x, the PR-10 acceptance
+# criterion for prefix sharing
+PAGED_KV_SHARING_FLOOR = 2.0
 
 
 def _setup():
@@ -751,6 +762,165 @@ def bench_integrity(rows: Rows, cfg, model, params,
              f"dropped={s_n['corruptions_dropped']:.0f}")
 
 
+def bench_paged_kv(rows: Rows, cfg, model, params, decode_tokens: int = 6,
+                   combos=(("reference", 16), ("kernel", 8))) -> None:
+    """Paged KV cache (PR 10 acceptance rows, fully deterministic):
+
+      * serve/paged_kv_identity_<backend>_w<wbits> — slot-mode decode with
+        the paged pool vs the dense per-slot cache at equal settings must
+        produce BYTE-IDENTICAL greedy tokens (every slot admitted, no
+        eviction — the workload class the identity criterion covers);
+      * serve/paged_kv_2x2 — the same identity on a 2×2 (data, model)
+        mesh, with the per-shard page lanes summing to the global count
+        (skipped-row idiom below 4 devices, like serve/sharded_*);
+      * serve/paged_kv_concurrency — at EQUAL KV memory (16 pages of 8
+        tokens, max_seq 64), the dense layout caps at 16//8 = 2 resident
+        slots while the paged engine serves 4 shared-prefix streams
+        concurrently — the smoke fails unless strictly more streams than
+        the dense slot cap fit;
+      * serve/paged_kv_sharing — 4 shared-prefix streams vs 4 unique
+        same-length prompts: resident KV pages (= bytes) must shrink by
+        at least PAGED_KV_SHARING_FLOOR×.
+    """
+    rng = np.random.default_rng(11)
+    # per-slot VLM prompts (frontend rows + tokens fuse to PROMPT_LEN
+    # positions); distinct seeds -> fully distinct streams
+    prompts = [
+        make_dummy_batch(cfg, InputShape("req", PROMPT_LEN, 1, "train"),
+                         seed=100 + i)
+        for i in range(BATCH)
+    ]
+
+    def _slot_decode(eng):
+        eng.enable_slots()
+        lasts = []
+        for slot, p in enumerate(prompts):
+            last, _ = eng.admit_slot(slot, p)
+            lasts.append(jnp.argmax(last, -1)[:, None])
+        tok0 = jnp.concatenate(lasts).astype(jnp.int32)
+        t0 = time.perf_counter()
+        out, _ = eng.decode_slots(tok0, decode_tokens)
+        jax.block_until_ready(out)
+        return np.asarray(out), time.perf_counter() - t0
+
+    for backend, wbits in combos:
+        dense = _engine(model, params, backend=backend, wbits=wbits)
+        paged = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                            device="nano", sparsity=0.4, method="chunk",
+                            seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                            backend=backend, wbits=wbits, kv_page_tokens=8)
+        out_d, _ = _slot_decode(dense)
+        out_p, wall = _slot_decode(paged)
+        name = f"serve/paged_kv_identity_{backend}_w{wbits}"
+        assert np.array_equal(out_d, out_p), (
+            f"{name}: paged greedy tokens diverged from the dense KV cache "
+            "— the gathered page view must reproduce the dense reduction "
+            "tree exactly (models/attention.py gather_paged_kv)"
+        )
+        paged.kv_pool.check()
+        tps = decode_tokens * BATCH / wall
+        rows.add(name, wall / decode_tokens * 1e6,
+                 f"tokens_per_s={tps:.1f} identical_tokens=True "
+                 f"pages_in_use={paged.kv_pool.pages_in_use} wbits={wbits}")
+
+    # 2x2 mesh identity (skipped-row idiom below 4 devices)
+    if len(jax.devices()) < 4:
+        rows.add("serve/paged_kv_2x2", 0.0,
+                 f"skipped=True devices={len(jax.devices())} needed=4")
+    else:
+        dense = _engine(model, params, mesh=ServeMesh.create(2, 2))
+        paged = ServeEngine(model, params, max_seq=MAX_SEQ, batch_size=BATCH,
+                            device="nano", sparsity=0.4, method="chunk",
+                            seed=5, plan_refresh_interval=1, cache_mb=0.0,
+                            kv_page_tokens=8, mesh=ServeMesh.create(2, 2))
+        out_d, _ = _slot_decode(dense)
+        out_p, wall = _slot_decode(paged)
+        assert np.array_equal(out_d, out_p), (
+            "serve/paged_kv_2x2: paged tokens diverged on the 2x2 mesh"
+        )
+        per = paged.shard_summary()["kv_pages_per_shard"]
+        assert sum(per) == paged.kv_pool.pages_in_use, (
+            f"serve/paged_kv_2x2: per-shard page lanes {per} do not sum to "
+            f"the global count {paged.kv_pool.pages_in_use}"
+        )
+        rows.add("serve/paged_kv_2x2", wall / decode_tokens * 1e6,
+                 f"identical_tokens=True pages_per_shard={per}")
+
+    # concurrency at equal KV memory: 16 usable pages of 8 tokens. The
+    # dense layout must reserve max_seq (64 positions = 8 pages) per slot
+    # up front -> 2 slots. Paged: 4 streams share a 4-page prefix (the
+    # frontend rows + the first token span) and add a private tail page +
+    # one decode-grown page each.
+    pt, kv_pages, max_seq = 8, 17, 64
+    dense_slot_cap = (kv_pages - 1) * pt // max_seq
+    base = dict(make_dummy_batch(cfg, InputShape("req", 5 * pt, 1, "train"),
+                                 seed=7))
+    n_tok = base["tokens"].shape[1]
+    streams = []
+    for _ in range(4):
+        p = dict(base)  # same frontend + leading tokens = shared prefix
+        toks = np.asarray(p["tokens"]).copy()
+        toks[0, n_tok - pt:] = rng.integers(0, cfg.vocab_size, pt)
+        p["tokens"] = jnp.asarray(toks, jnp.int32)
+        streams.append(p)
+    eng = ServeEngine(model, params, max_seq=max_seq, batch_size=4,
+                      device="nano", sparsity=0.4, method="chunk", seed=5,
+                      plan_refresh_interval=1, cache_mb=0.0,
+                      kv_page_tokens=pt, kv_pages=kv_pages)
+    eng.enable_slots()
+    lasts = []
+    for slot, p in enumerate(streams):
+        assert eng.kv_can_admit(p), (
+            f"serve/paged_kv_concurrency: stream {slot} did not fit — "
+            "prefix sharing must stretch the fixed page budget"
+        )
+        last, _ = eng.admit_slot(slot, p)
+        lasts.append(jnp.argmax(last, -1)[:, None])
+    tok0 = jnp.concatenate(lasts).astype(jnp.int32)
+    out, _ = eng.decode_slots(tok0, decode_tokens)
+    assert out.shape == (4, decode_tokens)
+    eng.kv_pool.check()
+    concurrent = sum(1 for s in range(4) if eng.kv_pool.slot_pages(s))
+    assert concurrent > dense_slot_cap, (
+        f"serve/paged_kv_concurrency: {concurrent} paged streams vs dense "
+        f"slot cap {dense_slot_cap} at equal KV memory — the acceptance "
+        "criterion requires strictly more"
+    )
+    rows.add("serve/paged_kv_concurrency", 0.0,
+             f"streams={concurrent} dense_slot_cap={dense_slot_cap} "
+             f"pages={eng.kv_pool.pages_in_use}/{kv_pages - 1} "
+             f"shared_hits={eng.kv_pool.shared_pages_hit}")
+
+    # sharing: resident KV bytes, shared-prefix vs unique same-length
+    def _admit_all(prompt_list):
+        e = ServeEngine(model, params, max_seq=max_seq, batch_size=4,
+                        device="nano", sparsity=0.4, method="chunk", seed=5,
+                        plan_refresh_interval=1, cache_mb=0.0,
+                        kv_page_tokens=pt, kv_pages=41)
+        e.enable_slots()
+        for slot, p in enumerate(prompt_list):
+            e.admit_slot(slot, p)
+        return e.kv_pool.pages_in_use
+
+    # distinct seeds: distinct frontend rows too, so nothing can share
+    unique = [
+        make_dummy_batch(cfg, InputShape("req", 5 * pt, 1, "train"),
+                         seed=200 + i)
+        for i in range(4)
+    ]
+    shared_pages = _admit_all(streams)
+    unique_pages = _admit_all(unique)
+    ratio = unique_pages / shared_pages
+    assert ratio >= PAGED_KV_SHARING_FLOOR, (
+        f"serve/paged_kv_sharing: page reduction {ratio:.2f}x below the "
+        f"{PAGED_KV_SHARING_FLOOR}x floor ({unique_pages} unique vs "
+        f"{shared_pages} shared)"
+    )
+    rows.add("serve/paged_kv_sharing", 0.0,
+             f"kv_byte_reduction={ratio:.2f}x shared_pages={shared_pages} "
+             f"unique_pages={unique_pages}")
+
+
 def run(rows: Rows, smoke: bool = False) -> None:
     cfg, model, params, batch = _setup()
     if smoke:
@@ -776,6 +946,7 @@ def run(rows: Rows, smoke: bool = False) -> None:
                                   smoke=True)
         bench_fault_robustness(rows, cfg, model, params)
         bench_integrity(rows, cfg, model, params)
+        bench_paged_kv(rows, cfg, model, params)
         return
     bench_fused_vs_loop(rows, model, params, batch)
     bench_backend_parity(rows, model, params, batch, repeats=3)
@@ -788,6 +959,9 @@ def run(rows: Rows, smoke: bool = False) -> None:
     bench_continuous_batching(rows, cfg, model, params)
     bench_fault_robustness(rows, cfg, model, params)
     bench_integrity(rows, cfg, model, params, decode_tokens=8)
+    bench_paged_kv(rows, cfg, model, params, decode_tokens=8,
+                   combos=(("reference", 16), ("reference", 8),
+                           ("kernel", 16), ("kernel", 8)))
 
 
 def _emit_json(rows: Rows, path: str, smoke: bool) -> None:

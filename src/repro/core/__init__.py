@@ -45,6 +45,7 @@ from .faults import (
     get_fault_profile,
 )
 from .offload import ComputeModel, FlashOffloadSimulator, IOEvent
+from .paged_kv import GARBAGE_PAGE, KVPoolExhausted, PagedKVAllocator
 from .pipeline import PipelineModel, PipelineTimeline, overlap_efficiency
 from .reorder import (
     Reordering,

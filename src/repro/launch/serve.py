@@ -131,6 +131,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="DRAM budget (MB) of the dynamic chunk residency "
                          "cache (paper §5); resident rows cost no flash I/O. "
                          "Default: the device profile's dram_cache_mb (0 = off)")
+    ap.add_argument("--kv-page-tokens", type=_positive_int("--kv-page-tokens"),
+                    default=None,
+                    help="paged KV cache: fixed page size in tokens (must "
+                         "divide --max-seq). The KV cache becomes a "
+                         "free-list page pool with per-slot page tables and "
+                         "copy-on-write prefix sharing; its capacity is "
+                         "carved out of the unified --cache-mb budget "
+                         "(io_summary reports the kv/weights split). "
+                         "Requires --streams (slot mode); greedy tokens are "
+                         "byte-identical to the dense KV cache. Default: "
+                         "dense per-slot KV")
     ap.add_argument("--per-token", action="store_true",
                     help="use the legacy one-jit-per-token decode loop "
                          "instead of the fused lax.scan loop")
@@ -292,6 +303,9 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.kv_page_tokens is not None and args.streams <= 0:
+        ap.error("--kv-page-tokens requires --streams (paged KV is slot-mode "
+                 "only: requests are admitted through the page allocator)")
     mesh = resolve_mesh(args.mesh, cfg, args.batch, args.streams)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -306,7 +320,8 @@ def main():
                       fault_seed=args.fault_seed, degrade=args.degrade,
                       corruption_profile=args.corruption_profile,
                       corruption_seed=args.corruption_seed,
-                      max_reread=args.max_reread, recover=args.recover)
+                      max_reread=args.max_reread, recover=args.recover,
+                      kv_page_tokens=args.kv_page_tokens)
 
     if args.streams > 0:
         _serve_streams(args, cfg, eng)
@@ -413,6 +428,13 @@ def _serve_streams(args, cfg, eng):
     print(f"[serve] admitted_during_stall {s['admitted_during_stall']}  "
           f"stall_hidden {s['stall_hidden_s']*1e3:.2f} ms  "
           f"bubble_utilization {s['bubble_utilization']:.3f}")
+    if eng.kv_pool is not None:
+        ps = eng.kv_pool.summary()
+        print(f"[paged-kv] page_tokens {eng.kv_page_tokens}  "
+              f"pages {eng.kv_pages} (kv {s['kv_cache_mb']:.2f} MB / "
+              f"weights {s['weight_cache_mb']:.2f} MB)  "
+              f"shared_hits {ps['shared_hits']}  cow {ps['cow_copies']}  "
+              f"evictions {ps['evictions']}")
     if args.deadline_s is not None:
         print(f"[slo] deadline {args.deadline_s*1e3:.1f} ms  "
               f"attainment {stats.slo_attainment:.3f} "

@@ -279,6 +279,73 @@ def init_kv_cache(spec: CacheSpec, n_layers: int, dtype) -> Dict[str, jnp.ndarra
     }
 
 
+def init_paged_kv_cache(
+    n_pages: int,
+    page_tokens: int,
+    batch: int,
+    max_pages: int,
+    n_kv_heads: int,
+    head_dim: int,
+    n_layers: int,
+    dtype,
+) -> Dict[str, jnp.ndarray]:
+    """Paged twin of ``init_kv_cache``: per-layer page POOLS plus a shared
+    per-slot page table. ``max_pages * page_tokens`` equals the logical
+    ``max_seq`` — the gathered view has exactly the dense cache's physical
+    shape, which is what keeps paged decode byte-identical to dense.
+
+    Pools are zero-initialised so unreferenced pages hold finite values:
+    masked attention positions then contribute exact 0.0 probability times
+    finite garbage — bitwise zero, same as the dense path's zero slots.
+    Table rows start at ``GARBAGE_PAGE`` (page 0, core/paged_kv.py): free
+    slots scatter there harmlessly and no live table ever reads it."""
+    pool = (n_layers, n_pages, page_tokens, n_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(pool, dtype),
+        "v": jnp.zeros(pool, dtype),
+        "page_table": jnp.zeros((batch, max_pages), jnp.int32),
+        # per-slot logical lengths (continuous batching: independent rows)
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def gather_paged_kv(pool_layer: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Materialise one layer's dense-view cache through the page table.
+
+    ``pool_layer`` (n_pages, page_tokens, kv, hd) gathered by ``table``
+    (b, max_pages) → (b, max_pages·page_tokens, kv, hd): positionally
+    identical to the dense (b, P, kv, hd) layer cache, so the downstream
+    ``decode_attention`` reduction tree — and therefore every bit of its
+    output — is unchanged. Positions past a slot's logical length read
+    whatever page the table maps (garbage page for unmapped tail entries);
+    the validity mask zeroes their probabilities exactly."""
+    b, max_pages = table.shape
+    _, page_tokens, n_kv, head_dim = pool_layer.shape
+    gathered = jnp.take(pool_layer, table, axis=0)  # (b, mp, pt, kv, hd)
+    return gathered.reshape(b, max_pages * page_tokens, n_kv, head_dim)
+
+
+def scatter_paged_kv(
+    pool_layer: jnp.ndarray,  # (n_pages, page_tokens, kv, hd)
+    dense_layer: jnp.ndarray,  # (b, P, kv, hd) gathered view AFTER update
+    table: jnp.ndarray,  # (b, max_pages) int32
+    length: jnp.ndarray,  # (b,) per-slot position the new entry was written at
+) -> jnp.ndarray:
+    """Write each slot's newly-decoded cache entry back into its page.
+
+    The decode write position is ``min(length, P-1)`` — the same clamp as
+    ``cache_layer_update`` — and always lands in a slot-private page (the
+    partial prompt tail or a decode-grown page; full shared prefix pages
+    are immutable by the pool's sharing discipline), so cross-slot scatter
+    collisions only occur on the garbage page, which nothing reads."""
+    b, phys = dense_layer.shape[:2]
+    page_tokens = pool_layer.shape[1]
+    rows = jnp.arange(b)
+    pos = jnp.minimum(length, phys - 1)
+    page = table[rows, pos // page_tokens]
+    return pool_layer.at[page, pos % page_tokens].set(dense_layer[rows, pos])
+
+
 def cache_layer_update(
     layer_k: jnp.ndarray,  # (b, P, kv, hd) one layer's cache
     layer_v: jnp.ndarray,

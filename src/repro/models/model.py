@@ -26,7 +26,12 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..sharding import shard_act
-from .attention import CacheSpec, init_kv_cache, multi_head_attention
+from .attention import (
+    CacheSpec,
+    init_kv_cache,
+    init_paged_kv_cache,
+    multi_head_attention,
+)
 from .common import ParamDef, init_params, sinusoidal_positions, stack_layer_defs
 from .mlp import gelu_mlp
 from .ssm import (
@@ -132,6 +137,22 @@ class Model:
     def init_cache(self, batch_size: int, max_seq: int):
         return self._impl.init_cache(batch_size, max_seq)
 
+    @property
+    def supports_paged_kv(self) -> bool:
+        return hasattr(self._impl, "init_paged_cache")
+
+    def init_paged_cache(self, batch_size: int, max_seq: int, page_tokens: int, n_pages: int):
+        """Paged twin of ``init_cache`` (decoder families only): per-layer
+        page pools + per-slot page table (see attention.init_paged_kv_cache)."""
+        if not self.supports_paged_kv:
+            raise NotImplementedError(f"paged KV not supported for {self.family}")
+        return self._impl.init_paged_cache(batch_size, max_seq, page_tokens, n_pages)
+
+    def paged_cache_axes(self):
+        if not self.supports_paged_kv:
+            raise NotImplementedError(f"paged KV not supported for {self.family}")
+        return self._impl.paged_cache_axes()
+
     def decode_step(self, params, token, cache, sparse_ctx=None):
         return self._impl.decode_step(params, token, cache, sparse_ctx)
 
@@ -235,6 +256,31 @@ class _DecoderLM:
         kv = ("layer", "batch", "cache_seq", "cache_kv_heads", "head_dim")
         return {"k": kv, "v": kv, "length": ()}
 
+    def init_paged_cache(self, batch_size: int, max_seq: int, page_tokens: int, n_pages: int):
+        cfg = self.cfg
+        if max_seq % page_tokens != 0:
+            raise ValueError(
+                f"max_seq ({max_seq}) must be divisible by page_tokens ({page_tokens})"
+            )
+        if effective_window(cfg, max_seq):
+            raise ValueError("paged KV does not compose with sliding windows")
+        return init_paged_kv_cache(
+            n_pages,
+            page_tokens,
+            batch_size,
+            max_seq // page_tokens,
+            cfg.n_cache_kv_heads,
+            cfg.resolved_head_dim,
+            cfg.n_layers,
+            COMPUTE_DTYPE,
+        )
+
+    def paged_cache_axes(self):
+        # pools shard over their page axis the way dense caches shard over
+        # batch (sharding/serve.py treats kv_page like batch → "data")
+        kv = ("layer", "kv_page", "page_tokens", "cache_kv_heads", "head_dim")
+        return {"k": kv, "v": kv, "page_table": ("batch", None), "length": ("batch",)}
+
     def prefill(self, params, batch, max_seq: int):
         cfg = self.cfg
         x = self._embed_input(params, batch)
@@ -276,9 +322,15 @@ class _DecoderLM:
         io (n_layers,) per-layer estimate vector, plan)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], token, axis=0).astype(COMPUTE_DTYPE)  # (b,1,d)
-        # window semantics are baked into the cache's physical length
-        phys = cache["k"].shape[2]
-        window = cfg.sliding_window if (cfg.sliding_window and phys == cfg.sliding_window) else None
+        if "page_table" in cache:
+            # paged layout: cache["k"].shape[2] is page_tokens, not the
+            # physical length — the shape-based window sniff below would
+            # misfire. Paged KV never composes with sliding windows.
+            window = None
+        else:
+            # window semantics are baked into the cache's physical length
+            phys = cache["k"].shape[2]
+            window = cfg.sliding_window if (cfg.sliding_window and phys == cfg.sliding_window) else None
         x, cache, io, plan = stack_decode(
             params["layers"], x, cache, cfg, window, sparse_ctx,
             plan=plan, refresh=refresh,

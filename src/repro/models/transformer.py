@@ -30,8 +30,10 @@ from .attention import (
     attention_param_defs,
     cache_layer_update,
     decode_attention,
+    gather_paged_kv,
     multi_head_attention,
     project_kv_for_decode,
+    scatter_paged_kv,
 )
 from .common import ParamDef, layer_norm, rms_norm
 from .mlp import (
@@ -458,6 +460,15 @@ def stack_decode(
     for the legacy scalar total."""
     length = cache["length"]
     planned = plan is not None and len(plan) > 0
+    paged = "page_table" in cache
+    if paged:
+        # paged layout: cache k/v are per-layer page POOLS
+        # (L, n_pages, page_tokens, kv, hd) and the table (b, max_pages)
+        # rides the scan carry as a traced int32 leaf. Each layer gathers a
+        # dense view (bit-equal shape to the dense cache), runs the
+        # unchanged block, and scatters the one new entry back to its page.
+        assert window is None, "paged KV does not compose with sliding windows"
+        table = cache["page_table"]
 
     def body(h, layer):
         if planned:
@@ -465,10 +476,17 @@ def stack_decode(
         else:
             layer_params, lk, lv = layer
             layer_plan = None
+        if paged:
+            pool_k, pool_v = lk, lv
+            lk = gather_paged_kv(pool_k, table)
+            lv = gather_paged_kv(pool_v, table)
         h2, lk2, lv2, io2, plan2 = block_decode(
             layer_params, h, lk, lv, length, cfg, window, sparse_ctx,
             plan=layer_plan, refresh=refresh,
         )
+        if paged:
+            lk2 = scatter_paged_kv(pool_k, lk2, table, length)
+            lv2 = scatter_paged_kv(pool_v, lv2, table, length)
         ys = (lk2, lv2, io2, plan2) if planned else (lk2, lv2, io2)
         return h2, ys
 
@@ -483,6 +501,8 @@ def stack_decode(
     else:
         (ks, vs, io), new_plan = ys, plan
     new_cache = {"k": ks, "v": vs, "length": length + 1}
+    if paged:
+        new_cache["page_table"] = table
     return x, new_cache, io, new_plan
 
 

@@ -73,6 +73,7 @@ from ..kernels.backend import validate_backend
 from ..kernels.quantize import quantize_params
 from ..sharding.serve import ServeMesh, validate_serve_mesh
 from .degrade import DegradationController
+from .kv_pool import KVPagePool, prompt_prefix_hashes
 from .sparse_exec import (
     INTEGRITY_COUNTER_KEYS,
     KERNEL_BLOCK_ROWS,
@@ -145,6 +146,10 @@ IO_SUMMARY_KEYS = (
     "corruptions_substituted",
     "corruptions_dropped",
     "integrity_reread_s",
+    "kv_cache_mb",
+    "weight_cache_mb",
+    "kv_pages_in_use",
+    "kv_shared_pages",
 )
 
 
@@ -178,6 +183,8 @@ class ServeEngine:
         corruption_seed: int = 0,
         max_reread: int = 2,
         recover: bool = True,
+        kv_page_tokens: Optional[int] = None,
+        kv_pages: Optional[int] = None,
     ):
         """``backend``: the decode execution backend ("reference" |
         "kernel", see kernels/backend.py). "reference" computes the planned
@@ -248,6 +255,23 @@ class ServeEngine:
         ``io_summary()``. Requires a selecting method, no reorderings and
         the unsharded mesh; None/"none" ⇒ bit-identical to a build
         without the integrity subsystem.
+
+        ``kv_page_tokens`` / ``kv_pages``: paged KV cache (PR 10). None
+        (default) keeps the dense per-slot cache. Set, the KV cache becomes
+        a pool of ``kv_pages`` fixed-size pages of ``kv_page_tokens``
+        tokens each (page 0 reserved as the garbage page), per-slot page
+        tables riding the decode scan carry, and copy-on-write prefix
+        sharing keyed on chained token-prefix hashes (serving/kv_pool.py).
+        ``kv_pages`` defaults to the dense-equivalent capacity
+        (batch·max_pages + the garbage page, rounded up to the data-shard
+        count) so every dense workload still fits. The pool's byte
+        capacity is carved out of the unified ``--cache-mb`` DRAM budget:
+        ``io_summary()`` surfaces the ``kv_cache_mb`` / ``weight_cache_mb``
+        split and the chunk residency cache gets only the weight share.
+        Paged mode is slot-mode only (continuous batching via
+        ``admit_slot`` / ``decode_slots``); greedy tokens are
+        byte-identical to the dense-KV engine at both wbits, on both
+        backends and on any serve mesh.
 
         ``degrade``: enable the adaptive ``DegradationController``
         (serving/degrade.py): at every decode-call boundary the engine
@@ -320,12 +344,51 @@ class ServeEngine:
         self.stall_hidden_s = 0.0
         # profile-default resolution + >= 0 validation live on the profile
         self.cache_mb = self.simulator.profile.cache_capacity_bytes(cache_mb) / MB
+        # paged KV (PR 10): resolve the pool geometry and carve its bytes
+        # out of the unified DRAM budget BEFORE SparseExecution is built —
+        # the chunk residency cache only ever sees the weight share
+        self.kv_page_tokens = kv_page_tokens
+        if kv_page_tokens is not None:
+            if not model.supports_paged_kv:
+                raise ValueError(
+                    f"paged KV is only supported for decoder families "
+                    f"(dense/moe/vlm), not {model.family!r}"
+                )
+            if kv_page_tokens < 1 or max_seq % kv_page_tokens != 0:
+                raise ValueError(
+                    f"kv_page_tokens ({kv_page_tokens}) must be >= 1 and "
+                    f"divide max_seq ({max_seq})"
+                )
+            max_pages = max_seq // kv_page_tokens
+            if kv_pages is None:
+                # dense-equivalent capacity + the reserved garbage page,
+                # rounded up so the pool's page axis shards over 'data'
+                kv_pages = batch_size * max_pages + 1
+                d = self.mesh.data if self.mesh.is_sharded else 1
+                kv_pages += -kv_pages % d
+            if kv_pages < 2:
+                raise ValueError(f"kv_pages must be >= 2, got {kv_pages}")
+            cfg = model.cfg
+            # bf16 K + V entries per page position, summed over layers
+            self.kv_page_bytes = float(
+                2 * 2 * cfg.n_layers * kv_page_tokens
+                * cfg.n_cache_kv_heads * cfg.resolved_head_dim
+            )
+            self.kv_pages = kv_pages
+            self.kv_cache_mb = kv_pages * self.kv_page_bytes / MB
+        else:
+            if kv_pages is not None:
+                raise ValueError("kv_pages requires kv_page_tokens")
+            self.kv_pages = 0
+            self.kv_page_bytes = 0.0
+            self.kv_cache_mb = 0.0
+        self.weight_cache_mb = max(0.0, self.cache_mb - self.kv_cache_mb)
         self.sparse_ctx = (
             None
             if method == "dense_free"
             else SparseExecution(model.cfg, device=device, sparsity=sparsity,
                                  method=method, reorderings=reorderings,
-                                 cache_mb=self.cache_mb, backend=backend,
+                                 cache_mb=self.weight_cache_mb, backend=backend,
                                  kernel_prefetch_depth=prefetch_depth,
                                  wbits=wbits, mesh=self.mesh,
                                  degradable=degrade,
@@ -383,9 +446,16 @@ class ServeEngine:
             model.cfg, sparsity=eff_sparsity, tokens=batch_size,
             layer_scale=compute_layer_scale,
         )
-        self.cache = self.mesh.place_cache(
-            model.init_cache(batch_size, max_seq), self._cache_axes()
-        )
+        if self.kv_page_tokens is not None:
+            # paged engines are slot-mode from birth: pool + page table +
+            # per-slot lengths (prefill/append_frame raise; use admit_slot)
+            self.kv_pool: Optional[KVPagePool] = None
+            self._init_paged_state()
+        else:
+            self.kv_pool = None
+            self.cache = self.mesh.place_cache(
+                model.init_cache(batch_size, max_seq), self._cache_axes()
+            )
         self.stats: List[StepStats] = []
         self._plan = None  # chunk-plan carry, persists across decode calls
         self._select_s_per_refresh: Optional[float] = None  # lazy, wall-timed
@@ -709,6 +779,11 @@ class ServeEngine:
 
     # -- classic single-stream stages ----------------------------------------
     def prefill(self, batch: Dict[str, jnp.ndarray]):
+        if self.kv_pool is not None:
+            raise NotImplementedError(
+                "paged KV is slot-mode only: admit requests with admit_slot "
+                "(single-stream prefill would bypass the page allocator)"
+            )
         t0 = time.perf_counter()
         last, self.cache = self.model.prefill(self.params, batch, self.max_seq)
         wall = time.perf_counter() - t0
@@ -730,6 +805,11 @@ class ServeEngine:
 
     def append_frame(self, frame_embeds: jnp.ndarray):
         """One video frame's patch embeddings → KV cache extension."""
+        if self.kv_pool is not None:
+            raise NotImplementedError(
+                "paged KV is slot-mode only: append_frame extends the "
+                "single-stream linear cache, which paged engines don't keep"
+            )
         t0 = time.perf_counter()
         hidden, self.cache, io = self._append(self.params, frame_embeds, self.cache)
         io = float(io)
@@ -741,29 +821,96 @@ class ServeEngine:
         return hidden
 
     # -- slot mode (continuous batching; used by serving.scheduler) ----------
+    def _init_paged_state(self):
+        """(Re)build the paged-KV pool, page pools and table from scratch."""
+        self.kv_pool = KVPagePool(
+            self.batch_size, self.max_seq, self.kv_page_tokens,
+            self.kv_pages, self.kv_page_bytes,
+            n_data_shards=self.mesh.data if self.mesh.is_sharded else 1,
+        )
+        cache = self.model.init_paged_cache(
+            self.batch_size, self.max_seq, self.kv_page_tokens, self.kv_pages
+        )
+        self.cache = self.mesh.place_cache(cache, self.model.paged_cache_axes())
+
+    def _push_table(self) -> jnp.ndarray:
+        """Commit the pool's host page table to the device/mesh."""
+        return self.mesh.put_batch(jnp.asarray(self.kv_pool.table))
+
     def enable_slots(self):
         """Switch the cache to per-slot lengths: each batch row becomes an
         independent request slot (empty until ``admit_slot``)."""
-        cache = self.model.init_cache(self.batch_size, self.max_seq)
-        cache["length"] = jnp.zeros((self.batch_size,), jnp.int32)
-        self.cache = self.mesh.place_cache(cache, self._cache_axes())
+        if self.kv_pool is not None:
+            self._init_paged_state()
+        else:
+            cache = self.model.init_cache(self.batch_size, self.max_seq)
+            cache["length"] = jnp.zeros((self.batch_size,), jnp.int32)
+            self.cache = self.mesh.place_cache(cache, self._cache_axes())
         self._plan = None
+
+    def kv_can_admit(self, batch: Dict[str, jnp.ndarray]) -> bool:
+        """Admission check against FREE PAGES, not free slots: True when
+        the pool can cover this prompt's unshared pages (always True on
+        the dense path — there a free slot is the only requirement)."""
+        if self.kv_pool is None:
+            return True
+        seq_len, hashes = prompt_prefix_hashes(batch, self.kv_page_tokens)
+        return self.kv_pool.can_admit(seq_len, hashes)
+
+    def release_slot(self, slot: int):
+        """Free a slot's KV storage — the single funnel every scheduler
+        release path (eviction, PR-8 preemption, PR-9 drop rungs) must go
+        through. Paged: drop the slot's page references (shared prefix
+        pages go cold, private pages return to the free list) and push the
+        cleared table row. Dense: zero the slot's length so ``slot_lengths``
+        / byte accounting stop counting the dead occupant's KV."""
+        if not (0 <= slot < self.batch_size):
+            raise ValueError(f"slot {slot} out of range [0, {self.batch_size})")
+        if self.kv_pool is not None and self.kv_pool.release(slot):
+            self.cache["page_table"] = self._push_table()
+        self.cache["length"] = self.cache["length"].at[slot].set(0)
 
     def admit_slot(self, slot: int, batch: Dict[str, jnp.ndarray]):
         """Prefill one request (leading batch dim 1) into ``slot``,
         overwriting whatever a previous occupant left there. Returns the
         request's last-position logits (1, vocab) and the prefill I/O
-        estimate (the request's weights stream in once, contiguously)."""
+        estimate (the request's weights stream in once, contiguously).
+
+        Paged mode: the prompt's full pages are content-addressed — pages
+        already resident (live or cold) are shared by reference and their
+        KV bytes are NOT rewritten; only fresh pages receive the batch-1
+        prefill's cache slices. Raises ``KVPoolExhausted`` when the pool
+        cannot cover the unshared pages (``kv_can_admit`` pre-checks)."""
         if not (0 <= slot < self.batch_size):
             raise ValueError(f"slot {slot} out of range [0, {self.batch_size})")
         last, cache1 = self._prefill_one(self.params, batch)
-        for key in ("k", "v"):
-            self.cache[key] = jax.lax.dynamic_update_slice_in_dim(
-                self.cache[key], cache1[key], slot, axis=1
+        if self.kv_pool is not None:
+            seq_len, hashes = prompt_prefix_hashes(batch, self.kv_page_tokens)
+            entries = self.kv_pool.admit(slot, seq_len, hashes)
+            fresh = [(j, page) for j, (page, is_fresh) in enumerate(entries)
+                     if is_fresh]
+            if fresh:
+                pages = jnp.asarray([page for _, page in fresh])
+                srcs = jnp.asarray([j for j, _ in fresh])
+                pt, mp = self.kv_page_tokens, self.max_seq // self.kv_page_tokens
+                for key in ("k", "v"):
+                    n_layers = cache1[key].shape[0]
+                    view = cache1[key][:, 0].reshape(
+                        n_layers, mp, pt, *cache1[key].shape[3:]
+                    )
+                    self.cache[key] = self.cache[key].at[:, pages].set(
+                        view[:, srcs]
+                    )
+            self.cache["page_table"] = self._push_table()
+            self.cache["length"] = self.cache["length"].at[slot].set(seq_len)
+        else:
+            for key in ("k", "v"):
+                self.cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                    self.cache[key], cache1[key], slot, axis=1
+                )
+            self.cache["length"] = (
+                self.cache["length"].at[slot].set(cache1["length"].astype(jnp.int32))
             )
-        self.cache["length"] = (
-            self.cache["length"].at[slot].set(cache1["length"].astype(jnp.int32))
-        )
         est = self._dense_io() if self.sparse_ctx else 0.0
         nbytes = (
             self.sparse_ctx.sparsifiable_bytes(self.model.cfg.n_layers)
@@ -785,6 +932,18 @@ class ServeEngine:
         Returns (new_tokens (batch, n), per-step charged latency (n,) —
         the overlapped-pipeline critical path by default, the serial
         Σ io + Σ compute charge with ``overlap=False``)."""
+        if self.kv_pool is not None and n_tokens > 0:
+            # grow each occupied slot's page table to cover this round's
+            # write positions [length, length + n_tokens) before the table
+            # rides the scan carry (free slots scatter to the garbage page)
+            lengths = self.slot_lengths()
+            grew = False
+            for slot in range(self.batch_size):
+                if self.kv_pool.slot_pages(slot):
+                    if self.kv_pool.ensure(slot, int(lengths[slot]) + n_tokens - 1):
+                        grew = True
+            if grew:
+                self.cache["page_table"] = self._push_table()
         return self._run_decode_scan(tokens, n_tokens)
 
     def slot_lengths(self) -> np.ndarray:
@@ -864,6 +1023,7 @@ class ServeEngine:
         rows partition across model shards with the weights, so each shard
         provisions 1/n_shards of the residency budget."""
         per_shard = self.simulator.total_bytes_by_shard(self.n_shards)
+        n_data = self.mesh.data
         return {
             "mesh_data": self.mesh.data,
             "mesh_model": self.mesh.model,
@@ -872,6 +1032,16 @@ class ServeEngine:
             "io_bytes_per_shard": [float(b) for b in per_shard],
             "cache_mb_per_shard": self.cache_mb / self.n_shards,
             "slots_per_data_shard": self.batch_size // self.mesh.data,
+            # paged-KV occupancy by data shard (page "home" = the shard of
+            # the slot that first allocated it); sums to kv_pages_in_use —
+            # the same sum-to-global invariant as io_bytes_per_shard
+            "kv_pages_in_use": (
+                self.kv_pool.pages_in_use if self.kv_pool is not None else 0
+            ),
+            "kv_pages_per_shard": (
+                self.kv_pool.pages_per_shard(n_data)
+                if self.kv_pool is not None else [0] * n_data
+            ),
         }
 
     def fault_summary(self) -> Dict[str, Any]:
@@ -963,11 +1133,18 @@ class ServeEngine:
         | ``corruptions_substituted`` | unreadable rows swapped for next-best rows  | PR 9  |
         | ``corruptions_dropped``     | unreadable rows dropped (no substitute)     | PR 9  |
         | ``integrity_reread_s``      | Σ re-read + backoff seconds charged         | PR 9  |
+        | ``kv_cache_mb``        | paged-KV pool share of the unified DRAM budget   | PR 10 |
+        | ``weight_cache_mb``    | chunk-residency share (cache_mb − kv_cache_mb)   | PR 10 |
+        | ``kv_pages_in_use``    | live (referenced) KV pages right now             | PR 10 |
+        | ``kv_shared_pages``    | live pages referenced by more than one slot      | PR 10 |
 
         The fault lanes mirror ``fault_summary()`` (quiescent defaults —
         0 counts, throttle scale 1.0 — with no fault model); the corruption
         lanes total the plan's INTEGRITY_COUNTER_KEYS accumulators over the
-        engine lifetime (all zero with corruption injection off).
+        engine lifetime (all zero with corruption injection off). The
+        paged-KV lanes read the live pool (dense engines report
+        ``kv_cache_mb`` 0, ``weight_cache_mb`` == the full ``cache_mb``,
+        and zero page counts).
         """
         tot_est = sum(s.io_est_s for s in self.stats)
         tot_sim = sum(s.io_sim_s for s in self.stats)
@@ -1023,4 +1200,13 @@ class ServeEngine:
             "corruptions_substituted": float(it[2]),
             "corruptions_dropped": float(it[3]),
             "integrity_reread_s": float(it[5]),
+            # unified-budget split + live paged-KV pool occupancy (PR 10)
+            "kv_cache_mb": self.kv_cache_mb,
+            "weight_cache_mb": self.weight_cache_mb,
+            "kv_pages_in_use": (
+                self.kv_pool.pages_in_use if self.kv_pool is not None else 0
+            ),
+            "kv_shared_pages": (
+                self.kv_pool.shared_pages if self.kv_pool is not None else 0
+            ),
         }

@@ -195,6 +195,19 @@ class Scheduler:
             req = self._pop_next_waiting()
             if req is None:
                 break
+            if not self.engine.kv_can_admit(req.prompt):
+                # paged KV: a free slot is not enough — the pool must cover
+                # the prompt's unshared pages. Requeue and retry once a
+                # running request finishes (releasing its pages); if nothing
+                # is running, nothing will ever free and the prompt can
+                # never fit this pool.
+                self.waiting.appendleft(req)
+                if self.num_running() == 0 and admitted == 0:
+                    raise RuntimeError(
+                        f"request {req.rid} can never be admitted: its "
+                        "prompt needs more KV pages than the pool can free"
+                    )
+                break
             last, prefill_sim = self.engine.admit_slot(slot, req.prompt)
             prefill_sim = float(prefill_sim)
             if self.admit_in_bubbles and self.stall_credit_s > 0.0:
@@ -218,6 +231,16 @@ class Scheduler:
         req.state = RequestState.FINISHED
         if req.finished_s is None:
             req.finished_s = self.now_s
+        # release the slot's KV storage through the engine's single release
+        # funnel (paged: page refs drop; dense: the slot length zeroes) so
+        # freed-byte accounting can't drift from what the pool actually holds
+        self.engine.release_slot(req.slot)
+        # reset the freed slot's decode input: a free slot keeps riding the
+        # fused scan, and its garbage activations feed the BATCHED chunk
+        # selection — leaving the dead occupant's last token here would make
+        # selection (and so every active slot's tokens) depend on KV-layout
+        # garbage that differs between the dense and paged caches
+        self._slot_tokens = self._slot_tokens.at[req.slot].set(0)
         self.running[req.slot] = None
         req.slot = None
         self.finished.append(req)
@@ -242,6 +265,11 @@ class Scheduler:
             if req is None or req.done:
                 continue
             if req.deadline_abs_s < self.now_s and req.preemptions < 1:
+                # evict-and-requeue must free the slot's pages too —
+                # a preempted request re-prefills from scratch on
+                # readmission, so holding its old pages would leak refs
+                self.engine.release_slot(req.slot)
+                self._slot_tokens = self._slot_tokens.at[req.slot].set(0)
                 self.running[req.slot] = None
                 req.slot = None
                 req.state = RequestState.WAITING

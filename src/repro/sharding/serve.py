@@ -198,10 +198,12 @@ class ServeMesh:
 
     def place_cache(self, cache: Any, axes: Any) -> Any:
         """Commit a KV/state cache to the mesh: the 'batch' logical dim
-        shards over ``data`` (slot rows are per-data-shard), everything else
-        replicates. ``axes`` is the model's ``cache_axes()`` pytree (dicts /
-        tuples mirroring the cache structure; leaves are logical-axis
-        tuples)."""
+        shards over ``data`` (slot rows are per-data-shard), as does the
+        paged pools' 'kv_page' dim (pages partition over data shards the
+        same way the slot rows that own them do); everything else
+        replicates. ``axes`` is the model's ``cache_axes()`` /
+        ``paged_cache_axes()`` pytree (dicts / tuples mirroring the cache
+        structure; leaves are logical-axis tuples)."""
         if not self.is_sharded:
             return cache
 
@@ -219,7 +221,7 @@ class ServeMesh:
             names = tuple(a) if isinstance(a, (tuple, list)) else ()
             spec = [None] * c.ndim
             for i, name in enumerate(names[: c.ndim]):
-                if name == "batch" and c.shape[i] % self.data == 0:
+                if name in ("batch", "kv_page") and c.shape[i] % self.data == 0:
                     spec[i] = "data"
             return jax.device_put(c, self._sharding(P(*spec)))
 

@@ -172,6 +172,15 @@ class PagedKVAllocator:
         self.shared_hits += 1
         return page
 
+    def forget_prefix(self, page: int) -> None:
+        """Drop a live page's content-addressing before its bytes were ever
+        written (e.g. rolling back a failed admission): on release it then
+        returns to the free list instead of cold-retiring, so it can never
+        be revived as prefix content it does not actually hold."""
+        if self.ref[page] <= 0:
+            raise ValueError(f"forget_prefix on non-live page {page}")
+        self._forget_hash(page)
+
     def _forget_hash(self, page: int) -> None:
         key = self._hash_of.pop(page, None)
         if key is not None and self._by_hash.get(key) == page:

@@ -336,8 +336,11 @@ def scatter_paged_kv(
     The decode write position is ``min(length, P-1)`` — the same clamp as
     ``cache_layer_update`` — and always lands in a slot-private page (the
     partial prompt tail or a decode-grown page; full shared prefix pages
-    are immutable by the pool's sharing discipline), so cross-slot scatter
-    collisions only occur on the garbage page, which nothing reads."""
+    are immutable by the pool's sharing discipline, which for exactly this
+    reason keeps the final page of a ``max_seq``-length prompt private and
+    unregistered: the clamp targets position ``max_seq - 1`` inside it),
+    so cross-slot scatter collisions only occur on the garbage page, which
+    nothing reads."""
     b, phys = dense_layer.shape[:2]
     page_tokens = pool_layer.shape[1]
     rows = jnp.arange(b)

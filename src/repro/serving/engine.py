@@ -73,7 +73,7 @@ from ..kernels.backend import validate_backend
 from ..kernels.quantize import quantize_params
 from ..sharding.serve import ServeMesh, validate_serve_mesh
 from .degrade import DegradationController
-from .kv_pool import KVPagePool, prompt_prefix_hashes
+from .kv_pool import KVPagePool, KVPoolExhausted, prompt_prefix_hashes
 from .sparse_exec import (
     INTEGRITY_COUNTER_KEYS,
     KERNEL_BLOCK_ROWS,
@@ -935,13 +935,31 @@ class ServeEngine:
         if self.kv_pool is not None and n_tokens > 0:
             # grow each occupied slot's page table to cover this round's
             # write positions [length, length + n_tokens) before the table
-            # rides the scan carry (free slots scatter to the garbage page)
+            # rides the scan carry (free slots scatter to the garbage page).
+            # The whole round's growth is checked up front so exhaustion
+            # raises BEFORE any host table mutates or page allocates —
+            # recoverable: the scheduler preempts a slot and retries.
             lengths = self.slot_lengths()
+            occupied = [s for s in range(self.batch_size)
+                        if self.kv_pool.slot_pages(s)]
+            need = {
+                s: self.kv_pool.pages_needed(s, int(lengths[s]) + n_tokens - 1)
+                for s in occupied
+            }
+            total = sum(need.values())
+            if total > self.kv_pool.reclaimable_pages:
+                raise KVPoolExhausted(
+                    f"decode round needs {total} new KV pages but only "
+                    f"{self.kv_pool.reclaimable_pages} are free or "
+                    "cold-evictable — release or preempt a slot first "
+                    "(no page was allocated; engine state is unchanged)"
+                )
             grew = False
-            for slot in range(self.batch_size):
-                if self.kv_pool.slot_pages(slot):
-                    if self.kv_pool.ensure(slot, int(lengths[slot]) + n_tokens - 1):
-                        grew = True
+            for slot in occupied:
+                if need[slot] and self.kv_pool.ensure(
+                    slot, int(lengths[slot]) + n_tokens - 1
+                ):
+                    grew = True
             if grew:
                 self.cache["page_table"] = self._push_table()
         return self._run_decode_scan(tokens, n_tokens)

@@ -14,7 +14,12 @@ and every decode-grown page are private to their slot. Decode writes land
 at position ``length`` — always past the full prompt pages — so a shared
 page is never written after registration and no device-side COW copy ever
 runs on the hot path. (General COW forks live in the allocator and are
-property-tested there; the serving path simply never needs one.)
+property-tested there; the serving path simply never needs one.) One
+carve-out keeps that true at the sequence boundary: a prompt of exactly
+``max_seq`` tokens has a FULL final page, but decode clamps its write
+position to ``max_seq - 1`` — inside that page — so the final page of a
+full-length prompt stays private and unregistered (``_shareable``), never
+shared and never revivable as prefix content.
 
 Per-data-shard accounting: each page gets a "home" shard — the data shard
 of the slot that first allocated it (slot → shard is the engine's
@@ -124,11 +129,23 @@ class KVPagePool:
         return list(self._slot_pages[slot])
 
     # -- admission -----------------------------------------------------------
+    def _shareable(self, seq_len: int, hashes: List[str]) -> List[str]:
+        """Hashes of the pages this prompt may share. A prompt of exactly
+        ``max_seq`` tokens fills its final page, but decode clamps the
+        write position to ``max_seq - 1`` — inside that page — so sharing
+        or content-registering it would let the clamped decode write
+        mutate shared bytes and poison the prefix registry. The final page
+        of a full-length prompt is therefore always private/anonymous."""
+        if seq_len >= self.max_seq and len(hashes) * self.page_tokens >= seq_len:
+            return hashes[:-1]
+        return hashes
+
     def fresh_pages_needed(self, seq_len: int, hashes: List[str]) -> int:
         """How many pages an admission must newly allocate: prompt pages
-        not already resident (live or cold) plus the partial tail page."""
+        not already resident (live or cold) plus the private tail page."""
+        hashes = self._shareable(seq_len, hashes)
         n_prompt_pages = -(-seq_len // self.page_tokens)
-        fresh = n_prompt_pages - len(hashes)  # partial tail page, if any
+        fresh = n_prompt_pages - len(hashes)  # private tail/clamp pages
         for key in hashes:
             page = self.alloc._by_hash.get(key)
             if page is None:
@@ -142,6 +159,7 @@ class KVPagePool:
         one), and a cold-prefix REVIVAL consumes its own cold entry — so
         revivable pages cannot double as supply for the fresh allocations
         (the bug the randomized pool property test pinned down)."""
+        hashes = self._shareable(seq_len, hashes)
         fresh = 0
         cold_hits = 0
         for key in hashes:
@@ -151,7 +169,7 @@ class KVPagePool:
             elif self.alloc.ref[page] == 0:
                 cold_hits += 1
         n_prompt_pages = -(-seq_len // self.page_tokens)
-        fresh += n_prompt_pages - len(hashes)  # partial tail page, if any
+        fresh += n_prompt_pages - len(hashes)  # private tail/clamp pages
         return fresh + cold_hits <= self.alloc.n_reclaimable
 
     def admit(self, slot: int, seq_len: int, hashes: List[str]) -> List[Tuple[int, bool]]:
@@ -164,6 +182,7 @@ class KVPagePool:
             self.release(slot)
         if seq_len > self.max_seq:
             raise ValueError(f"prompt of {seq_len} tokens exceeds max_seq {self.max_seq}")
+        hashes = self._shareable(seq_len, hashes)
         n_prompt_pages = -(-seq_len // self.page_tokens)
         shard = self._shard_of(slot)
         entries: List[Tuple[int, bool]] = []
@@ -177,13 +196,24 @@ class KVPagePool:
                         continue
                     page = self.alloc.alloc()
                     self.alloc.register_prefix(page, hashes[j])
-                else:  # partial tail page: always private, never shared
+                else:  # tail page (partial, or clamp target): private
                     page = self.alloc.alloc()
-                self._page_home.setdefault(page, shard)
+                # unconditional: a page fresh off alloc() may be a recycled
+                # cold eviction whose stale home would misattribute shards
+                self._page_home[page] = shard
                 self.fresh_pages += 1
                 entries.append((page, True))
         except KVPoolExhausted:
-            for page, _ in entries:  # roll back the partial admission
+            for page, is_fresh in entries:  # roll back the partial admission
+                if is_fresh:
+                    # a fresh page registered this admission holds no KV
+                    # bytes yet (the engine writes prefill bytes only after
+                    # admit returns) — forget its hash so release frees it
+                    # instead of cold-retiring it, where a later same-prefix
+                    # admission would revive unwritten content as real KV
+                    self.alloc.forget_prefix(page)
+                    self._page_home.pop(page, None)
+                    self.fresh_pages -= 1
                 self.alloc.release(page)
             raise
         self._slot_pages[slot] = [p for p, _ in entries]
@@ -194,10 +224,27 @@ class KVPagePool:
         return entries
 
     # -- decode growth -------------------------------------------------------
+    def pages_needed(self, slot: int, last_pos: int) -> int:
+        """How many pages ``ensure(slot, last_pos)`` would allocate — a
+        pure count, nothing is allocated. ``ensure`` never registers
+        prefixes, so a batch of ensures is guaranteed to succeed iff the
+        summed needs fit ``reclaimable_pages`` (the engine pre-checks a
+        whole decode round this way and raises BEFORE mutating any table,
+        so exhaustion is recoverable by preempting a slot)."""
+        last_pos = min(last_pos, self.max_seq - 1)
+        need = last_pos // self.page_tokens + 1
+        return max(0, need - len(self._slot_pages[slot]))
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Pages an allocation burst could obtain: free now + evictable cold."""
+        return self.alloc.n_reclaimable
+
     def ensure(self, slot: int, last_pos: int) -> List[int]:
         """Grow ``slot``'s table to cover write positions up to
         ``last_pos`` (clamped to the sequence end — decode past max_seq
-        overwrites the final position, matching the dense cache's clamp).
+        overwrites the final position, matching the dense cache's clamp;
+        the clamp target page is private by the sharing discipline).
         New pages are private and anonymous. Returns the pages added."""
         last_pos = min(last_pos, self.max_seq - 1)
         need = last_pos // self.page_tokens + 1
@@ -206,7 +253,8 @@ class KVPagePool:
         shard = self._shard_of(slot)
         for j in range(have, need):
             page = self.alloc.alloc()
-            self._page_home.setdefault(page, shard)
+            # unconditional (not setdefault): see admit
+            self._page_home[page] = shard
             self._slot_pages[slot].append(page)
             self.table[slot, j] = page
             added.append(page)

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import ServeEngine
+from .kv_pool import KVPoolExhausted
 from .request import Request, RequestState
 
 
@@ -119,6 +120,15 @@ class Scheduler:
     and is capped at once per request, so every request still drains. A
     preempted-and-requeued request keeps its original ``arrival_s`` (its
     latency accounts the full story) and counts in ``stats().preempted``.
+
+    **KV-page-pressure preemption.** With paged KV, decode-time page
+    growth can outrun the pool even though admission fit (admission only
+    reserves the prompt's pages). ``decode_slots`` pre-checks the whole
+    round's growth and raises ``KVPoolExhausted`` *before* allocating
+    anything; the scheduler then preempts the least-urgent co-runner
+    (latest deadline, then latest arrival — the EDF mirror) via the same
+    evict-and-requeue path and retries the round. ``stats().preempted``
+    counts both deadline and page-pressure preemptions.
     """
 
     def __init__(
@@ -245,6 +255,26 @@ class Scheduler:
         req.slot = None
         self.finished.append(req)
 
+    def _requeue(self, req: Request) -> None:
+        """Evict-and-requeue one RUNNING request (shared by deadline and
+        KV-page-pressure preemption). Frees the slot's pages through the
+        engine's single release funnel — a preempted request re-prefills
+        from scratch on readmission, so holding its old pages would leak
+        refs — and restarts generation: greedy decode is deterministic, so
+        the regenerated tokens are identical. ``first_token_s`` keeps the
+        original first-token mark (the stream already started once);
+        latency runs to the final finish, accounting the preemption's full
+        cost."""
+        self.engine.release_slot(req.slot)
+        self._slot_tokens = self._slot_tokens.at[req.slot].set(0)
+        self.running[req.slot] = None
+        req.slot = None
+        req.state = RequestState.WAITING
+        req.preemptions += 1
+        req.tokens_out = []
+        self.waiting.append(req)
+        self.preempted += 1
+
     def _preempt_blown(self) -> int:
         """Preempt deadline-blown RUNNING requests: evict from the slot and
         requeue WAITING (the slot-local decode carry makes this a pure slot
@@ -265,25 +295,28 @@ class Scheduler:
             if req is None or req.done:
                 continue
             if req.deadline_abs_s < self.now_s and req.preemptions < 1:
-                # evict-and-requeue must free the slot's pages too —
-                # a preempted request re-prefills from scratch on
-                # readmission, so holding its old pages would leak refs
-                self.engine.release_slot(req.slot)
-                self._slot_tokens = self._slot_tokens.at[req.slot].set(0)
-                self.running[req.slot] = None
-                req.slot = None
-                req.state = RequestState.WAITING
-                req.preemptions += 1
-                # restart generation on readmission — greedy decode is
-                # deterministic, so the regenerated tokens are identical.
-                # first_token_s keeps the original first-token mark (the
-                # stream already started once); latency runs to the final
-                # finish, accounting the preemption's full cost.
-                req.tokens_out = []
-                self.waiting.append(req)
-                self.preempted += 1
+                self._requeue(req)
                 n += 1
         return n
+
+    def _preempt_for_pages(self) -> bool:
+        """Preempt ONE running request to free KV pages for a decode round
+        that cannot grow (paged KV: ``decode_slots`` pre-checks the whole
+        round's page growth and raises ``KVPoolExhausted`` before touching
+        any state). Victim is the least-urgent runner — latest absolute
+        deadline, ties broken by latest arrival then rid (the mirror of
+        the EDF admission order) — and requeues through ``_requeue`` like
+        a deadline preemption. Returns False when there is no co-runner to
+        preempt (preempting the lone runner frees nothing it does not
+        itself need): the pool genuinely cannot serve this decode."""
+        runners = [r for r in self.running if r is not None and not r.done]
+        if len(runners) < 2:
+            return False
+        victim = max(
+            runners, key=lambda r: (r.deadline_abs_s, r.arrival_s, r.rid)
+        )
+        self._requeue(victim)
+        return True
 
     # -- decode rounds -------------------------------------------------------
     def step(self) -> bool:
@@ -302,7 +335,23 @@ class Scheduler:
             return bool(self.waiting)
 
         n_stats0 = len(self.engine.stats)
-        toks, step_lat = self.engine.decode_slots(self._slot_tokens, self.round_tokens)
+        while True:
+            try:
+                toks, step_lat = self.engine.decode_slots(
+                    self._slot_tokens, self.round_tokens
+                )
+                break
+            except KVPoolExhausted:
+                # decode-time page growth cannot fit the pool: free pages by
+                # preempting the least-urgent co-runner and retry the round
+                # (the engine raised before allocating, so retry is safe)
+                if not self._preempt_for_pages():
+                    raise RuntimeError(
+                        "KV page pool exhausted mid-decode with no "
+                        "co-runner to preempt: the lone running request's "
+                        "decode growth exceeds the pool — raise kv_pages "
+                        "or lower max_new_tokens"
+                    )
         if self.admit_in_bubbles:
             # bank this round's measured idle windows (compute stalls +
             # fetch-engine bubbles) as admission credit

@@ -330,9 +330,76 @@ def test_pool_exhaustion_rolls_back_partial_admission():
     pool.check()
 
 
+def test_pool_max_seq_prompt_keeps_final_page_private():
+    """Review regression: a prompt of exactly max_seq tokens fills its
+    final page, but decode clamps writes to max_seq-1 — inside it. The
+    final page must stay private and unregistered or the clamped decode
+    write would mutate shared bytes and poison the prefix registry."""
+    pool = KVPagePool(2, max_seq=32, page_tokens=8, n_pages=16, page_bytes=1.0)
+    hashes = ["a", "b", "c", "d"]  # 4 full pages: seq_len == max_seq
+    e0 = pool.admit(0, 32, hashes)
+    assert [f for _, f in e0] == [True] * 4
+    last0 = e0[-1][0]
+    assert last0 not in pool.alloc._hash_of  # clamp target: unregistered
+    assert pool.can_admit(32, hashes)
+    e1 = pool.admit(1, 32, hashes)
+    # first three pages share; each slot gets its own private final page
+    assert [f for _, f in e1] == [False, False, False, True]
+    assert e1[-1][0] != last0
+    assert pool.shared_pages == 3
+    pool.check()
+    pool.release(0)
+    pool.release(1)
+    # only the shareable pages cold-retire; the private finals went free
+    assert pool.alloc.n_cold == 3 and pool.steady_state()
+    pool.check()
+
+
+def test_pool_exhaustion_rollback_never_cold_retires_unwritten_pages():
+    """Review regression: a mid-admit rollback must forget the hashes of
+    fresh pages registered during the failed admission — their KV bytes
+    were never written (the engine writes prefill bytes only after admit
+    returns), so letting them cold-retire would let a later same-prefix
+    admission revive zero-filled KV as real prompt content."""
+    pool = KVPagePool(1, max_seq=32, page_tokens=8, n_pages=3, page_bytes=1.0)
+    with pytest.raises(KVPoolExhausted):
+        pool.admit(0, 24, ["a", "b", "c"])  # registers "a","b", then fails
+    assert pool.alloc.n_cold == 0  # nothing revivable survived the rollback
+    assert pool.alloc._by_hash == {} and pool.alloc._hash_of == {}
+    assert pool.fresh_pages == 0  # counter rolled back with the pages
+    pool.check()
+    # a retry of the same prefix must allocate FRESH pages, never "share"
+    entries = pool.admit(0, 16, ["a", "b"])
+    assert [f for _, f in entries] == [True, True]
+    assert pool.shared_pages_hit == 0
+    pool.check()
+
+
+def test_pool_page_home_follows_recycled_cold_eviction():
+    """Review regression: a page recycled after cold eviction must take
+    its NEW owner's data shard as home — setdefault kept the stale one,
+    drifting the per-shard split pages_per_shard reports."""
+    pool = KVPagePool(4, max_seq=32, page_tokens=8, n_pages=4, page_bytes=1.0,
+                      n_data_shards=2)  # slots 0-1 -> shard 0, 2-3 -> shard 1
+    pool.admit(0, 8, ["a"])
+    assert pool.pages_per_shard() == [1, 0]
+    pool.release(0)  # registered page goes cold, home retained
+    # a shard-1 admission needs all 3 pages: the cold page is evicted and
+    # recycled, and its home must follow the new owner
+    pool.admit(2, 24, [])
+    assert pool.pages_per_shard() == [0, 3]
+    assert sum(pool.pages_per_shard()) == pool.pages_in_use
+    pool.check()
+
+
 def test_pool_ensure_grows_private_pages_and_clamps():
     pool = KVPagePool(1, max_seq=32, page_tokens=8, n_pages=8, page_bytes=1.0)
     pool.admit(0, 12, ["a"])  # 2 pages
+    # pages_needed is the pure twin of ensure: counts, allocates nothing
+    assert pool.pages_needed(0, 15) == 0
+    assert pool.pages_needed(0, 17) == 1
+    assert pool.pages_needed(0, 100) == 2    # clamped to max_seq-1
+    assert len(pool.slot_pages(0)) == 2      # nothing allocated by counting
     assert pool.ensure(0, 15) == []          # still inside page 1
     assert len(pool.ensure(0, 17)) == 1      # page 2
     assert len(pool.ensure(0, 100)) == 1     # clamped to max_seq-1 -> page 3
@@ -524,6 +591,35 @@ def test_paged_vs_dense_identity_2x2_mesh(lm):
     paged.kv_pool.check()
 
 
+def test_paged_vs_dense_identity_max_seq_prompts(lm):
+    """Review regression (engine level): two slots admitted with the SAME
+    max_seq-length prompt share every shareable page; decode's clamped
+    write at max_seq-1 must land in each slot's private final page. The
+    streams are forced to diverge (different first decode inputs), so a
+    shared final page would cross-contaminate the slots and break dense
+    identity."""
+    cfg, model, params = lm
+    dense = _dense_engine(model, params)
+    paged = _paged_engine(model, params)
+    p = _prompt(cfg, 7, n=32)  # exactly max_seq
+    outs = []
+    for eng in (dense, paged):
+        eng.enable_slots()
+        last0, _ = eng.admit_slot(0, p)
+        eng.admit_slot(1, p)
+        t0 = int(np.asarray(jnp.argmax(last0, -1))[0])
+        toks = jnp.asarray([[t0], [(t0 + 1) % cfg.vocab_size]], jnp.int32)
+        out, _ = eng.decode_slots(toks, 4)
+        outs.append(np.asarray(out))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    pool = paged.kv_pool
+    finals = [pool.slot_pages(s)[-1] for s in range(2)]
+    assert finals[0] != finals[1]  # private clamp targets, one per slot
+    assert all(f not in pool.alloc._hash_of for f in finals)
+    assert pool.shared_pages == 3  # the first three pages still share
+    pool.check()
+
+
 # -- engine integration: release and growth -----------------------------------
 
 
@@ -544,6 +640,36 @@ def test_engine_release_slot_returns_pages(lm):
     eng.kv_pool.check()
     with pytest.raises(ValueError):
         eng.release_slot(9)
+
+
+def test_engine_decode_growth_exhaustion_is_atomic(lm):
+    """Review regression: when a decode round's page growth cannot fit
+    the pool, decode_slots must raise BEFORE allocating anything or
+    mutating any page table — so the caller can preempt a slot and retry
+    instead of the engine dying with half-grown state."""
+    cfg, model, params = lm
+    eng = _paged_engine(model, params, pages=5)  # capacity 4
+    eng.enable_slots()
+    lasts = []
+    for slot in range(2):  # 2 pages each (full + tail): pool is now full
+        last, _ = eng.admit_slot(slot, _prompt(cfg, 100 + slot, n=12))
+        lasts.append(jnp.argmax(last, -1)[:, None])
+    pool = eng.kv_pool
+    assert pool.pages_in_use == 4 and pool.reclaimable_pages == 0
+    pages_before = [pool.slot_pages(s) for s in range(2)]
+    table_before = pool.table.copy()
+    toks = jnp.concatenate(lasts).astype(jnp.int32)
+    with pytest.raises(KVPoolExhausted):
+        eng.decode_slots(toks, 8)  # both slots need a third page
+    # nothing was allocated, no table mutated: the failure is recoverable
+    assert [pool.slot_pages(s) for s in range(2)] == pages_before
+    np.testing.assert_array_equal(pool.table, table_before)
+    assert pool.pages_in_use == 4
+    pool.check()
+    eng.release_slot(1)  # mimic a preemption freeing pages…
+    out, _ = eng.decode_slots(toks, 8)  # …and the retry succeeds
+    assert np.asarray(out).shape == (2, 8)
+    pool.check()
 
 
 # -- cross-feature regressions: scheduler, faults, preemption -----------------
@@ -613,3 +739,39 @@ def test_scheduler_release_accounting_through_pool(lm):
     assert eng.kv_pool.steady_state()
     assert eng.kv_pool.released == eng.kv_pool.admitted
     eng.kv_pool.check()
+
+
+def test_scheduler_preempts_on_kv_page_pressure(lm):
+    """Review regression: decode-time page growth outrunning a small pool
+    must not kill the run — the scheduler preempts the least-urgent
+    co-runner (EDF mirror), retries the round, and the preemptee drains
+    after readmission."""
+    cfg, model, params = lm
+    eng = _paged_engine(model, params, pages=5)  # capacity 4
+    eng.simulator.noise = 0.0
+    sched = Scheduler(eng, round_tokens=8)
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 100 + i, n=12),
+                    max_new_tokens=8, arrival_s=0.0) for i in range(2)]
+    sched.submit(reqs)
+    stats = sched.run()
+    assert stats.finished == 2
+    assert stats.preempted >= 1  # page pressure, not deadlines, forced it
+    assert all(len(r.tokens_out) == 8 for r in reqs)
+    assert reqs[1].preemptions >= 1  # rid 1: latest (arrival, rid) victim
+    assert eng.kv_pool.steady_state()
+    eng.kv_pool.check()
+
+
+def test_scheduler_lone_runner_page_exhaustion_fails_fast(lm):
+    """With no co-runner to preempt, decode growth past the pool must
+    surface as a clear sizing error, not an engine-killing traceback from
+    half-grown state."""
+    cfg, model, params = lm
+    eng = _paged_engine(model, params, pages=3)  # capacity 2: prompt only
+    eng.simulator.noise = 0.0
+    sched = Scheduler(eng, round_tokens=8)
+    sched.submit(Request(rid=0, prompt=_prompt(cfg, 0, n=12),
+                         max_new_tokens=8, arrival_s=0.0))
+    with pytest.raises(RuntimeError, match="no\\s+co-runner"):
+        sched.run()
+    eng.kv_pool.check()  # pool state stayed consistent through the failure
